@@ -1,0 +1,54 @@
+"""Fig 9: read latency while appending — S joins with an append every 5.
+
+Models the paper's "users query data sources that get written into
+regularly": reads slow down as segments accumulate (probe fan-out), the
+knob being append size.  Compaction resets the fan-out (the paper's cTrie
+amortizes the same way)."""
+
+import jax
+import numpy as np
+
+from repro.core import Schema, append, compact, create_index, joins
+from benchmarks.common import Report, powerlaw_keys, timeit
+
+SCH = Schema.of("k", k="int64", v="float32")
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(2)
+    n = 30_000 if quick else 300_000
+    n_joins = 20 if quick else 200
+    rep = Report("append_read_latency")
+    jfn = jax.jit(lambda t, p: joins.indexed_join(t, p, "pk",
+                                                  max_matches=16))
+
+    for rows_per_write in (100, 1_000, 10_000):
+        cols = {"k": powerlaw_keys(rng, n, n // 8),
+                "v": rng.random(n).astype(np.float32)}
+        t = create_index(cols, SCH, rows_per_batch=4096)
+        probe = {"pk": rng.choice(cols["k"], 256).astype(np.int64)}
+        base = timeit(jfn, t, probe, reps=3)["median_s"]
+        lat = []
+        for i in range(n_joins):
+            if i and i % 5 == 0:
+                delta = {"k": rng.choice(cols["k"], rows_per_write)
+                         .astype(np.int64),
+                         "v": rng.random(rows_per_write)
+                         .astype(np.float32)}
+                t = append(t, delta)
+            lat.append(timeit(jfn, t, probe, reps=1,
+                              warmup=1)["median_s"])
+        slowdown = float(np.median(lat[-5:]) / base)
+        t = compact(t)
+        after = timeit(jfn, t, probe, reps=3)["median_s"]
+        rep.add(f"write={rows_per_write}",
+                base_ms=base * 1e3,
+                end_ms=float(np.median(lat[-5:])) * 1e3,
+                read_slowdown=slowdown,
+                segments_before_compact=len(lat) // 5 + 1,
+                after_compact_ms=after * 1e3)
+    return rep.to_dict()
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,40 @@
+"""Fig 5: row-batch size sweep — reads (joins) and writes (appends),
+normalized to the smallest batch.  The paper finds a 4 MB sweet spot;
+our batch knob is rows_per_batch (rows x row_bytes = batch bytes)."""
+
+import jax
+import numpy as np
+
+from repro.core import Schema, append, create_index, joins
+from benchmarks.common import Report, powerlaw_keys, timeit
+
+SCH = Schema.of("k", k="int64", v="float32")   # 12 B rows
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(6)
+    n = 40_000 if quick else 400_000
+    rep = Report("batch_size_sweep")
+    cols = {"k": powerlaw_keys(rng, n, n // 8),
+            "v": rng.random(n).astype(np.float32)}
+    probe = {"pk": rng.choice(cols["k"], 256).astype(np.int64)}
+    delta = {"k": rng.choice(cols["k"], 1000).astype(np.int64),
+             "v": rng.random(1000).astype(np.float32)}
+    jfn = jax.jit(lambda t, p: joins.indexed_join(t, p, "pk",
+                                                  max_matches=16))
+
+    base_read = base_write = None
+    for rpb in (256, 1024, 4096, 16384):
+        t = create_index(cols, SCH, rows_per_batch=rpb)
+        tr = timeit(jfn, t, probe, reps=3)["median_s"]
+        tw = timeit(lambda: append(t, delta), reps=3)["median_s"]
+        base_read = base_read or tr
+        base_write = base_write or tw
+        rep.add(f"rows_per_batch={rpb} (~{rpb * 12 // 1024}KB)",
+                read_ms=tr * 1e3, write_ms=tw * 1e3,
+                read_norm=tr / base_read, write_norm=tw / base_write)
+    return rep.to_dict()
+
+
+if __name__ == "__main__":
+    run(quick=True)

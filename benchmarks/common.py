@@ -1,0 +1,92 @@
+"""Shared benchmark machinery: timing, synthetic datasets, reporting.
+
+CPU-container caveat (DESIGN.md §8): wall-clock numbers here are CPU-XLA
+measurements used for *relative* claims — indexed vs non-indexed, exactly
+the comparison the paper makes.  TPU-roofline claims live in the dry-run
+records (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def block(x):
+    jax.tree.map(lambda a: a.block_until_ready()
+                 if hasattr(a, "block_until_ready") else a, x)
+    return x
+
+
+def timeit(fn, *args, reps: int = 5, warmup: int = 1, **kw):
+    """Median/mean/std seconds over reps (after warmup compiles)."""
+    for _ in range(warmup):
+        block(fn(*args, **kw))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        block(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    ts = np.asarray(ts)
+    return {"median_s": float(np.median(ts)), "mean_s": float(ts.mean()),
+            "std_s": float(ts.std()), "reps": reps}
+
+
+# --- synthetic datasets -------------------------------------------------------
+
+def powerlaw_keys(rng, n: int, n_unique: int, alpha: float = 1.3):
+    """SNB-like power-law key distribution (social-graph degree skew)."""
+    ranks = np.arange(1, n_unique + 1, dtype=np.float64)
+    p = ranks ** -alpha
+    p /= p.sum()
+    return rng.choice(n_unique, size=n, p=p).astype(np.int64)
+
+
+def edge_table(rng, n_edges: int, n_vertices: int):
+    """SNB edge table analog: (src, dst, weight)."""
+    return {"src": powerlaw_keys(rng, n_edges, n_vertices),
+            "dst": rng.integers(0, n_vertices, n_edges).astype(np.int64),
+            "weight": rng.random(n_edges).astype(np.float32)}
+
+
+def star_schema(rng, n_fact: int, n_dim: int):
+    """TPC-DS analog: store_sales (fact) + date_dim."""
+    fact = {"ss_sold_date_sk": rng.integers(0, n_dim, n_fact)
+            .astype(np.int64),
+            "ss_net_paid": rng.random(n_fact).astype(np.float32),
+            "ss_quantity": rng.integers(1, 100, n_fact).astype(np.int32)}
+    dim = {"d_date_sk": np.arange(n_dim, dtype=np.int64),
+           "d_year": (2000 + np.arange(n_dim) // 365).astype(np.int32)}
+    return fact, dim
+
+
+def flights_table(rng, n: int, n_planes: int = 400):
+    """US-Flights analog: tailNum is a string key (pre-hashed at ingest,
+    DESIGN.md §9), flightNum an int key."""
+    from repro.core.hashing import hash_string_host
+    tails = np.asarray([hash_string_host(f"N{i:05d}")
+                        for i in range(n_planes)], np.int64)
+    return {"tailnum_h": tails[rng.integers(0, n_planes, n)],
+            "flightnum": rng.integers(0, 8000, n).astype(np.int64),
+            "delay": rng.standard_normal(n).astype(np.float32),
+            "distance": rng.integers(50, 5000, n).astype(np.int32)}, tails
+
+
+# --- reporting ---------------------------------------------------------------
+
+class Report:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows = []
+
+    def add(self, label: str, **fields):
+        self.rows.append({"label": label, **fields})
+        flat = "  ".join(f"{k}={v:.4g}" if isinstance(v, float)
+                         else f"{k}={v}" for k, v in fields.items())
+        print(f"  [{self.name}] {label}: {flat}", flush=True)
+
+    def to_dict(self):
+        return {"benchmark": self.name, "rows": self.rows}

@@ -1,0 +1,57 @@
+"""Fig 12: executor failure during a query sequence.
+
+Kill one shard mid-run; the failed query pays the rebuild (re-shuffle +
+re-index + append replay), subsequent queries return to steady state."""
+
+import time
+
+import numpy as np
+
+from repro.core import Schema
+from repro.dist import (append_distributed, create_distributed,
+                        indexed_join_bcast, runtime)
+from benchmarks.common import Report, block, powerlaw_keys
+
+SCH = Schema.of("k", k="int64", v="float32")
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(5)
+    n = 20_000 if quick else 200_000
+    n_queries = 30 if quick else 200
+    kill_at = 10
+    rep = Report("fault_tolerance")
+
+    cols = {"k": powerlaw_keys(rng, n, n // 8),
+            "v": rng.random(n).astype(np.float32)}
+    dt = create_distributed(cols, SCH, 4, rows_per_batch=2048)
+    lin = runtime.Lineage(SCH, cols, rows_per_batch=2048)
+    delta = {"k": rng.choice(cols["k"], 100).astype(np.int64),
+             "v": rng.random(100).astype(np.float32)}
+    dt = append_distributed(dt, delta)
+    lin.record_append(delta)
+
+    probe = rng.choice(cols["k"], 128).astype(np.int64)
+    import jax
+    jfn = jax.jit(lambda d, p: indexed_join_bcast(d, {"pk": p}, "pk", 16))
+    block(jfn(dt, probe))                          # compile outside loop
+    lat = []
+    for i in range(n_queries):
+        t0 = time.perf_counter()
+        if i == kill_at:
+            dt = runtime.fail_shard(dt, 2)        # executor dies
+            dt = runtime.rebuild_shard(dt, 2, lin)  # lineage recovery
+        block(jfn(dt, probe))
+        lat.append(time.perf_counter() - t0)
+
+    steady = float(np.median(lat[1:kill_at]))
+    rep.add("steady_state", ms=steady * 1e3)
+    rep.add("failure_query", ms=lat[kill_at] * 1e3,
+            spike_x=lat[kill_at] / steady)
+    rep.add("post_recovery", ms=float(np.median(lat[kill_at + 1:])) * 1e3,
+            recovered=float(np.median(lat[kill_at + 1:])) < 2 * steady)
+    return rep.to_dict()
+
+
+if __name__ == "__main__":
+    run(quick=True)

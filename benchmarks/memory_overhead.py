@@ -1,0 +1,46 @@
+"""Fig 11: index memory overhead per partition.
+
+The paper reports <2% cTrie overhead on the 30 GB SNB edge table (wide
+rows).  Overhead is a function of row width — we sweep it and report the
+per-partition ratio for the SNB-like width alongside narrower rows."""
+
+import numpy as np
+
+from repro.core import Schema
+from repro.dist import create_distributed
+from benchmarks.common import Report, powerlaw_keys
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(4)
+    n = 40_000 if quick else 400_000
+    shards = 8
+    rep = Report("memory_overhead")
+
+    for width_cols, label in ((2, "narrow(16B)"), (14, "snb-like(64B)"),
+                              (62, "wide(256B)"),
+                              (248, "paper-row(~1KB)")):
+        sch = Schema.of("k", k="int64",
+                        **{f"c{i}": "float32" for i in range(width_cols)})
+        cols = {"k": powerlaw_keys(rng, n, n // 4),
+                **{f"c{i}": rng.random(n).astype(np.float32)
+                   for i in range(width_cols)}}
+        dt = create_distributed(cols, sch, shards, rows_per_batch=2048)
+        per_shard = []
+        for s in range(shards):
+            seg = dt.table.segments[0]
+            idx_b = (seg.index.bucket_keys[s].size * 8
+                     + seg.index.bucket_ptrs[s].size * 4
+                     + seg.prev[s].size * 4)
+            dat_b = (seg.data[s].size * 4 if dt.table.layout == "row"
+                     else sum(a[s].size * a.dtype.itemsize
+                              for a in seg.data.values()))
+            per_shard.append(idx_b / dat_b)
+        rep.add(label, mean_overhead=float(np.mean(per_shard)),
+                max_overhead=float(np.max(per_shard)),
+                min_overhead=float(np.min(per_shard)))
+    return rep.to_dict()
+
+
+if __name__ == "__main__":
+    run(quick=True)

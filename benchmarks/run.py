@@ -1,0 +1,61 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  python -m benchmarks.run [--full] [--only NAME] [--out results.json]
+
+Default is quick mode (CI-scale datasets); --full uses the larger sizes.
+See DESIGN.md §8 for the module ↔ paper figure mapping.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks import (append_read_latency, batch_size_sweep,
+                        fault_tolerance, flights_queries, join_scaling,
+                        memory_overhead, operators, scalability,
+                        snb_queries, tpcds_join, write_throughput)
+
+MODULES = {
+    "join_scaling": join_scaling,          # Fig 7 + Table III
+    "operators": operators,                # Fig 8
+    "append_read_latency": append_read_latency,  # Fig 9
+    "write_throughput": write_throughput,  # Fig 10
+    "memory_overhead": memory_overhead,    # Fig 11
+    "fault_tolerance": fault_tolerance,    # Fig 12
+    "batch_size_sweep": batch_size_sweep,  # Fig 5
+    "scalability": scalability,            # Fig 6
+    "tpcds_join": tpcds_join,              # Fig 14
+    "snb_queries": snb_queries,            # Fig 13
+    "flights_queries": flights_queries,    # Fig 15
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", choices=list(MODULES))
+    ap.add_argument("--out", default="benchmarks/results.json")
+    args = ap.parse_args(argv)
+
+    todo = {args.only: MODULES[args.only]} if args.only else MODULES
+    results, failures = [], 0
+    for name, mod in todo.items():
+        print(f"\n== {name} ==", flush=True)
+        t0 = time.time()
+        try:
+            results.append(mod.run(quick=not args.full))
+            print(f"   done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:  # report and continue
+            failures += 1
+            print(f"   FAILED: {type(e).__name__}: {e}", flush=True)
+            results.append({"benchmark": name, "error": str(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"\nwrote {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

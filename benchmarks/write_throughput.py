@@ -1,0 +1,38 @@
+"""Fig 10: append/createIndex write throughput vs rows-per-write.
+
+Both APIs share the writing mechanism (hash-route + segment build), so the
+numbers coincide — the paper makes the same observation."""
+
+import numpy as np
+
+from repro.core import Schema, append, create_index
+from benchmarks.common import Report, timeit
+
+SCH = Schema.of("k", k="int64", v="float32")
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(3)
+    rep = Report("write_throughput")
+    base_n = 20_000 if quick else 200_000
+    cols = {"k": rng.integers(0, base_n, base_n).astype(np.int64),
+            "v": rng.random(base_n).astype(np.float32)}
+    t0 = create_index(cols, SCH, rows_per_batch=4096)
+
+    for rows in (1_000, 10_000, 100_000) if not quick else (500, 2_000,
+                                                            10_000):
+        delta = {"k": rng.integers(0, base_n, rows).astype(np.int64),
+                 "v": rng.random(rows).astype(np.float32)}
+        t_app = timeit(lambda: append(t0, delta), reps=3)
+        t_create = timeit(lambda: create_index(delta, SCH,
+                                               rows_per_batch=4096), reps=3)
+        rep.add(f"rows={rows}",
+                append_rows_per_s=rows / t_app["median_s"],
+                create_rows_per_s=rows / t_create["median_s"],
+                append_ms=t_app["median_s"] * 1e3,
+                create_ms=t_create["median_s"] * 1e3)
+    return rep.to_dict()
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,15 @@
+"""End-to-end serving driver: batched requests over the indexed KV cache.
+
+    PYTHONPATH=src python examples/serve_indexed.py
+
+Requests share a long system-prompt prefix; the engine resolves cached KV
+pages with the paper's point lookup (hash(prefix page) -> page pointer),
+skips their prefill, decodes batched with the paged Pallas kernel
+(interpret mode on CPU), and commits new pages as MVCC appends.
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    raise SystemExit(main(["--requests", "6", "--steps", "8",
+                           "--prompt-len", "48", "--shared-prefix", "32"]))

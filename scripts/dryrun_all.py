@@ -1,0 +1,110 @@
+"""Run the full dry-run matrix: every applicable (arch x shape) cell on
+the single-pod (16,16) and multi-pod (2,16,16) meshes.
+
+One subprocess per cell (isolates failures, bounds memory); resumable —
+cells already recorded in the output JSONL are skipped.
+
+    PYTHONPATH=src python scripts/dryrun_all.py --out experiments/dryrun.jsonl
+    PYTHONPATH=src python scripts/dryrun_all.py --multi-pod --out experiments/dryrun_mp.jsonl
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
+
+from repro.configs import ARCH_IDS, REGISTRY, SHAPES, applicable  # noqa: E402
+
+# per-arch microbatch counts for train_4k (memory fit; DESIGN.md §6)
+TRAIN_MICROBATCH = {
+    "deepseek-v3-671b": 8,
+    "jamba-v0.1-52b": 8,
+    "gemma3-4b": 8,        # 262k vocab logits
+    "whisper-large-v3": 4,
+    "default": 4,
+}
+
+# archs whose params exceed single-axis TP sharding: FSDP over data too.
+# For train always; for serving shapes only when 16-way TP still exceeds
+# HBM (ds-v3: 1.34 TB bf16 / 16 = 84 GB per device; jamba: 104/16 = 6.5 GB
+# fits, so serving keeps weights TP-only and avoids per-token re-gathers).
+FSDP_ARCHS_TRAIN = {"deepseek-v3-671b", "jamba-v0.1-52b"}
+FSDP_ARCHS_ALWAYS = {"deepseek-v3-671b"}
+
+
+def cells():
+    for arch in ARCH_IDS:
+        cfg = REGISTRY[arch].full()
+        for shape in SHAPES:
+            if applicable(cfg, shape):
+                yield arch, shape
+
+
+def recorded(path):
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("ok"):
+                    done.add((r["arch"], r["shape"]))
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--timeout", type=int, default=7200)
+    ap.add_argument("--only-arch")
+    ap.add_argument("--save-hlo")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = recorded(args.out)
+    todo = [(a, s) for a, s in cells()
+            if (a, s) not in done
+            and (not args.only_arch or a == args.only_arch)]
+    print(f"{len(done)} cells recorded, {len(todo)} to run")
+
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    failures = []
+    for i, (arch, shape) in enumerate(todo):
+        mb = TRAIN_MICROBATCH.get(arch, TRAIN_MICROBATCH["default"]) \
+            if shape == "train_4k" else 1
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", args.out,
+               "--microbatches", str(mb)]
+        if arch in FSDP_ARCHS_ALWAYS or \
+                (arch in FSDP_ARCHS_TRAIN and shape == "train_4k"):
+            cmd.append("--fsdp")
+        if args.save_hlo:
+            cmd += ["--save-hlo", args.save_hlo]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        print(f"[{i + 1}/{len(todo)}] {arch} x {shape} (mb={mb})...",
+              flush=True)
+        r = subprocess.run(cmd, env=env, timeout=args.timeout,
+                           capture_output=True, text=True)
+        tail = "\n".join((r.stdout + r.stderr).splitlines()[-4:])
+        print(f"    rc={r.returncode} in {time.time() - t0:.0f}s\n"
+              + "\n".join("    " + l for l in tail.splitlines()),
+              flush=True)
+        if r.returncode != 0:
+            failures.append((arch, shape))
+    print(f"\ndone; {len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

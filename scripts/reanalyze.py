@@ -1,0 +1,45 @@
+"""Re-run launch/hlo.py analysis over saved HLO modules — metric updates
+without recompiling.
+
+    PYTHONPATH=src python scripts/reanalyze.py experiments/dryrun_single.jsonl
+"""
+
+import gzip
+import json
+import os
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
+
+from repro.launch import hlo  # noqa: E402
+
+
+def main():
+    path = sys.argv[1]
+    hlo_dir = sys.argv[2] if len(sys.argv) > 2 else "experiments/hlo"
+    out = []
+    updated = 0
+    for line in open(path):
+        r = json.loads(line)
+        f = r.get("hlo_file")
+        if r.get("ok") and f and os.path.exists(os.path.join(hlo_dir, f)):
+            chips = 1
+            for v in r["mesh"].values():
+                chips *= v
+            with gzip.open(os.path.join(hlo_dir, f), "rt") as fh:
+                ana = hlo.analyze(fh.read(), total_devices=chips)
+            r["collectives"] = ana["collectives"]
+            r["collective_wire_bytes"] = ana["collective_wire_bytes"]
+            r["dot_flops"] = ana["dot_flops"]
+            r["hbm_bytes"] = ana["hbm_bytes"]
+            updated += 1
+        out.append(r)
+    with open(path, "w") as fh:
+        for r in out:
+            fh.write(json.dumps(r) + "\n")
+    print(f"re-analyzed {updated}/{len(out)} records")
+
+
+if __name__ == "__main__":
+    main()

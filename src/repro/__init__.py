@@ -1,0 +1,14 @@
+"""repro — the Indexed DataFrame (Uta et al., 2021) rebuilt as a JAX/TPU
+framework: an in-memory, hash-partitioned indexed cache with MVCC appends,
+plus the training/serving substrates that consume it.
+
+int64 keys are first-class in the index (the paper's key columns are 32/64-bit
+integers and hashed strings), so x64 is enabled at import.  All model code
+uses explicit dtypes (bf16/f32) and is unaffected.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,33 @@
+"""configs — the 10 assigned architectures (+ smoke variants) and shapes.
+
+``get_config(arch_id)`` / ``get_smoke(arch_id)`` resolve ``--arch`` names;
+``shapes.input_specs(cfg, shape)`` builds the dry-run stand-ins.
+"""
+
+from repro.configs import (deepseek_v3_671b, deepseek_v2_lite_16b,
+                           qwen3_0_6b, gemma3_4b, qwen1_5_4b,
+                           tinyllama_1_1b, qwen2_vl_2b, mamba2_370m,
+                           jamba_v0_1_52b, whisper_large_v3)
+from repro.configs import shapes
+from repro.configs.shapes import SHAPES, applicable, input_specs
+
+_MODULES = [deepseek_v3_671b, deepseek_v2_lite_16b, qwen3_0_6b, gemma3_4b,
+            qwen1_5_4b, tinyllama_1_1b, qwen2_vl_2b, mamba2_370m,
+            jamba_v0_1_52b, whisper_large_v3]
+
+REGISTRY = {m.ID: m for m in _MODULES}
+ARCH_IDS = list(REGISTRY)
+
+
+def get_config(arch_id: str):
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return REGISTRY[arch_id].full()
+
+
+def get_smoke(arch_id: str):
+    return REGISTRY[arch_id].smoke()
+
+
+__all__ = ["REGISTRY", "ARCH_IDS", "get_config", "get_smoke", "SHAPES",
+           "applicable", "input_specs", "shapes"]

@@ -1,0 +1,39 @@
+"""deepseek-v2-lite-16b [moe] — MLA kv_lora=512, shared+routed top-6.
+
+Assignment: 27L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=102400,
+MoE 64e top-6 [arXiv:2405.04434; hf].  (The assignment note "160 routed"
+matches full V2; Lite has 64 routed + 2 shared — we follow the 64e field
+and hf: deepseek-ai/DeepSeek-V2-Lite.)  Lite has no q LoRA; first layer
+dense with d_ff 10944.
+"""
+
+from repro.models.common import MLAConfig, ModelConfig, MoEConfig
+
+ID = "deepseek-v2-lite-16b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ID, family="moe", num_layers=27, d_model=2048,
+        num_heads=16, num_kv_heads=16, head_dim=128,
+        d_ff=10944, vocab_size=102400, rope_theta=1e4,
+        mla=MLAConfig(q_lora_rank=0, kv_lora_rank=512,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(num_experts=64, top_k=6, d_ff_expert=1408,
+                      num_shared=2, first_dense_layers=1),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ID + "-smoke", family="moe", num_layers=3, d_model=64,
+        num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=128, rope_theta=1e4,
+        mla=MLAConfig(q_lora_rank=0, kv_lora_rank=32,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8,
+                      v_head_dim=16),
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
+                      num_shared=2, first_dense_layers=1),
+        dtype="float32",
+    )

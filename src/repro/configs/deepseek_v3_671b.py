@@ -1,0 +1,42 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP.
+
+Assignment: 61L d_model=7168 128H (GQA kv=128) d_ff=2048 vocab=129280,
+MoE 256e top-8  [arXiv:2412.19437; hf].  The assignment's d_ff=2048 is the
+routed-expert intermediate size; the 3 leading dense layers use 18432
+(hf: deepseek-ai/DeepSeek-V3 first_k_dense_replace=3,
+intermediate_size=18432, moe_intermediate_size=2048).
+"""
+
+from repro.models.common import MLAConfig, ModelConfig, MoEConfig
+
+ID = "deepseek-v3-671b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ID, family="moe", num_layers=61, d_model=7168,
+        num_heads=128, num_kv_heads=128, head_dim=128,
+        d_ff=18432, vocab_size=129280, rope_theta=1e4,
+        mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(num_experts=256, top_k=8, d_ff_expert=2048,
+                      num_shared=1, first_dense_layers=3,
+                      router="sigmoid", router_aux_free_bias=True),
+        mtp_depth=1,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ID + "-smoke", family="moe", num_layers=4, d_model=64,
+        num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=128, rope_theta=1e4,
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=32,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8,
+                      v_head_dim=16),
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
+                      num_shared=1, first_dense_layers=1,
+                      router="sigmoid", router_aux_free_bias=True),
+        mtp_depth=1, dtype="float32",
+    )

@@ -1,0 +1,32 @@
+"""gemma3-4b [dense] — 5:1 local:global sliding window, 128k context.
+
+Assignment: 34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144
+[hf:google/gemma-3-4b-pt; unverified].  head_dim=256; local window 1024
+with theta 10k; global layers theta 1M (hf gemma-3 family defaults).
+Sub-quadratic in the local layers -> long_500k runs for this arch.
+"""
+
+from repro.models.common import ModelConfig
+
+ID = "gemma3-4b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ID, family="dense", num_layers=34, d_model=2560,
+        num_heads=8, num_kv_heads=4, head_dim=256,
+        d_ff=10240, vocab_size=262144,
+        local_global_pattern=5, sliding_window=1024,
+        rope_theta=1e6, local_rope_theta=1e4, tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ID + "-smoke", family="dense", num_layers=6, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=128,
+        local_global_pattern=5, sliding_window=8,
+        rope_theta=1e6, local_rope_theta=1e4, tie_embeddings=True,
+        dtype="float32",
+    )

@@ -1,0 +1,39 @@
+"""jamba-v0.1-52b [hybrid] — Mamba + attention 1:7 interleave, MoE.
+
+Assignment: 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536,
+MoE 16e top-2 [arXiv:2403.19887; hf:ai21labs/Jamba-v0.1].  Attention every
+8th layer at offset 4 (1:7 attn:mamba); MoE every 2nd layer; mamba blocks
+d_state=16, conv=4, expand=2 (paper ships mamba-1; we use the SSD
+formulation — DESIGN.md §2 hardware-adaptation note).  head_dim=128.
+Sub-quadratic (7/8 of layers) -> long_500k runs.
+"""
+
+from repro.models.common import ModelConfig, MoEConfig, SSMConfig
+
+ID = "jamba-v0.1-52b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ID, family="hybrid", num_layers=32, d_model=4096,
+        num_heads=32, num_kv_heads=8, head_dim=128,
+        d_ff=14336, vocab_size=65536, rope_theta=1e4,
+        attn_layer_period=8, attn_layer_offset=4,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64,
+                      n_groups=1, chunk=256),
+        moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=14336,
+                      every_k=2),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ID + "-smoke", family="hybrid", num_layers=8, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=128, rope_theta=1e4,
+        attn_layer_period=8, attn_layer_offset=4,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                      n_groups=1, chunk=8),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64, every_k=2),
+        dtype="float32",
+    )

@@ -1,0 +1,35 @@
+"""mamba2-370m [ssm] — SSD (state-space duality), attention-free.
+
+Assignment: 48L d_model=1024 (attn-free) d_ff=0 vocab=50280,
+ssm_state=128 [arXiv:2405.21060; unverified].  Mamba2 block: expand=2,
+head_dim=64, conv=4, n_groups=1.  The d_ff=0 assignment means no separate
+MLP — the mamba mixer is the whole block; we honor that by setting the
+ffn to a minimal identity-free gate... faithful mamba2 has NO MLP, so the
+config drives layer_kinds to 'ssm' blocks only and d_ff is unused.
+Sub-quadratic -> long_500k runs.
+"""
+
+from repro.models.common import ModelConfig, SSMConfig
+
+ID = "mamba2-370m"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ID, family="ssm", num_layers=48, d_model=1024,
+        num_heads=0, num_kv_heads=0, head_dim=0,
+        d_ff=0, vocab_size=50280, tie_embeddings=True,
+        ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                      n_groups=1, chunk=256),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ID + "-smoke", family="ssm", num_layers=4, d_model=64,
+        num_heads=0, num_kv_heads=0, head_dim=0,
+        d_ff=0, vocab_size=128, tie_embeddings=True,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                      n_groups=1, chunk=8),
+        dtype="float32",
+    )

@@ -1,0 +1,26 @@
+"""qwen1.5-4b [dense] — QKV bias.
+
+Assignment: 40L d_model=2560 20H (GQA kv=20) d_ff=6912 vocab=151936
+[hf:Qwen/Qwen1.5-4B].  head_dim=128; rope theta 5e6 (hf).
+"""
+
+from repro.models.common import ModelConfig
+
+ID = "qwen1.5-4b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ID, family="dense", num_layers=40, d_model=2560,
+        num_heads=20, num_kv_heads=20, head_dim=128,
+        d_ff=6912, vocab_size=151936, qkv_bias=True, rope_theta=5e6,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ID + "-smoke", family="dense", num_layers=3, d_model=64,
+        num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=128, qkv_bias=True, rope_theta=5e6,
+        dtype="float32",
+    )

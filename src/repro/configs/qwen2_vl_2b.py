@@ -1,0 +1,30 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution (frontend stubbed).
+
+Assignment: 28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936
+[arXiv:2409.12191; hf:Qwen/Qwen2-VL-2B].  head_dim=128; M-RoPE sections
+(t,h,w) = (16, 24, 24).  The vision tower is a STUB: input_specs()
+supplies precomputed patch embeddings [B, P, d_model] + the 3-stream
+position ids.
+"""
+
+from repro.models.common import ModelConfig
+
+ID = "qwen2-vl-2b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ID, family="vlm", num_layers=28, d_model=1536,
+        num_heads=12, num_kv_heads=2, head_dim=128,
+        d_ff=8960, vocab_size=151936, qkv_bias=True, rope_theta=1e6,
+        mrope_sections=(16, 24, 24), tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ID + "-smoke", family="vlm", num_layers=3, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=128, qkv_bias=True, rope_theta=1e6,
+        mrope_sections=(2, 3, 3), tie_embeddings=True, dtype="float32",
+    )

@@ -1,0 +1,27 @@
+"""qwen3-0.6b [dense] — qk_norm, GQA.
+
+Assignment: 28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936
+[hf:Qwen/Qwen3-0.6B].  head_dim=128 (q_dim 2048 > d_model, per hf).
+"""
+
+from repro.models.common import ModelConfig
+
+ID = "qwen3-0.6b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ID, family="dense", num_layers=28, d_model=1024,
+        num_heads=16, num_kv_heads=8, head_dim=128,
+        d_ff=3072, vocab_size=151936, qk_norm=True, rope_theta=1e6,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ID + "-smoke", family="dense", num_layers=3, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, qk_norm=True, rope_theta=1e6,
+        tie_embeddings=True, dtype="float32",
+    )

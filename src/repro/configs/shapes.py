@@ -1,0 +1,102 @@
+"""Assigned input shapes and per-(arch × shape) input specs.
+
+Four shapes per LM arch (assignment):
+  train_4k     seq 4,096   global_batch 256   -> lowers train_step
+  prefill_32k  seq 32,768  global_batch 32    -> lowers prefill
+  decode_32k   seq 32,768  global_batch 128   -> lowers serve_step
+                                                 (1 new token, KV = seq)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; only for
+                                                 sub-quadratic archs
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct, no
+allocation) for every model input of that cell, plus which step function
+the cell lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> bool:
+    """Assignment skip rules (recorded in DESIGN.md §Arch-applicability)."""
+    if shape_name == "long_500k":
+        return cfg.sub_quadratic()
+    return True
+
+
+def batch_inputs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Training/prefill batch pytree as ShapeDtypeStructs."""
+    b, s = shape.batch, shape.seq
+    batch = {"tokens": _sds((b, s), I32)}
+    if cfg.encoder_decoder:
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                               cfg.jnp_dtype)
+    if cfg.family == "vlm":
+        # patch embeddings fill the leading positions (frontend stub);
+        # 1024 patches ~ one 1024x1024 image at 32x32 merge.
+        p = min(1024, s // 2)
+        batch["patch_emb"] = _sds((b, p, cfg.d_model), cfg.jnp_dtype)
+        batch["mrope_positions"] = _sds((3, b, s), I32)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> list:
+    """Decode-cache pytree as ShapeDtypeStructs (mirrors tf.init_cache)."""
+    from repro.models import transformer as tf
+    if cfg.encoder_decoder:
+        from repro.models import whisper as wh
+        return jax.eval_shape(
+            lambda: wh.init_cache(cfg, batch, max_len))
+    return jax.eval_shape(lambda: tf.init_cache(cfg, batch, max_len))
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    return {"last_tok": _sds((shape.batch, 1), I32),
+            "caches": cache_specs(cfg, shape.batch, shape.seq)}
+
+
+def params_specs(cfg: ModelConfig):
+    from repro.train.step import init_params
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Everything dryrun needs for one cell: step kind + input pytrees."""
+    shape = SHAPES[shape_name]
+    if not applicable(cfg, shape_name):
+        raise ValueError(f"{cfg.name} x {shape_name}: skipped "
+                         "(full-attention arch at 500k; see DESIGN.md)")
+    if shape.kind == "train":
+        return {"kind": "train", "batch": batch_inputs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"kind": "prefill", "batch": batch_inputs(cfg, shape)}
+    return {"kind": "decode", **decode_inputs(cfg, shape)}

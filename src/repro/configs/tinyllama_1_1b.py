@@ -1,0 +1,25 @@
+"""tinyllama-1.1b [dense] — llama2-arch small.
+
+Assignment: 22L d_model=2048 32H (GQA kv=4) d_ff=5632 vocab=32000
+[arXiv:2401.02385; hf:TinyLlama/TinyLlama-1.1B].  head_dim=64.
+"""
+
+from repro.models.common import ModelConfig
+
+ID = "tinyllama-1.1b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ID, family="dense", num_layers=22, d_model=2048,
+        num_heads=32, num_kv_heads=4, head_dim=64,
+        d_ff=5632, vocab_size=32000, rope_theta=1e4,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ID + "-smoke", family="dense", num_layers=3, d_model=64,
+        num_heads=8, num_kv_heads=2, head_dim=8,
+        d_ff=128, vocab_size=128, rope_theta=1e4, dtype="float32",
+    )

@@ -1,0 +1,35 @@
+"""whisper-large-v3 [audio] — encoder-decoder, conv frontend stubbed.
+
+Assignment: 32L d_model=1280 20H (GQA kv=20) d_ff=5120 vocab=51866
+[arXiv:2212.04356; unverified].  32 encoder + 32 decoder layers,
+head_dim=64, 1500 encoder frames.  input_specs() supplies post-conv frame
+embeddings (the conv mel frontend is a STUB per the assignment).  decode
+shapes lower the decoder step mechanically at the assigned seq_len even
+though the real model caps at 448 positions (DESIGN.md §5).
+"""
+
+from repro.models.common import ModelConfig
+
+ID = "whisper-large-v3"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ID, family="audio", num_layers=32, d_model=1280,
+        num_heads=20, num_kv_heads=20, head_dim=64,
+        d_ff=5120, vocab_size=51866, encoder_decoder=True,
+        encoder_layers=32, encoder_seq=1500, tie_embeddings=True,
+        # real model caps at 448 positions; the assigned decode shapes
+        # lower mechanically at 32k, so the learned table is sized up
+        max_pos=40960,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ID + "-smoke", family="audio", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=128, encoder_decoder=True,
+        encoder_layers=2, encoder_seq=30, tie_embeddings=True,
+        dtype="float32",
+    )

@@ -1,0 +1,22 @@
+"""core — the paper's primary contribution: the Indexed DataFrame.
+
+Layout:
+  pointers.py   packed row pointers (paper's dense 64-bit ptr, TPU int32 form)
+  hashing.py    partition + bucket hashes (routing vs placement)
+  hashindex.py  dense bucketized hash index (cTrie replacement): bulk build,
+                probe, backward-pointer chain walk
+  schema.py     fixed-width schemas, row-wise + columnar codecs
+  table.py      IndexedTable: segments, MVCC appends, snapshots, compaction
+  joins.py      indexed join/lookup + vanilla baselines (hash, sort-merge, scan)
+  planner.py    Catalyst-analog rewrite rules -> physical operators
+"""
+
+from repro.core.schema import Schema, Column
+from repro.core.table import IndexedTable, create_index, append, compact
+from repro.core.hashindex import HashIndex, build_index, probe, chain_walk
+from repro.core import joins, planner
+
+__all__ = [
+    "Schema", "Column", "IndexedTable", "create_index", "append", "compact",
+    "HashIndex", "build_index", "probe", "chain_walk", "joins", "planner",
+]

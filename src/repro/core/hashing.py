@@ -1,0 +1,59 @@
+"""Key hashing for the Indexed DataFrame.
+
+Two hash tiers, mirroring the paper:
+
+* **partition hash** — routes a key to its owning shard (paper §III-C
+  "hash partitioning scheme").  Must agree across every device, and must be
+  *independent* of the bucket hash so shard-local bucket occupancy stays
+  uniform after partitioning.
+* **bucket hash** — places a key in a bucket of the shard-local dense index
+  (our cTrie replacement).
+
+Both are Fibonacci/splitmix-style multiplicative mixes: one int multiply +
+shift/xor, fully vectorizable on the TPU VPU.  Keys are int64 at the API
+boundary (strings are pre-hashed to int64 on the host at ingest — the paper
+hashes strings to 32-bit for the cTrie; we keep 64 bits to cut collisions).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# splitmix64 / Fibonacci constants.
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+
+
+def _splitmix64(x):
+    x = jnp.asarray(x).astype(jnp.uint64)
+    x = (x ^ (x >> 30)) * _MIX1
+    x = (x ^ (x >> 27)) * _MIX2
+    return x ^ (x >> 31)
+
+
+def bucket_hash(keys, num_buckets: int):
+    """Bucket id in [0, num_buckets); num_buckets must be a power of two."""
+    assert num_buckets & (num_buckets - 1) == 0, "num_buckets must be 2**k"
+    h = _splitmix64(keys)
+    # Take the *high* bits of the golden-ratio product: low bits correlate
+    # with the partition hash's modulus for small shard counts.
+    h = h * _GOLDEN
+    shift = np.uint64(64 - int(num_buckets).bit_length() + 1)
+    return (h >> shift).astype(jnp.int32) & jnp.int32(num_buckets - 1)
+
+
+def partition_hash(keys, num_shards: int):
+    """Owning shard id in [0, num_shards) for routing (any shard count)."""
+    h = _splitmix64(jnp.asarray(keys).astype(jnp.uint64) ^ _GOLDEN)
+    return (h % np.uint64(num_shards)).astype(jnp.int32)
+
+
+def hash_string_host(s: str) -> int:
+    """Host-side FNV-1a of a string key → int64 (ingest path for string
+    columns; see DESIGN.md §9)."""
+    h = np.uint64(0xCBF29CE484222325)
+    for b in s.encode("utf-8"):
+        h = np.uint64((int(h) ^ b) * 0x100000001B3 & 0xFFFFFFFFFFFFFFFF)
+    return int(np.int64(h.astype(np.int64)))

@@ -1,0 +1,240 @@
+"""Query planner — the Catalyst-integration analog (paper §III-B, Fig 2).
+
+The paper hooks Spark's Catalyst with *optimization rules* that rewrite
+logical operators into indexed physical operators whenever an equality
+predicate or equi-join touches an indexed column, falling back to the
+regular path otherwise.  We reproduce that contract with a small logical IR
+and a rewrite pass:
+
+    logical plan  --rules-->  physical plan  --execute-->  arrays
+
+Rules implemented (mirroring the paper's):
+  R1  Filter(key == lit)  on an indexed table          -> IndexedLookup
+  R2  Join(A, B) on key, A indexed                     -> IndexedJoin(build=A)
+  R3  Join(A, B) on key, only B indexed                -> IndexedJoin(build=B)
+  R4  Join with small probe side                       -> broadcast flavor is
+      a distribution-layer decision (dist/dtable.py); the logical rewrite is
+      identical.
+  R5  anything else                                    -> fallback (scan /
+      per-query hash join) — "regular execution" in the paper's Fig 2.
+
+The physical plan records *why* each choice was made (``explain()``), the
+analog of Spark's ``df.explain`` the paper uses to verify rule firing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core import joins
+from repro.core.table import IndexedTable
+
+
+# --- expressions ------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Col:
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Lit:
+    value: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Eq:
+    left: Col
+    right: Lit | Col
+
+
+@dataclasses.dataclass(frozen=True)
+class Lt:
+    left: Col
+    right: Lit
+
+
+# --- logical plan -----------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Relation:
+    """Leaf: either an IndexedTable or a plain columnar dict."""
+    name: str
+    table: IndexedTable | None = None      # indexed relation
+    cols: dict | None = None               # plain relation
+
+    @property
+    def indexed(self) -> bool:
+        return self.table is not None
+
+    @property
+    def key(self) -> str | None:
+        return self.table.schema.key if self.indexed else None
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter:
+    child: Any
+    pred: Eq | Lt
+
+
+@dataclasses.dataclass(frozen=True)
+class Project:
+    child: Any
+    names: tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Join:
+    left: Any
+    right: Any
+    on: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate:
+    child: Any
+    op: str
+    col: str
+
+
+# --- physical plan ----------------------------------------------------------
+
+@dataclasses.dataclass
+class Physical:
+    kind: str            # IndexedLookup | IndexedJoin | ScanFilter | HashJoin | ...
+    reason: str
+    node: Any
+    children: tuple = ()
+
+    def explain(self, depth: int = 0) -> str:
+        pad = "  " * depth
+        out = f"{pad}{self.kind}  [{self.reason}]\n"
+        for c in self.children:
+            out += c.explain(depth + 1)
+        return out
+
+
+class Planner:
+    """Rule-based rewriter + executor."""
+
+    def __init__(self, *, max_matches: int = 64):
+        self.max_matches = max_matches
+
+    # -- rewrite --------------------------------------------------------------
+    def plan(self, node) -> Physical:
+        if isinstance(node, Relation):
+            kind = "IndexedScan" if node.indexed else "Scan"
+            return Physical(kind, "leaf", node)
+        if isinstance(node, Filter):
+            child = node.child
+            if (isinstance(child, Relation) and child.indexed
+                    and isinstance(node.pred, Eq)
+                    and node.pred.left.name == child.key
+                    and isinstance(node.pred, Eq)
+                    and isinstance(node.pred.right, Lit)):
+                return Physical("IndexedLookup",
+                                f"R1: eq-filter on indexed key "
+                                f"'{child.key}'", node,
+                                (self.plan(child),))
+            return Physical("ScanFilter", "R5: fallback (non-key or "
+                            "non-eq predicate)", node,
+                            (self.plan(node.child),))
+        if isinstance(node, Join):
+            l, r = node.left, node.right
+            l_idx = isinstance(l, Relation) and l.indexed and l.key == node.on
+            r_idx = isinstance(r, Relation) and r.indexed and r.key == node.on
+            if l_idx:
+                return Physical("IndexedJoin", "R2: left side indexed on "
+                                f"'{node.on}' -> build side", node,
+                                (self.plan(l), self.plan(r)))
+            if r_idx:
+                return Physical("IndexedJoin", "R3: right side indexed on "
+                                f"'{node.on}' -> build side", node,
+                                (self.plan(r), self.plan(l)))
+            return Physical("HashJoin", "R5: no usable index -> per-query "
+                            "hash build", node,
+                            (self.plan(l), self.plan(r)))
+        if isinstance(node, Project):
+            return Physical("Project", "narrow", node,
+                            (self.plan(node.child),))
+        if isinstance(node, Aggregate):
+            return Physical("Aggregate", node.op, node,
+                            (self.plan(node.child),))
+        raise TypeError(f"unknown logical node {node!r}")
+
+    # -- execute ---------------------------------------------------------------
+    def execute(self, node):
+        return self._exec(self.plan(node))
+
+    def _exec(self, p: Physical):
+        n = p.node
+        if p.kind in ("IndexedScan", "Scan"):
+            return n  # relations are consumed by parents
+        if p.kind == "IndexedLookup":
+            rel = n.child
+            key = jnp.asarray([n.pred.right.value], jnp.int64)
+            cols, valid = joins.indexed_lookup(rel.table, key,
+                                               max_matches=self.max_matches)
+            return {k: v[0] for k, v in cols.items()}, valid[0]
+        if p.kind == "ScanFilter":
+            rel = n.child
+            cols, valid = _materialize(rel)
+            pred_v = _eval_pred(n.pred, cols)
+            return cols, valid & pred_v
+        if p.kind == "IndexedJoin":
+            build_rel = p.children[0].node
+            probe_rel = p.children[1].node
+            probe_cols, probe_valid = _materialize(probe_rel)
+            bc, pc, valid = joins.indexed_join(
+                build_rel.table, probe_cols, n.on,
+                max_matches=self.max_matches)
+            valid = valid & probe_valid[:, None]
+            merged = {**{f"b_{k}": v for k, v in bc.items()},
+                      **{f"p_{k}": v for k, v in pc.items()}}
+            return merged, valid
+        if p.kind == "HashJoin":
+            lc, lv = _materialize(p.children[0].node)
+            rc, rv = _materialize(p.children[1].node)
+            bc, pc, valid = joins.hash_join(lc, n.on, rc, n.on,
+                                            max_matches=self.max_matches)
+            valid = valid & rv[:, None]
+            merged = {**{f"b_{k}": v for k, v in bc.items()},
+                      **{f"p_{k}": v for k, v in pc.items()}}
+            return merged, valid
+        if p.kind == "Project":
+            cols, valid = self._exec(p.children[0])
+            return {k: v for k, v in cols.items()
+                    if k in n.names or k.removeprefix("b_") in n.names
+                    or k.removeprefix("p_") in n.names}, valid
+        if p.kind == "Aggregate":
+            cols, valid = self._exec(p.children[0])
+            name = n.col
+            for cand in (name, f"b_{name}", f"p_{name}"):
+                if cand in cols:
+                    return joins.aggregate(cols[cand], valid, n.op)
+            raise KeyError(name)
+        raise TypeError(p.kind)
+
+
+def _materialize(rel: Relation):
+    if rel.indexed:
+        all_cols = {}
+        for name in rel.table.schema.names:
+            vals, valid = rel.table.scan_column(name)
+            all_cols[name] = vals
+        return all_cols, valid
+    cols = {k: jnp.asarray(v) for k, v in rel.cols.items()}
+    n = next(iter(cols.values())).shape[0]
+    return cols, jnp.ones((n,), bool)
+
+
+def _eval_pred(pred, cols):
+    if isinstance(pred, Eq):
+        return cols[pred.left.name] == pred.right.value
+    if isinstance(pred, Lt):
+        return cols[pred.left.name] < pred.right.value
+    raise TypeError(pred)

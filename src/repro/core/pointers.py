@@ -1,0 +1,46 @@
+"""Packed row pointers for the Indexed DataFrame.
+
+The paper packs ``(row_batch_number, offset_within_batch, prev_row_size)``
+into dense 64-bit integers (paper §III-C).  TPUs have no fast int64 ALU
+path, so we adapt: a pointer is a *flat int32 row id* over the ordered list
+of fixed-capacity row batches::
+
+    row_id = batch_id * rows_per_batch + offset      (NULL = -1)
+
+``rows_per_batch`` is a power of two so batch/offset recovery is a
+shift/mask — the same dense-packing trick, TPU-native.  int32 addresses
+2**31 rows per partition, which matches the paper's own per-core bound
+("2^31 row batches ... 4 MB each" gives the same order of addressable data
+once scaled to per-partition terms).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NULL_PTR = jnp.int32(-1)
+PTR_DTYPE = jnp.int32
+
+
+def pack(batch_id, offset, *, log2_rows_per_batch: int):
+    """Pack (batch_id, offset) into a flat int32 row pointer."""
+    batch_id = jnp.asarray(batch_id, PTR_DTYPE)
+    offset = jnp.asarray(offset, PTR_DTYPE)
+    return (batch_id << log2_rows_per_batch) | offset
+
+
+def unpack(ptr, *, log2_rows_per_batch: int):
+    """Unpack a flat row pointer into (batch_id, offset).
+
+    NULL pointers unpack to (-1, -1) so downstream gathers can mask on
+    either component.
+    """
+    ptr = jnp.asarray(ptr, PTR_DTYPE)
+    mask = ptr >= 0
+    batch_id = jnp.where(mask, ptr >> log2_rows_per_batch, NULL_PTR)
+    offset = jnp.where(mask, ptr & ((1 << log2_rows_per_batch) - 1), NULL_PTR)
+    return batch_id, offset
+
+
+def is_null(ptr):
+    return ptr < 0

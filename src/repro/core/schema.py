@@ -1,0 +1,152 @@
+"""Fixed-width table schemas + row-wise / columnar storage codecs.
+
+The paper stores rows in binary *unsafe* buffers (row-wise, §III-C footnote:
+"could seamlessly be changed to columnar formats").  We support both layouts:
+
+* ``row``      — each row is ``width_words`` 4-byte words in one int32 array;
+                 int64/float64 take two words, float32 is bitcast.  This is
+                 the paper-faithful default and reproduces its Fig 8 finding
+                 (projections pay for touching full rows).
+* ``columnar`` — one typed array per column (the footnote's alternative),
+                 used by the benchmarks to quantify that trade-off.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_DTYPES = {
+    "int32": (jnp.int32, 1),
+    "int64": (jnp.int64, 2),
+    "float32": (jnp.float32, 1),
+    "float64": (jnp.float64, 2),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Column:
+    name: str
+    dtype: str  # key in _DTYPES
+
+    @property
+    def jnp_dtype(self):
+        return _DTYPES[self.dtype][0]
+
+    @property
+    def width_words(self) -> int:
+        return _DTYPES[self.dtype][1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    """Ordered fixed-width columns; ``key`` names the indexed column."""
+
+    columns: tuple[Column, ...]
+    key: str
+
+    def __post_init__(self):
+        names = [c.name for c in self.columns]
+        assert len(set(names)) == len(names), "duplicate column names"
+        assert self.key in names, f"key column {self.key!r} not in schema"
+
+    @staticmethod
+    def of(key: str, **cols: str) -> "Schema":
+        return Schema(tuple(Column(n, d) for n, d in cols.items()), key)
+
+    @property
+    def width_words(self) -> int:
+        return sum(c.width_words for c in self.columns)
+
+    @property
+    def names(self):
+        return tuple(c.name for c in self.columns)
+
+    def column(self, name: str) -> Column:
+        for c in self.columns:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+    def offset_words(self, name: str) -> int:
+        off = 0
+        for c in self.columns:
+            if c.name == name:
+                return off
+            off += c.width_words
+        raise KeyError(name)
+
+    def row_bytes(self) -> int:
+        return self.width_words * 4
+
+    # -- codecs --------------------------------------------------------------
+
+    def encode_rows(self, cols: dict) -> jnp.ndarray:
+        """dict[name -> [N] typed array] -> [N, width_words] int32."""
+        parts = []
+        n = None
+        for c in self.columns:
+            a = jnp.asarray(cols[c.name], c.jnp_dtype)
+            n = a.shape[0] if n is None else n
+            assert a.shape == (n,), f"column {c.name}: bad shape {a.shape}"
+            parts.append(_to_words(a))
+        return jnp.concatenate(parts, axis=1)
+
+    def decode_rows(self, words, names=None) -> dict:
+        """[..., width_words] int32 -> dict[name -> [...] typed array]."""
+        names = names or self.names
+        out = {}
+        for name in names:
+            c = self.column(name)
+            off = self.offset_words(name)
+            out[name] = _from_words(words[..., off:off + c.width_words],
+                                    c.jnp_dtype)
+        return out
+
+    def key_from_words(self, words):
+        return self.decode_rows(words, names=(self.key,))[self.key]
+
+
+def _to_words(a) -> jnp.ndarray:
+    """[N] typed -> [N, w] int32 words (little-endian word order)."""
+    if a.dtype in (jnp.int32,):
+        return a[:, None]
+    if a.dtype == jnp.float32:
+        return _bitcast32(a)[:, None]
+    if a.dtype in (jnp.int64, jnp.float64):
+        bits = _bitcast64(a)
+        lo = (bits & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+        hi = (bits >> jnp.uint64(32)).astype(jnp.uint32)
+        return jnp.stack([_bitcast32u(lo), _bitcast32u(hi)], axis=1)
+    raise TypeError(f"unsupported dtype {a.dtype}")
+
+
+def _from_words(w, dtype) -> jnp.ndarray:
+    if dtype == jnp.int32:
+        return w[..., 0]
+    if dtype == jnp.float32:
+        return _bitcast_to(w[..., 0], jnp.float32)
+    lo = _bitcast_to(w[..., 0], jnp.uint32).astype(jnp.uint64)
+    hi = _bitcast_to(w[..., 1], jnp.uint32).astype(jnp.uint64)
+    bits = (hi << jnp.uint64(32)) | lo
+    if dtype == jnp.int64:
+        return _bitcast_to(bits, jnp.int64)
+    return _bitcast_to(bits, jnp.float64)
+
+
+def _bitcast32(a):
+    return jax.lax.bitcast_convert_type(a, jnp.int32)
+
+
+def _bitcast32u(a):
+    return jax.lax.bitcast_convert_type(a, jnp.int32)
+
+
+def _bitcast64(a):
+    return jax.lax.bitcast_convert_type(a, jnp.uint64)
+
+
+def _bitcast_to(a, dtype):
+    return jax.lax.bitcast_convert_type(a, dtype)

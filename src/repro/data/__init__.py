@@ -1,0 +1,11 @@
+"""data — training-data pipeline on the Indexed DataFrame.
+
+  store.py     ExampleStore: token row-batches + indexed metadata (MVCC)
+  pipeline.py  resumable batch sampling, curriculum joins, synth source
+"""
+
+from repro.data.store import ExampleStore, META_SCHEMA
+from repro.data.pipeline import BatchPipeline, Cursor, synthetic_examples
+
+__all__ = ["ExampleStore", "META_SCHEMA", "BatchPipeline", "Cursor",
+           "synthetic_examples"]

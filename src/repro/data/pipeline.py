@@ -1,0 +1,84 @@
+"""Batch pipeline over the ExampleStore: deterministic resumable sampling,
+streaming-append awareness, curriculum weighting via indexed join.
+
+The cursor is (seed, step) — restoring a checkpoint restores the exact
+batch sequence (fault tolerance requires the data order to be replayable,
+paper §III-D's replayable-source requirement applied to training).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.store import ExampleStore
+
+
+@dataclasses.dataclass
+class Cursor:
+    seed: int
+    step: int = 0
+
+    def state_dict(self):
+        return {"seed": self.seed, "step": self.step}
+
+    @staticmethod
+    def from_state(d):
+        return Cursor(seed=int(d["seed"]), step=int(d["step"]))
+
+
+class BatchPipeline:
+    """Samples [batch, seq_len] token batches from a (growing) store."""
+
+    def __init__(self, store: ExampleStore, batch: int, seed: int = 0):
+        self.store = store
+        self.batch = batch
+        self.cursor = Cursor(seed)
+
+    def next_batch(self):
+        """Deterministic sample of `batch` slots from the *current* store
+        version (appends between steps are picked up automatically — the
+        fresh-data-without-reload property the paper targets)."""
+        n = self.store.num_examples
+        if n == 0:
+            raise RuntimeError("empty store")
+        rng = np.random.default_rng((self.cursor.seed << 20)
+                                    ^ self.cursor.step)
+        slots = self.store.slot_of(rng.integers(0, n, self.batch))
+        self.cursor.step += 1
+        toks = self.store.gather_tokens(slots)
+        return {"tokens": toks}
+
+    def weighted_batch(self, weight_table, key: str = "example_id"):
+        """Curriculum sampling: join slots -> weights via the indexed join,
+        then importance-sample (the paper's metadata-join use case)."""
+        n = self.store.num_examples
+        rng = np.random.default_rng((self.cursor.seed << 20)
+                                    ^ self.cursor.step)
+        dense = rng.integers(0, n, self.batch * 4)
+        cand = self.store.slot_of(dense)
+        toks = self.store.gather_tokens(cand)
+        vals, valid = self.store.table.scan_column("example_id")
+        # dense index aligns with append order = scan order of valid rows
+        ids = np.asarray(vals)[np.asarray(valid)][dense]
+        from repro.core import joins
+        cols, v = joins.indexed_lookup(weight_table,
+                                       jnp.asarray(ids, jnp.int64),
+                                       max_matches=1)
+        w = np.where(np.asarray(v[:, 0]),
+                     np.asarray(cols["weight"][:, 0]), 1.0)
+        p = w / w.sum()
+        pick = rng.choice(len(cand), self.batch, replace=False, p=p)
+        self.cursor.step += 1
+        return {"tokens": toks[pick]}
+
+
+def synthetic_examples(rng, n: int, seq_len: int, vocab: int,
+                       id_base: int = 0):
+    """Host-side synthetic token source (stands in for Kafka/HDFS)."""
+    ids = np.arange(n, dtype=np.int64) + id_base
+    toks = rng.integers(1, vocab, (n, seq_len)).astype(np.int32)
+    return ids, toks

@@ -1,0 +1,120 @@
+"""ExampleStore — the training-data pipeline on the Indexed DataFrame.
+
+The paper's threat-detection / social-graph pattern is "data keeps arriving
+in fine-grained appends; queries must see it without a full reload".  The
+training analog: tokenized examples stream in (new crawl shards, RLHF
+rollouts), and the input pipeline must serve fresh batches without
+rebuilding the dataset.
+
+Structure (exactly the Indexed Batch RDD, §III-C):
+
+  * token buffers  — [num_batches, rows_per_batch, seq_len] int32 device
+                     arrays (the row batches; payload kept un-codec'd for
+                     zero-copy batch gathers)
+  * metadata table — IndexedTable keyed by example_id with (slot, length,
+                     weight) columns — the cTrie + backward pointers
+  * appends        — one MVCC append of metadata + one new token buffer;
+                     parent versions keep serving readers (Listing 2)
+
+``lookup`` (by example id) and ``metadata_join`` (example ↔ curriculum
+weight) are the paper's point-lookup / indexed-join run inside the input
+pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Schema, append, create_index, joins
+
+META_SCHEMA = Schema.of("example_id", example_id="int64", slot="int32",
+                        length="int32", weight="float32")
+
+
+@dataclasses.dataclass
+class ExampleStore:
+    seq_len: int
+    rows_per_batch: int = 1024
+    buffers: list = dataclasses.field(default_factory=list)  # [rpb, S] each
+    table: object = None
+    _slots: object = None        # np.int32 [num_examples] valid slot ids
+
+    # -- writes ------------------------------------------------------------
+    def append_examples(self, example_ids, tokens, weights=None):
+        """tokens [N, seq_len] int32; one fine-grained append (paper Fig 10).
+
+        Returns the new store version.
+        """
+        tokens = np.asarray(tokens, np.int32)
+        n = tokens.shape[0]
+        assert tokens.shape[1] == self.seq_len
+        lengths = (tokens != 0).sum(axis=1).astype(np.int32)
+        weights = (np.ones(n, np.float32) if weights is None
+                   else np.asarray(weights, np.float32))
+
+        # pack into fixed-capacity buffers (row batches); slot ids are
+        # buffer-capacity based, so each append starts on a fresh buffer
+        # (padding rows occupy dead slots, exactly like the paper's
+        # partially-filled row batches)
+        cap = self.rows_per_batch
+        slot_base = len(self.buffers) * cap
+        slots = np.arange(n, dtype=np.int32) + slot_base
+        pad = (-n) % cap
+        buf = np.pad(tokens, ((0, pad), (0, 0))).reshape(-1, cap,
+                                                         self.seq_len)
+        self.buffers.extend(jnp.asarray(b) for b in buf)
+        self._slots = slots if self._slots is None else \
+            np.concatenate([self._slots, slots])
+
+        cols = {"example_id": np.asarray(example_ids, np.int64),
+                "slot": slots, "length": lengths, "weight": weights}
+        if self.table is None:
+            self.table = create_index(cols, META_SCHEMA,
+                                      rows_per_batch=cap)
+        else:
+            self.table = append(self.table, cols)
+        return self.table.version
+
+    # -- reads ---------------------------------------------------------------
+    @property
+    def num_examples(self) -> int:
+        return 0 if self._slots is None else len(self._slots)
+
+    def slot_of(self, example_index) -> np.ndarray:
+        """Dense example index [0, num_examples) -> raw buffer slot."""
+        return self._slots[np.asarray(example_index)]
+
+    @property
+    def version(self) -> int:
+        return 0 if self.table is None else self.table.version
+
+    def gather_tokens(self, slots) -> jnp.ndarray:
+        """[B] slots -> [B, seq_len] tokens (one gather per touched buffer)."""
+        slots = jnp.asarray(slots, jnp.int32)
+        cap = self.rows_per_batch
+        stack = jnp.stack(self.buffers)                 # [NB, cap, S]
+        return stack[slots // cap, slots % cap]
+
+    def lookup(self, example_ids, max_matches: int = 1):
+        """Point lookup by id -> (tokens [Q, M, S], weight, valid)."""
+        cols, valid = joins.indexed_lookup(
+            self.table, jnp.asarray(example_ids, jnp.int64),
+            max_matches=max_matches)
+        toks = self.gather_tokens(jnp.maximum(cols["slot"], 0))
+        return toks, cols["weight"], valid
+
+    def metadata_join(self, probe_cols: dict, key: str,
+                      max_matches: int = 1):
+        """Indexed join against the metadata table (curriculum/dedup)."""
+        return joins.indexed_join(self.table, probe_cols, key,
+                                  max_matches=max_matches)
+
+    def index_overhead_bytes(self) -> int:
+        return self.table.index_nbytes() if self.table is not None else 0
+
+    def data_bytes(self) -> int:
+        return sum(int(b.size) * 4 for b in self.buffers)

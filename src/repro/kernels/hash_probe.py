@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the hash-index probe — the paper's hot path.
+
+The paper's Fig 1 observation is that the *probe* amortizes: the index is
+built once and probed millions of times (point lookups, join probes).  On a
+TPU the probe is a bucket gather + vector compare; this kernel keeps the
+bucket arrays resident in VMEM and streams query tiles through them.
+
+TPU adaptation notes (DESIGN.md §7):
+  * int64 keys are pre-split into (hi, lo) int32 planes — the TPU VPU has no
+    64-bit lanes; two int32 compares AND'd give the exact equality test.
+  * bucket ids are precomputed in the XLA wrapper (ops.py) — the splitmix
+    mix uses 64-bit multiplies which belong on the scalar/XLA side, not in
+    the vector kernel.
+  * the per-query bucket row load is a *scalar dynamic slice*
+    (``ref[pl.ds(b, 1)]``) — the same pattern production paged-attention
+    kernels use for page-table indirection; Mosaic pipelines these loads.
+  * slot resolution is branch-free: ``max(where(match, ptr, NULL))`` — valid
+    pointers are >= 0 and NULL is -1, so a vector max replaces the argmax/
+    select pair.
+
+VMEM budget: the table block is ``num_buckets * slots * 12`` bytes (hi, lo,
+ptr).  With the default per-shard sizing (DESIGN.md: ≥256-way sharding keeps
+shard-local distinct keys ≲ 2M) this is ≤ 96 MB; for bigger shards callers
+chunk the bucket axis at the ops.py level (grid over table chunks, combined
+with a second pass, since each query touches exactly one bucket).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QUERY_TILE = 256
+
+
+def _probe_kernel(bids_ref, qhi_ref, qlo_ref, khi_ref, klo_ref, ptr_ref,
+                  out_ref):
+    """One grid step: QUERY_TILE queries against the whole bucket table."""
+    null = jnp.array(-1, jnp.int32)
+
+    def body(j, _):
+        b = bids_ref[j]
+        row_hi = khi_ref[pl.ds(b, 1), :]        # [1, S]
+        row_lo = klo_ref[pl.ds(b, 1), :]
+        row_ptr = ptr_ref[pl.ds(b, 1), :]
+        match = (row_hi == qhi_ref[j]) & (row_lo == qlo_ref[j])
+        hit = jnp.max(jnp.where(match, row_ptr, null))
+        out_ref[j] = hit
+        return 0
+
+    jax.lax.fori_loop(0, QUERY_TILE, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def probe_tiles(bucket_ids, q_hi, q_lo, keys_hi, keys_lo, ptrs, *,
+                interpret: bool = True):
+    """[Q] bucket ids + key planes against [NB, S] table planes -> [Q] ptrs.
+
+    Q must be a multiple of QUERY_TILE (ops.py pads).
+    """
+    q = bucket_ids.shape[0]
+    assert q % QUERY_TILE == 0, q
+    nb, s = keys_hi.shape
+    grid = (q // QUERY_TILE,)
+
+    qspec = pl.BlockSpec((QUERY_TILE,), lambda i: (i,))
+    tspec = pl.BlockSpec((nb, s), lambda i: (0, 0))   # table resident in VMEM
+
+    return pl.pallas_call(
+        _probe_kernel,
+        grid=grid,
+        in_specs=[qspec, qspec, qspec, tspec, tspec, tspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
+        interpret=interpret,
+    )(bucket_ids, q_hi, q_lo, keys_hi, keys_lo, ptrs)

@@ -1,0 +1,55 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``probe`` is a drop-in accelerated replacement for
+``repro.core.hashindex.probe`` — same signature, same results (tests sweep
+both).  The wrapper owns everything that does not belong in the vector
+kernel: bucket-id hashing (64-bit scalar math), int64 -> (hi, lo) plane
+splitting, tile padding, and EMPTY-key masking.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.hashindex import EMPTY_KEY, HashIndex
+from repro.core.pointers import NULL_PTR
+from repro.kernels import hash_probe
+from repro.kernels import decode_attention as _da
+
+
+def _split64(x):
+    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.int64), jnp.uint64)
+    lo = jax.lax.bitcast_convert_type(
+        (bits & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32), jnp.int32)
+    hi = jax.lax.bitcast_convert_type(
+        (bits >> jnp.uint64(32)).astype(jnp.uint32), jnp.int32)
+    return hi, lo
+
+
+def probe(index: HashIndex, query_keys, *, interpret: bool = True):
+    """Latest row id per query key — Pallas-accelerated probe."""
+    q = jnp.asarray(query_keys, jnp.int64)
+    nq = q.shape[0]
+    tile = hash_probe.QUERY_TILE
+    pad = (-nq) % tile
+    qp = jnp.pad(q, (0, pad), constant_values=int(EMPTY_KEY))
+
+    bids = hashing.bucket_hash(qp, index.num_buckets)
+    qhi, qlo = _split64(qp)
+    khi, klo = _split64(index.bucket_keys)
+
+    out = hash_probe.probe_tiles(bids, qhi, qlo, khi, klo,
+                                 index.bucket_ptrs, interpret=interpret)
+    out = out[:nq]
+    # EMPTY query keys can never match (EMPTY slots hold NULL ptrs), but be
+    # explicit for defense in depth:
+    return jnp.where(q == EMPTY_KEY, NULL_PTR, out)
+
+
+def decode_attention(q, k_pages, v_pages, page_table, lengths, scale, *,
+                     interpret: bool = True):
+    """Paged GQA flash decode attention (serving hot path)."""
+    return _da.decode_paged(q, k_pages, v_pages, page_table, lengths, scale,
+                            interpret=interpret)

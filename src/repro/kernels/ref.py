@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *semantic contract*; kernel tests sweep shapes/dtypes
+and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NULL = jnp.int32(-1)
+
+
+def probe_ref(bucket_ids, q_hi, q_lo, keys_hi, keys_lo, ptrs):
+    """Oracle for hash_probe.probe_tiles: one [Q, S] gather + compare."""
+    row_hi = keys_hi[bucket_ids]           # [Q, S]
+    row_lo = keys_lo[bucket_ids]
+    row_ptr = ptrs[bucket_ids]
+    match = (row_hi == q_hi[:, None]) & (row_lo == q_lo[:, None])
+    return jnp.max(jnp.where(match, row_ptr, NULL), axis=1)
+
+
+def decode_attention_ref(q, k_pages, v_pages, page_table, lengths, scale):
+    """Oracle for decode_attention: GQA flash decode over paged KV.
+
+    q          : [B, Hq, D]
+    k_pages    : [P, page, Hkv, D]   (pages = the indexed cache's row batches)
+    v_pages    : [P, page, Hkv, D]
+    page_table : [B, max_pages] int32  (NULL = -1 padding)
+    lengths    : [B] int32  (total valid KV per sequence)
+    returns    : [B, Hq, D] float32
+    """
+    b, hq, d = q.shape
+    p, page, hkv, _ = k_pages.shape
+    groups = hq // hkv
+    max_pages = page_table.shape[1]
+
+    # materialize per-sequence KV [B, max_pages*page, Hkv, D]
+    safe = jnp.maximum(page_table, 0)
+    k = k_pages[safe].reshape(b, max_pages * page, hkv, d)
+    v = v_pages[safe].reshape(b, max_pages * page, hkv, d)
+    pos = jnp.arange(max_pages * page)[None, :]
+    mask = pos < lengths[:, None]
+
+    qg = q.reshape(b, hkv, groups, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, kf) * jnp.float32(scale)
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, vf)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,12 @@
+"""launch — meshes, sharding policies, dry-run, drivers, roofline.
+
+  mesh.py       make_production_mesh (single/multi-pod), hw constants
+  shardings.py  param/optimizer(ZeRO)/batch/cache sharding policies
+  dryrun.py     lower+compile every (arch x shape x mesh) cell (script;
+                sets XLA_FLAGS before jax init — import via subprocess)
+  hlo.py        post-SPMD HLO parse: collectives, dot-FLOPs, HBM traffic,
+                while-trip-count corrected
+  roofline.py   three-term roofline from dry-run records
+  train.py      training driver (indexed data pipeline + ckpt/resume)
+  serve.py      serving driver (indexed prefix cache + paged decode)
+"""

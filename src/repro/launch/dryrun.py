@@ -1,0 +1,306 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count="
+                      + os.environ.get("DRYRUN_DEVICES", "512"))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device
+count on first init.  Override the placeholder device count with
+DRYRUN_DEVICES (subprocess tests use 4/8).
+
+Per cell this script:
+  1. builds the full config and ShapeDtypeStruct inputs (no allocation),
+  2. jits the right step (train_step / prefill / serve_step) with the
+     sharding policy from launch/shardings.py,
+  3. ``.lower().compile()`` — failure here (sharding mismatch, OOM, bad
+     collective) is a bug in the system,
+  4. records memory_analysis / cost_analysis / collective inventory as a
+     JSON line for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all --out dryrun.jsonl
+  python -m repro.launch.dryrun --all --multi-pod --out dryrun_mp.jsonl
+  DRYRUN_DEVICES=4 python -m repro.launch.dryrun --arch X --smoke \
+      --mesh 2x2 --shape train_4k --seq 64 --batch 4
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, applicable, get_config,
+                           get_smoke)
+from repro.configs import shapes as shp
+from repro.launch import hlo as hlo_mod
+from repro.launch import shardings as shard
+from repro.launch.mesh import (data_axes, make_mesh_from_spec,
+                               make_production_mesh)
+from repro.models import sharding as logical
+from repro.models import transformer as tf
+from repro.train import optim
+from repro.train.step import init_params, make_train_step
+
+
+def _rules_for(mesh, shape_name: str, policy: str = "tp"):
+    multi = "pod" in mesh.axis_names
+    if policy == "dp":
+        return logical.rules_pure_dp(multi_pod=multi)
+    base = (logical.rules_multi_pod() if multi
+            else logical.rules_single_pod())
+    if shape_name == "long_500k":
+        return logical.rules_seq_parallel(base)
+    if policy == "sp":
+        return logical.rules_megatron_sp(base)
+    return base
+
+
+def _param_counts(params_shapes, cfg) -> dict:
+    total = sum(x.size for x in jax.tree.leaves(params_shapes))
+    routed = 0
+    if cfg.moe is not None:
+        def visit(path, leaf):
+            nonlocal routed
+            name = shard._leaf_name(path)
+            if name in ("w_gate", "w_up", "w_down") and leaf.ndim >= 3 \
+                    and not shard._under(path, "mlp") \
+                    and leaf.shape[-3] == cfg.moe.num_experts:
+                routed += leaf.size
+        jax.tree_util.tree_map_with_path(visit, params_shapes)
+    m = cfg.moe
+    active = total - routed + (routed * m.top_k // m.num_experts
+                               if m else 0)
+    return {"total": int(total), "active": int(active),
+            "routed_expert": int(routed)}
+
+
+def lower_cell(cfg, shape_name: str, mesh, *, remat: str = "full",
+               microbatches: int = 1, seq=None, batch=None,
+               moment_dtype: str = "bfloat16", fsdp: bool = False,
+               policy: str = "tp", moe_combine_dtype: str | None = None,
+               kv_shard: str = "default"):
+    """Build + lower + compile one cell.  Returns (compiled, record).
+
+    Hillclimb knobs (§Perf):
+      policy            'tp' (baseline) | 'sp' (Megatron sequence-parallel
+                        residual stream) | 'dp' (pure data parallel —
+                        small-model policy, params replicated)
+      moe_combine_dtype 'bfloat16' halves the EP combine psum bytes
+      kv_shard          'model' shards decode KV sequence over the model
+                        axis (memory/16, tiny psum at decode)
+    """
+    from repro.models import moe as moe_mod
+    moe_mod.COMBINE_DTYPE = (jnp.bfloat16
+                             if moe_combine_dtype == "bfloat16" else None)
+    sspec = SHAPES[shape_name]
+    if seq or batch:
+        import dataclasses as dc
+        sspec = dc.replace(sspec, seq=seq or sspec.seq,
+                           batch=batch or sspec.batch)
+    rules = _rules_for(mesh, shape_name, policy)
+    params_shapes = jax.eval_shape(partial(init_params, cfg),
+                                   jax.random.PRNGKey(0))
+    dp_axes = mesh.axis_names if policy == "dp" else None
+    if policy == "dp":
+        pshard = jax.tree.map(
+            lambda l: jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(*([None] * l.ndim))),
+            params_shapes)
+    else:
+        pshard = shard.params_shardings(params_shapes, mesh, fsdp=fsdp)
+    counts = _param_counts(params_shapes, cfg)
+
+    with mesh, logical.logical_sharding(mesh, rules):
+        if sspec.kind == "train":
+            ocfg = optim.AdamWConfig(moment_dtype=moment_dtype)
+            opt_shapes = jax.eval_shape(partial(optim.init_state, ocfg),
+                                        params_shapes)
+            oshard = shard.opt_state_shardings(opt_shapes, params_shapes,
+                                               mesh,
+                                               dp_only=(policy == "dp"))
+            batch_shapes = shp.batch_inputs(cfg, sspec)
+            bshard = shard.batch_shardings(batch_shapes, mesh,
+                                           axes=dp_axes)
+            step = make_train_step(cfg, ocfg, microbatches=microbatches,
+                                   remat=remat)
+            jitted = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shapes, opt_shapes, batch_shapes)
+        elif sspec.kind == "prefill":
+            batch_shapes = shp.batch_inputs(cfg, sspec)
+            bshard = shard.batch_shardings(batch_shapes, mesh,
+                                           axes=dp_axes)
+            if cfg.encoder_decoder:
+                from repro.models import whisper as wh
+
+                def fn(params, batch):
+                    return wh.prefill(params, cfg, batch["frames"],
+                                      batch["tokens"])
+            elif cfg.family == "vlm":
+                def fn(params, batch):
+                    return tf.prefill(params, cfg, batch["tokens"],
+                                      patch_emb=batch["patch_emb"],
+                                      mrope_positions=batch[
+                                          "mrope_positions"])
+            else:
+                def fn(params, batch):
+                    return tf.prefill(params, cfg, batch["tokens"])
+            jitted = jax.jit(fn, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(params_shapes, batch_shapes)
+        else:  # decode
+            from repro.serving.engine import make_serve_step
+            dec = shp.decode_inputs(cfg, sspec)
+            seq_shard = (shape_name == "long_500k"
+                         or kv_shard == "model")
+            cshard = shard.cache_shardings(
+                dec["caches"], mesh, seq_shard=seq_shard,
+                seq_axis="model" if kv_shard == "model" else None)
+            tshard = shard.batch_shardings(
+                {"last_tok": dec["last_tok"]}, mesh,
+                axes=dp_axes)["last_tok"]
+            step = make_serve_step(cfg)
+            jitted = jax.jit(step, in_shardings=(pshard, cshard, tshard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_shapes, dec["caches"],
+                                   dec["last_tok"])
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_rec = {k: int(getattr(mem, k))
+               for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes")
+               if hasattr(mem, k)}
+    cost = compiled.cost_analysis() or {}
+    cost_rec = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "utilization operand 0 {}", "bytes accessed output {}")}
+    text = compiled.as_text()
+    ana = hlo_mod.analyze(text, total_devices=mesh.devices.size)
+    record = {
+        "arch": cfg.name, "shape": shape_name, "kind": sspec.kind,
+        "seq": sspec.seq, "batch": sspec.batch,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "params": counts, "memory": mem_rec, "cost": cost_rec,
+        "collectives": ana["collectives"],
+        "collective_wire_bytes": ana["collective_wire_bytes"],
+        "dot_flops": ana["dot_flops"],
+        "hbm_bytes": ana["hbm_bytes"],
+        "compile_seconds": round(compile_s, 2),
+        "hlo_ops": ana["op_histogram"],
+        "remat": remat, "microbatches": microbatches, "fsdp": fsdp,
+        "policy": policy, "moe_combine_dtype": moe_combine_dtype,
+        "kv_shard": kv_shard,
+        "ok": True,
+    }
+    return compiled, record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", help="override, e.g. 2x2 / 1x2x2")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (subprocess tests)")
+    ap.add_argument("--seq", type=int, help="override shape seq")
+    ap.add_argument("--batch", type=int, help="override shape batch")
+    ap.add_argument("--remat", default="full",
+                    choices=("none", "dots", "full", "outs"))
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moment-dtype", default="bfloat16",
+                    choices=("float32", "bfloat16"))
+    ap.add_argument("--fsdp", action="store_true",
+                    help="shard params over the data super-axis too "
+                         "(ZeRO-3/FSDP; required for 671B-class configs)")
+    ap.add_argument("--policy", default="tp", choices=("tp", "sp", "dp"))
+    ap.add_argument("--moe-combine-dtype", default=None,
+                    choices=(None, "float32", "bfloat16"))
+    ap.add_argument("--kv-shard", default="default",
+                    choices=("default", "model"))
+    ap.add_argument("--save-hlo", metavar="DIR",
+                    help="gzip the optimized per-device HLO per cell "
+                         "(re-analyze later without recompiling)")
+    ap.add_argument("--out")
+    args = ap.parse_args(argv)
+
+    mesh = (make_mesh_from_spec(args.mesh) if args.mesh
+            else make_production_mesh(multi_pod=args.multi_pod))
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            cfg_probe = get_config(a)
+            for s in SHAPES:
+                if applicable(cfg_probe, s):
+                    cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    out_f = open(args.out, "a") if args.out else None
+    failures = 0
+    for arch, shape_name in cells:
+        cfg = get_smoke(arch) if args.smoke else get_config(arch)
+        print(f"=== {arch} x {shape_name} "
+              f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} ===",
+              flush=True)
+        try:
+            t0 = time.time()
+            compiled, rec = lower_cell(
+                cfg, shape_name, mesh, remat=args.remat,
+                microbatches=args.microbatches, seq=args.seq,
+                batch=args.batch, moment_dtype=args.moment_dtype,
+                fsdp=args.fsdp, policy=args.policy,
+                moe_combine_dtype=args.moe_combine_dtype,
+                kv_shard=args.kv_shard)
+            print(f"  ok in {time.time() - t0:.1f}s  mem={rec['memory']}\n"
+                  f"  dot_flops={rec['dot_flops']:.3e}  "
+                  f"wire_bytes={rec['collective_wire_bytes']:.3e}",
+                  flush=True)
+            print(f"  collectives: {rec['collectives']}", flush=True)
+            if args.save_hlo:
+                import gzip
+                os.makedirs(args.save_hlo, exist_ok=True)
+                tag = (f"{cfg.name}_{shape_name}_"
+                       f"{'x'.join(str(v) for v in mesh.devices.shape)}"
+                       f"_{args.policy}")
+                if args.kv_shard != "default":
+                    tag += f"_kv{args.kv_shard}"
+                if args.microbatches != 1:
+                    tag += f"_mb{args.microbatches}"
+                if args.moe_combine_dtype:
+                    tag += f"_mc{args.moe_combine_dtype}"
+                if args.remat != "full":
+                    tag += f"_{args.remat}"
+                with gzip.open(os.path.join(args.save_hlo,
+                                            tag + ".hlo.gz"), "wt") as f:
+                    f.write(compiled.as_text())
+                rec["hlo_file"] = tag + ".hlo.gz"
+        except Exception as e:
+            failures += 1
+            rec = {"arch": cfg.name, "shape": shape_name, "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            print(f"  FAIL: {rec['error']}", flush=True)
+        if out_f:
+            out_f.write(json.dumps(rec) + "\n")
+            out_f.flush()
+    if out_f:
+        out_f.close()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,321 @@
+"""Post-SPMD HLO analysis: collectives + dot-FLOPs with while-loop
+trip-count multipliers — the roofline's measurement layer.
+
+``compiled.as_text()`` is the partitioned, optimized per-device module, so
+collectives are materialized there.  Two XLA facts shape this parser:
+
+  * CPU-backend HLO references operands by *name* (``all-reduce(%x)``), so
+    sizes come from each instruction's declared return type, resolved
+    through a per-module symbol table.
+  * ``HloCostAnalysis`` (and hence ``compiled.cost_analysis()``) counts a
+    ``while`` body ONCE — but every layer scan / microbatch loop is a
+    while.  We recover true per-step totals by parsing each while's trip
+    count from its condition computation and propagating multipliers over
+    the call graph (ENTRY -> fusions/calls -> while bodies, nested scans
+    compose multiplicatively).
+
+Outputs:
+  ``analyze(text)`` -> {
+     "collectives": {kind: {count, bytes}},   # bytes = output-shape bytes
+     "collective_wire_bytes": float,          # ring-model wire bytes
+     "dot_flops": float,                      # 2 * prod(out) * contracted
+     "hbm_bytes": float,                      # materialized operand+output
+                                              # traffic at top-level-instr
+                                              # granularity (fusion
+                                              # internals excluded), trip-
+                                              # count multiplied
+     "op_histogram": {...}
+  }
+
+Wire-byte model per op (g = participants in its replica group):
+  all-reduce: 2 (g-1)/g * size     all-gather: (g-1)/g * size(out)
+  reduce-scatter: (g-1)/g * size(in) ~= (g-1) * size(out)
+  all-to-all: (g-1)/g * size       collective-permute: size
+"""
+
+from __future__ import annotations
+
+import math
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}\/* ]+?))\s*"
+    r"([\w\-]+)\((.*)$")
+_TYPE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_ATTR_CALLS = re.compile(r"\b(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for d, dims in _TYPE.findall(type_str):
+        if d not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for x in dims.split(","):
+            if x:
+                n *= int(x)
+        total += n * _DTYPE_BYTES[d]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _TYPE.search(type_str)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+class _Instr:
+    __slots__ = ("name", "ret", "op", "rest")
+
+    def __init__(self, name, ret, op, rest):
+        self.name, self.ret, self.op, self.rest = name, ret, op, rest
+
+
+def _parse_computations(text: str) -> dict:
+    comps, cur, name = {}, None, None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line.startswith(" ") and "->" in line and "{" in line:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                name = m.group(1)
+                cur = []
+                comps[name] = cur
+                if line.strip().startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                    comps["__entry_name__"] = name
+                continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            cur.append(_Instr(*m.groups()))
+    return comps
+
+
+def _group_size(rest: str, total_devices: int | None) -> int:
+    m = _GROUPS.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices or 1
+
+
+def _while_trip(comps, cond_name, symtab) -> int:
+    """Trip count from the condition computation.
+
+    Scan-lowered conditions are ``i < constant(N)``; the compare may be
+    wrapped in a kLoop fusion, but the bound constant is defined in the
+    condition computation itself — take the max integer constant there.
+    """
+    best = 0
+    for ins in comps.get(cond_name, ()):
+        c = symtab.get((cond_name, ins.name))
+        if c is not None:
+            best = max(best, c)
+    return best or 1
+
+
+def analyze(text: str, total_devices: int | None = None) -> dict:
+    comps = _parse_computations(text)
+    entry = comps.get("__entry_name__")
+    if entry is None:
+        return {"collectives": {}, "collective_wire_bytes": 0.0,
+                "dot_flops": 0.0, "op_histogram": {}}
+
+    # constants (for while trip counts) and return types per computation
+    consts: dict = {}
+    rets: dict = {}
+    for cname, instrs in comps.items():
+        if cname.startswith("__"):
+            continue
+        for ins in instrs:
+            rets[(cname, ins.name)] = ins.ret
+            if ins.op == "constant":
+                m = re.match(r"(\d+)\)", ins.rest)
+                if m:
+                    consts[(cname, ins.name)] = int(m.group(1))
+
+    # call-graph multiplier propagation (memoized DFS)
+    mult: dict = {}
+
+    def visit(cname: str, m: float):
+        mult[cname] = mult.get(cname, 0.0) + m
+        for ins in comps.get(cname, ()):
+            if ins.op == "while":
+                names = _ATTR_CALLS.findall(ins.rest)
+                body = cond = None
+                for attr, nm in re.findall(
+                        r"(body|condition)=%?([\w.\-]+)", ins.rest):
+                    if attr == "body":
+                        body = nm
+                    else:
+                        cond = nm
+                trip = _while_trip(comps, cond, consts) if cond else 1
+                if body:
+                    visit(body, m * trip)
+                if cond:
+                    visit(cond, m * (trip + 1))
+            else:
+                bm = _BRANCHES.search(ins.rest)
+                if bm:
+                    for nm in bm.group(1).split(","):
+                        visit(nm.strip().lstrip("%"), m)
+                for nm in _ATTR_CALLS.findall(ins.rest):
+                    visit(nm, m)
+
+    visit(entry, 1.0)
+
+    coll = {k: {"count": 0.0, "bytes": 0.0} for k in _KINDS}
+    wire = 0.0
+    dot_flops = 0.0
+    hbm_bytes = 0.0
+    histogram: dict = {}
+
+    # classify fusion computations: pure-elementwise kLoop fusions fuse
+    # into their consumers on the TPU backend -> charge output only
+    _HEAVY = {"dot", "convolution", "reduce", "reduce-window", "scatter",
+              "gather", "sort", "dynamic-slice", "dynamic-update-slice"}
+    _BOOKKEEP = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "iota", "copy", "broadcast", "reshape",
+                 "transpose", "slice", "pad", "concatenate"}
+    fusion_ew: dict = {}
+    for cname, instrs in comps.items():
+        if cname.startswith("__"):
+            continue
+        fusion_ew[cname] = all(
+            ins.op not in _HEAVY for ins in instrs)
+    # ops that move no HBM traffic themselves (SSA bookkeeping / aliases /
+    # control flow whose bodies are counted separately)
+    _NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "conditional", "call",
+                   "after-all", "partition-id", "replica-id", "iota"}
+    # in-place / sliced access: traffic is the *slice*, not the buffer.
+    # DUS aliases its big operand (XLA buffer-assigns in place): count
+    # 2x the update (smallest non-scalar operand); slicing ops count 2x
+    # their output.  Without this, a scan writing one layer's [16,4096,D]
+    # into a [L,16,4096,D] stack would be charged the whole stack x L.
+    _INPLACE = ("dynamic-update-slice", "scatter")
+    _SLICED = ("dynamic-slice", "gather", "slice")
+    # elementwise / layout ops: the TPU backend fuses these into their
+    # consumers (the CPU module this text comes from fuses less
+    # aggressively), so charging operand+output would overstate TPU HBM
+    # traffic several-fold (e.g. the exp/where/mul chain around flash
+    # logits).  Charge one materialization (output bytes).
+    _EW = {"add", "subtract", "multiply", "divide", "exponential", "exp",
+           "tanh", "maximum", "minimum", "select", "compare", "convert",
+           "and", "or", "xor", "not", "negate", "abs", "rsqrt", "sqrt",
+           "power", "log", "floor", "ceil", "clamp", "reduce-precision",
+           "broadcast", "reshape", "transpose", "pad", "concatenate",
+           "reverse", "sign", "cosine", "sine", "logistic",
+           "shift-left", "shift-right-logical", "shift-right-arithmetic",
+           "remainder", "is-finite", "expm1", "log1p", "atan2"}
+
+    for cname, instrs in comps.items():
+        if cname.startswith("__"):
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ins in instrs:
+            histogram[ins.op] = histogram.get(ins.op, 0) + m
+            if ins.op not in _NO_TRAFFIC and not ins.op.endswith("-done"):
+                key = ins.op + ins.name  # fusion names carry the pattern
+                opd_bytes = []
+                for opd in re.findall(r"%([\w.\-]+)", ins.rest.split(
+                        ", metadata=")[0].split(", calls=")[0]):
+                    t = rets.get((cname, opd))
+                    if t:
+                        opd_bytes.append(_type_bytes(t))
+                ew_fusion = False
+                if ins.op == "fusion":
+                    called = _ATTR_CALLS.findall(ins.rest)
+                    ew_fusion = bool(called) and all(
+                        fusion_ew.get(c, False) for c in called)
+                if any(p in key for p in _INPLACE):
+                    upd = [b for b in opd_bytes if b > 128]
+                    nb = 2 * (min(upd) if upd else _type_bytes(ins.ret))
+                elif any(p in key for p in _SLICED):
+                    nb = 2 * _type_bytes(ins.ret)
+                elif ins.op in _EW or ew_fusion:
+                    nb = _type_bytes(ins.ret)
+                else:
+                    nb = _type_bytes(ins.ret) + sum(opd_bytes)
+                hbm_bytes += m * nb
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in _KINDS and not ins.op.endswith("-done"):
+                nbytes = _type_bytes(ins.ret)
+                g = _group_size(ins.rest, total_devices)
+                coll[base]["count"] += m
+                coll[base]["bytes"] += m * nbytes
+                if base == "all-reduce":
+                    wire += m * 2 * (g - 1) / max(g, 1) * nbytes
+                elif base == "all-gather":
+                    wire += m * (g - 1) / max(g, 1) * nbytes
+                elif base == "reduce-scatter":
+                    wire += m * (g - 1) * nbytes
+                elif base == "all-to-all":
+                    wire += m * (g - 1) / max(g, 1) * nbytes
+                else:  # collective-permute
+                    wire += m * nbytes
+            elif base in ("dot", "convolution"):
+                out_elems = 1
+                for d in _shape_dims(ins.ret):
+                    out_elems *= d
+                # contracted size: product of lhs contracting dims
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                                  ins.rest)
+                lhs_shape = None
+                opds = re.findall(r"%([\w.\-]+)", ins.rest)
+                if opds:
+                    lhs_t = rets.get((cname, opds[0]))
+                    if lhs_t:
+                        lhs_shape = _shape_dims(lhs_t)
+                contracted = 1
+                if cdims and lhs_shape:
+                    for i in cdims.group(1).split(","):
+                        if i and int(i) < len(lhs_shape):
+                            contracted *= lhs_shape[int(i)]
+                dot_flops += m * 2 * out_elems * contracted
+
+    coll_out = {k: {"count": round(v["count"], 1), "bytes": v["bytes"]}
+                for k, v in coll.items() if v["count"]}
+    return {
+        "collectives": coll_out,
+        "collective_wire_bytes": wire,
+        "dot_flops": dot_flops,
+        "hbm_bytes": hbm_bytes,
+        "op_histogram": dict(sorted(histogram.items(),
+                                    key=lambda kv: -kv[1])[:30]),
+    }
+
+
+def collective_stats(text: str) -> dict:
+    """Back-compat shim: collective inventory only."""
+    a = analyze(text)
+    out = dict(a["collectives"])
+    out["total_operand_bytes"] = sum(v["bytes"] for v in
+                                     a["collectives"].values())
+    out["wire_bytes"] = a["collective_wire_bytes"]
+    return out
+
+
+def op_histogram(text: str, top: int = 25) -> dict:
+    return dict(list(analyze(text)["op_histogram"].items())[:top])

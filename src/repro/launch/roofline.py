@@ -1,0 +1,163 @@
+"""Roofline terms per (arch × shape × mesh) from dry-run records.
+
+    compute term    = HLO_dot_FLOPs_per_device / peak_FLOP/s
+    memory term     = HBM_traffic_per_device   / HBM_bw
+    collective term = wire_bytes_per_device    / ICI_bw
+
+All three numerators come from launch/hlo.py's trip-count-corrected parse
+of the compiled per-device module (the HLO shapes are post-partitioning,
+so "per device" is inherent).  MODEL_FLOPS uses the assignment's formula:
+6·N·D (train, N = active params) / 2·N·D (prefill) / decode adds the KV
+read term 4·B·S·Σ_attn(H·effective head dim).
+
+Usage:
+  python -m repro.launch.roofline dryrun.jsonl [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.launch.mesh import hardware_constants
+
+HW = hardware_constants()
+
+
+def _attn_kv_flops_per_token(cfg, s: int) -> float:
+    """Decode-time attention FLOPs per token (whole KV read), windowed
+    layers capped at their window."""
+    from repro.models import transformer as tf
+    total = 0.0
+    for kind in tf.layer_kinds(cfg):
+        s_eff = min(s, kind.window) if kind.window else s
+        if kind.attn == "gqa":
+            total += 4 * cfg.num_heads * cfg.head_dim * s_eff
+        elif kind.attn == "mla":
+            m = cfg.mla
+            total += (2 * cfg.num_heads * (m.kv_lora_rank
+                                           + m.qk_rope_head_dim)
+                      + 2 * cfg.num_heads * m.kv_lora_rank) * s_eff
+        # ssm: O(1) state update, no KV term
+    if cfg.encoder_decoder:
+        # decoder self (s) + cross (encoder_seq)
+        total += 4 * cfg.num_heads * cfg.head_dim * cfg.num_layers \
+            * cfg.encoder_seq
+    return total
+
+
+def model_flops(record: dict, cfg=None) -> float:
+    """Global useful FLOPs for the cell (assignment formulas)."""
+    n = record["params"]["active"]
+    b, s = record["batch"], record["seq"]
+    kind = record["kind"]
+    if kind == "train":
+        return 6.0 * n * b * s
+    if kind == "prefill":
+        return 2.0 * n * b * s
+    # decode: one token per sequence + KV-cache read compute
+    kv = _attn_kv_flops_per_token(cfg, s) * b if cfg is not None else 0.0
+    return 2.0 * n * b + kv
+
+
+def terms(record: dict, cfg=None) -> dict:
+    """Three roofline terms.  The memory term is a RANGE:
+
+      memory_lo — from ``memory_analysis``: arguments read once + outputs
+                  written once + peak temp touched twice.  Optimistic:
+                  assumes perfect consumer fusion (every live byte moves
+                  ~twice) — close to what a fused TPU lowering achieves.
+      memory_hi — from the HLO instruction sum (trip-count-corrected):
+                  every materialized intermediate read+written at the
+                  *compiled module's* fusion granularity.  Pessimistic on
+                  TPU (the CPU backend fuses less), exact for this module.
+
+    The truth lies between; both move together under real optimizations,
+    so §Perf tracks both.  ``memory_s`` (dominance / fraction) uses the
+    geometric mean of the bounds.
+    """
+    chips = 1
+    for v in record["mesh"].values():
+        chips *= v
+    compute = record["dot_flops"] / HW["peak_flops_bf16"]
+    mem = record.get("memory", {})
+    lo_bytes = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0)
+                + 2 * mem.get("temp_size_in_bytes", 0))
+    memory_lo = lo_bytes / HW["hbm_bandwidth"]
+    memory_hi = record["hbm_bytes"] / HW["hbm_bandwidth"]
+    memory = (memory_lo * memory_hi) ** 0.5 if memory_lo and memory_hi \
+        else max(memory_lo, memory_hi)
+    collective = record["collective_wire_bytes"] / HW["ici_bandwidth"]
+    dominant = max(
+        (("compute", compute), ("memory", memory),
+         ("collective", collective)), key=lambda kv: kv[1])[0]
+    mf = model_flops(record, cfg)
+    hlo_total = record["dot_flops"] * chips
+    return {
+        "arch": record["arch"], "shape": record["shape"],
+        "chips": chips,
+        "compute_s": compute, "memory_s": memory,
+        "memory_lo_s": memory_lo, "memory_hi_s": memory_hi,
+        "collective_s": collective, "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": (mf / hlo_total) if hlo_total else 0.0,
+        "roofline_fraction": (
+            compute / max(compute, memory, collective)
+            if max(compute, memory, collective) else 0.0),
+        "step_bound_s": max(compute, memory, collective),
+    }
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | chips | compute | memory (lo–hi) | "
+           "collective | dominant | useful ratio |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} | "
+            f"{_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_lo_s'])}–{_fmt_s(r['memory_hi_s'])} | "
+            f"{_fmt_s(r['collective_s'])} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    from repro.configs import REGISTRY
+    by_cell = {}
+    with open(args.jsonl) as f:
+        for line in f:
+            rec = json.loads(line)
+            if not rec.get("ok"):
+                continue
+            by_cell[(rec["arch"], rec["shape"])] = rec  # last record wins
+    rows = []
+    for rec in by_cell.values():
+        arch = rec["arch"].removesuffix("-smoke")
+        cfg = REGISTRY[arch].full() if arch in REGISTRY else None
+        rows.append(terms(rec, cfg))
+    if args.md:
+        print(to_markdown(rows))
+    else:
+        for r in rows:
+            print(json.dumps(r))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

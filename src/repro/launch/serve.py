@@ -1,0 +1,58 @@
+"""Serving launcher: batched decode with the indexed prefix/KV cache.
+
+Smoke-scale real run on CPU (the Engine admits requests, reuses cached
+prefix pages via the paper's point lookup, decodes with the paged Pallas
+kernel in interpret mode).  Prints the prefix-cache hit statistics — the
+paper's Fig 1 amortization argument, measured on serving.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.serving import Engine, Request
+from repro.train.step import init_params
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen1.5-4b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--shared-prefix", type=int, default=32,
+                    help="tokens shared across requests (cache hits)")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, num_pages=512, page=16)
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size, args.shared_prefix)
+    reqs = []
+    for i in range(args.requests):
+        tail = rng.integers(1, cfg.vocab_size,
+                            args.prompt_len - args.shared_prefix)
+        reqs.append(Request(seq_id=i,
+                            prompt=np.concatenate([shared, tail])
+                            .astype(np.int32)))
+    t0 = time.time()
+    eng.run(reqs, steps=args.steps)
+    dt = time.time() - t0
+    print(f"{args.requests} requests x {args.steps} tokens in {dt:.1f}s")
+    print("engine stats:", eng.stats)
+    print("prefix-cache index overhead:",
+          eng.cache.memory_overhead_bytes(), "bytes")
+    for r in reqs[:3]:
+        print(f"  req {r.seq_id}: {r.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

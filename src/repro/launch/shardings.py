@@ -1,0 +1,223 @@
+"""Parameter / optimizer / batch / cache sharding policies.
+
+Name-based rules over pytree paths — the policy layer DESIGN.md §6
+describes.  Everything degrades gracefully: an axis is sharded over a mesh
+axis only when divisible (small-arch caveat: 8-head models cannot split
+16-way; the largest divisible dim gets the axis instead, and the roofline
+discussion records the imbalance).
+
+Policies:
+  * params: TP over 'model' (heads / ff / vocab / experts), replicated over
+    data axes.
+  * optimizer moments: params policy + ZeRO over the data super-axis on the
+    largest still-unsharded divisible dim.
+  * batch: leading batch dim over the data super-axis.
+  * decode caches: batch over data, kv-heads over model when divisible;
+    ``seq_shard=True`` (long-context, batch=1) moves the KV sequence dim
+    onto the data axis instead (sequence-parallel cache).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _div(n: int, mesh, axis) -> bool:
+    if axis is None:
+        return False
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return n > 0 and n % size == 0
+
+
+def _maybe(n: int, mesh, axis):
+    return axis if _div(n, mesh, axis) else None
+
+
+# --- params ------------------------------------------------------------------
+
+# last-dim-sharded matmul weights (column parallel)
+_COL = ("wq", "wk", "wv", "wq_b", "wkv_b", "w_gate", "w_up", "w_in",
+        "shared_gate", "shared_up", "b_in", "bq", "bk", "bv", "proj")
+# second-to-last-dim-sharded (row parallel)
+_ROW = ("wo", "w_down", "w_out", "shared_down", "b_out")
+# fully replicated small tensors
+_REP = ("router", "router_bias", "conv_w", "conv_b", "A_log", "D",
+        "dt_bias", "norm", "ln1", "ln2", "ln_x", "q_norm", "k_norm",
+        "q_a_norm", "kv_a_norm", "final_norm", "norm_h", "norm_e",
+        "wq_a", "wkv_a", "pos_dec", "w", "b")
+
+
+def _leaf_name(path) -> str:
+    names = [p.key for p in path if hasattr(p, "key")]
+    return names[-1] if names else ""
+
+
+def _under(path, name: str) -> bool:
+    return any(getattr(p, "key", None) == name for p in path)
+
+
+def param_spec(path, leaf, mesh) -> P:
+    name = _leaf_name(path)
+    nd = leaf.ndim
+    if name == "embed":
+        return P(_maybe(leaf.shape[0], mesh, "model"), None)
+    if name == "lm_head":
+        return P(None, _maybe(leaf.shape[1], mesh, "model"))
+    # MoE expert weights: [L, E, D, F] when scan-stacked (nd=4), [E, D, F]
+    # only in the unstacked MTP block.  Dense scan-stacked FFN weights are
+    # also nd=3 ([L, D, F]) — those take the column/row rules below.
+    moe_expert = name in ("w_gate", "w_up", "w_down") \
+        and (nd == 4 or (nd == 3 and _under(path, "mtp"))) \
+        and not _under(path, "mlp")
+    if moe_expert:
+        # [*, E, D, F]: expert-parallel on E (matches moe_ffn_ep's espec)
+        e_dim = nd - 3
+        spec = [None] * nd
+        spec[e_dim] = _maybe(leaf.shape[e_dim], mesh, "model")
+        return P(*spec)
+    if name in _COL and nd >= 1:
+        spec = [None] * nd
+        spec[-1] = _maybe(leaf.shape[-1], mesh, "model")
+        return P(*spec)
+    if name in _ROW and nd >= 2:
+        spec = [None] * nd
+        spec[-2] = _maybe(leaf.shape[-2], mesh, "model")
+        return P(*spec)
+    if name in _REP or nd <= 1:
+        return P(*([None] * nd))
+    return P(*([None] * nd))
+
+
+def params_shardings(params_shapes, mesh, *, fsdp: bool = False):
+    """TP over 'model'; with ``fsdp`` the data super-axis additionally
+    shards each leaf's largest free divisible dim (ZeRO-3 / FSDP via
+    GSPMD: weights live sharded, XLA all-gathers them at use inside the
+    layer scan and reduce-scatters their grads)."""
+    def spec(path, leaf):
+        ps = param_spec(path, leaf, mesh)
+        if fsdp:
+            ps = zero_spec(ps, leaf, mesh)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shapes)
+
+
+# --- optimizer state (ZeRO) ---------------------------------------------------
+
+def zero_spec(pspec: P, leaf, mesh, dp=None) -> P:
+    """Add the data super-axis on the largest unsharded divisible dim."""
+    dp = dp or data_axes(mesh)
+    spec = list(pspec) + [None] * (leaf.ndim - len(pspec))
+    cands = sorted(
+        (i for i in range(leaf.ndim)
+         if spec[i] is None and _div(leaf.shape[i], mesh, dp)),
+        key=lambda i: -leaf.shape[i])
+    if cands:
+        spec[cands[0]] = dp if len(dp) > 1 else dp[0]
+    return P(*spec)
+
+
+def opt_state_shardings(opt_shapes, params_shapes, mesh, *,
+                        dp_only: bool = False):
+    if dp_only:
+        pspecs = jax.tree.map(lambda l: P(*([None] * l.ndim)),
+                              params_shapes)
+    else:
+        pspecs = jax.tree_util.tree_map_with_path(
+            lambda path, leaf: param_spec(path, leaf, mesh), params_shapes)
+
+    zdp = mesh.axis_names if dp_only else None
+
+    def moment(ps, leaf):
+        return NamedSharding(mesh, zero_spec(ps, leaf, mesh, dp=zdp))
+
+    out = dict(opt_shapes)
+    out = {}
+    for key in opt_shapes:
+        if key in ("m", "v", "master"):
+            out[key] = jax.tree.map(moment, pspecs, opt_shapes[key])
+        elif key == "step":
+            out[key] = NamedSharding(mesh, P())
+        else:
+            out[key] = jax.tree.map(
+                lambda l: NamedSharding(mesh, P(*([None] * l.ndim))),
+                opt_shapes[key])
+    return out
+
+
+# --- batch / cache ------------------------------------------------------------
+
+def batch_shardings(batch_shapes, mesh, axes=None):
+    dp = tuple(axes) if axes else data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        if name == "mrope_positions":            # [3, B, S]
+            s = [None] * leaf.ndim
+            if leaf.ndim >= 2:
+                s[1] = dpa if _div(leaf.shape[1], mesh, dp) else None
+            return NamedSharding(mesh, P(*s))
+        s = [None] * leaf.ndim
+        if leaf.ndim >= 1:
+            s[0] = dpa if _div(leaf.shape[0], mesh, dp) else None
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def cache_shardings(cache_shapes, mesh, *, seq_shard: bool = False,
+                    seq_axis=None):
+    """Decode caches.  Layout per leaf name:
+      k/v/cross_k/cross_v [G, B, S, Hkv, Dh]
+      c_kv [G, B, S, R]; k_rope [G, B, S, Dr]
+      state [G, B, H, P, N]; conv [G, B, K, C]; length [G, B]
+
+    ``seq_shard`` moves the KV sequence dim onto ``seq_axis`` (default the
+    data super-axis for batch=1 long-context; 'model' is the decode
+    hillclimb: memory/model_size with a tiny attention psum).
+    """
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    sax = seq_axis if seq_axis is not None else dpa
+    sax_t = sax if isinstance(sax, tuple) else (sax,)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        sh = leaf.shape
+        bdim = 1 if leaf.ndim >= 2 else 0
+        seq_on_dp = seq_shard and any(a in dp for a in sax_t)
+        batch_ax = dpa if _div(sh[bdim], mesh, dp) and not seq_on_dp \
+            else None
+        if name in ("k", "v", "cross_k", "cross_v"):
+            s = [None, batch_ax, None,
+                 None if seq_shard and "model" in sax_t
+                 else _maybe(sh[3], mesh, "model"), None]
+            if seq_shard:
+                s[2] = sax if _div(sh[2], mesh, sax) else None
+            return NamedSharding(mesh, P(*s))
+        if name in ("c_kv", "k_rope"):
+            s = [None, batch_ax, None, None]
+            if seq_shard:
+                s[2] = sax if _div(sh[2], mesh, sax) else None
+            return NamedSharding(mesh, P(*s))
+        if name == "state":
+            return NamedSharding(mesh, P(
+                None, batch_ax, _maybe(sh[2], mesh, "model"), None, None))
+        if name == "conv":
+            return NamedSharding(mesh, P(
+                None, batch_ax, None, _maybe(sh[3], mesh, "model")))
+        if name == "length":
+            return NamedSharding(mesh, P(None, batch_ax))
+        s = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            s[1] = batch_ax
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)

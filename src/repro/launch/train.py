@@ -1,0 +1,130 @@
+"""Training launcher: mesh + shardings + indexed data pipeline + ckpt.
+
+Runs for real at smoke scale on CPU (examples/train_lm.py drives it for a
+~100M model) and lowers identically on the production mesh — the dry-run
+imports the same ``build_trainer``.
+
+Fault tolerance: checkpoint every ``ckpt_every`` steps (params, optimizer
+state, data cursor); ``--resume`` restores and continues from the exact
+batch sequence (the pipeline cursor is part of the state — paper §III-D's
+replayable-source requirement applied to training).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.data import BatchPipeline, Cursor, ExampleStore, \
+    synthetic_examples
+from repro.dist import checkpoint as ckpt
+from repro.launch import shardings as shard
+from repro.launch.mesh import data_axes
+from repro.models import sharding as logical
+from repro.train import optim
+from repro.train.step import init_params, make_train_step
+
+
+def build_trainer(cfg, mesh=None, *, opt_cfg=None, microbatches=1,
+                  remat="dots"):
+    """Returns (init_fn, step_fn) — jitted when a mesh is given."""
+    opt_cfg = opt_cfg or optim.AdamWConfig()
+    step = make_train_step(cfg, opt_cfg, microbatches=microbatches,
+                           remat=remat)
+
+    def init_fn(key):
+        params = init_params(cfg, key)
+        return params, optim.init_state(opt_cfg, params)
+
+    if mesh is None:
+        return init_fn, jax.jit(step)
+
+    params_shapes = jax.eval_shape(partial(init_params, cfg),
+                                   jax.random.PRNGKey(0))
+    pshard = shard.params_shardings(params_shapes, mesh)
+    opt_shapes = jax.eval_shape(partial(optim.init_state, opt_cfg),
+                                params_shapes)
+    oshard = shard.opt_state_shardings(opt_shapes, params_shapes, mesh)
+    jitted = jax.jit(step, in_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+    return init_fn, jitted
+
+
+def run(cfg, *, steps: int, batch: int, seq: int, ckpt_dir: str | None,
+        ckpt_every: int = 50, resume: bool = False, seed: int = 0,
+        log_every: int = 10, append_every: int = 0):
+    """The end-to-end loop: indexed example store -> batches -> steps."""
+    rng = np.random.default_rng(seed)
+    store = ExampleStore(seq_len=seq, rows_per_batch=256)
+    ids, toks = synthetic_examples(rng, max(4 * batch, 512), seq,
+                                   cfg.vocab_size)
+    store.append_examples(ids, toks)
+    pipe = BatchPipeline(store, batch, seed=seed)
+
+    init_fn, step_fn = build_trainer(cfg)
+    params, opt_state = init_fn(jax.random.PRNGKey(seed))
+
+    start = 0
+    if resume and ckpt_dir and os.path.exists(
+            os.path.join(ckpt_dir, "manifest.json")):
+        (params, opt_state), meta = ckpt.restore_pytree(
+            ckpt_dir, (params, opt_state)), ckpt.manifest(ckpt_dir)["meta"]
+        start = int(meta["step"])
+        pipe.cursor = Cursor.from_state(meta["cursor"])
+        print(f"resumed from step {start}")
+
+    history = []
+    for i in range(start, steps):
+        if append_every and i and i % append_every == 0:
+            # streaming appends: fresh data enters without a reload
+            nids, ntoks = synthetic_examples(
+                rng, batch, seq, cfg.vocab_size, id_base=store.num_examples)
+            store.append_examples(nids, ntoks)
+        batch_data = pipe.next_batch()
+        batch_data = {k: jnp.asarray(v) for k, v in batch_data.items()}
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch_data)
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:5d}  loss {loss:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"{time.time() - t0:.2f}s  store v{store.version}",
+                  flush=True)
+        if ckpt_dir and (i + 1) % ckpt_every == 0:
+            ckpt.save_pytree(ckpt_dir, (params, opt_state),
+                             meta={"step": i + 1,
+                                   "cursor": pipe.cursor.state_dict()})
+    return params, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--append-every", type=int, default=0)
+    args = ap.parse_args(argv)
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    run(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir, resume=args.resume,
+        append_every=args.append_every)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

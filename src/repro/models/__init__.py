@@ -1,0 +1,18 @@
+"""models — the architecture zoo (10 assigned archs + paper workloads).
+
+  common.py      configs, init helpers, norms, losses
+  rope.py        RoPE / M-RoPE / sinusoids
+  attention.py   GQA, qk-norm, bias, sliding-window, MLA (absorbed decode)
+  moe.py         GShard-style MoE with shared experts, ds-v3 routing
+  ssm.py         Mamba2 / SSD chunked scan + O(1) decode
+  transformer.py decoder-only assembly via scan groups
+  whisper.py     encoder-decoder (audio)
+  sharding.py    logical-axis sharding hints
+"""
+
+from repro.models.common import (ModelConfig, MLAConfig, MoEConfig,
+                                 SSMConfig)
+from repro.models import transformer, whisper, sharding
+
+__all__ = ["ModelConfig", "MLAConfig", "MoEConfig", "SSMConfig",
+           "transformer", "whisper", "sharding"]

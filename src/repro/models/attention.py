@@ -1,0 +1,356 @@
+"""Attention flavors for the assigned architectures.
+
+One module covers: GQA (llama/qwen/gemma), qk-norm (qwen3), QKV bias
+(qwen1.5), sliding-window with per-layer theta (gemma3), M-RoPE (qwen2-vl),
+MLA with low-rank q/kv and decoupled RoPE (deepseek), and cross-attention
+(whisper decoder).
+
+Prefill computes full causal attention; decode consumes a dense KV cache
+(serving's *paged* cache lives in serving/kvcache.py and feeds the Pallas
+decode kernel; the dense path here is the XLA-lowerable one the dry-run
+compiles).
+
+MLA decode uses the **absorbed** formulation: W_uk folds into the query and
+W_uv into the output projection, so per-step attention works directly on
+the cached latent (kv_lora + rope dims) — the cache stays low-rank, which
+is the entire point of MLA, and the per-token FLOPs drop from
+O(S·H·(d_nope+d_v)) expansions to O(S·(kv_lora+rope)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flash
+from repro.models import rope as rp
+from repro.models.common import ModelConfig, dense_init, rms_norm, zeros, ones
+from repro.models.sharding import hint
+
+NEG_INF = -2.3819763e38
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 8)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": dense_init(ks[0], d, qd, dtype),
+        "wk": dense_init(ks[1], d, kvd, dtype),
+        "wv": dense_init(ks[2], d, kvd, dtype),
+        "wo": dense_init(ks[3], qd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((qd,), dtype)
+        p["bk"] = zeros((kvd,), dtype)
+        p["bv"] = zeros((kvd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = ones((cfg.head_dim,), dtype)
+        p["k_norm"] = ones((cfg.head_dim,), dtype)
+    return p
+
+
+def mla_init(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], d, m.q_lora_rank, dtype)
+        p["q_a_norm"] = ones((m.q_lora_rank,), dtype)
+        p["wq_b"] = dense_init(ks[1], m.q_lora_rank, h * qk_head, dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d, h * qk_head, dtype)
+    p["wkv_a"] = dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                            dtype)
+    p["kv_a_norm"] = ones((m.kv_lora_rank,), dtype)
+    p["wkv_b"] = dense_init(ks[3], m.kv_lora_rank,
+                            h * (m.qk_nope_head_dim + m.v_head_dim), dtype)
+    p["wo"] = dense_init(ks[4], h * m.v_head_dim, d, dtype)
+    return p
+
+
+def cross_init(key, cfg: ModelConfig, dtype):
+    return gqa_init(key, cfg, dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_pos, k_pos, window):
+    """[..., Sq, Sk] bool; window (dynamic scalar or None) limits lookback."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        m = m & (q_pos[..., :, None] - k_pos[..., None, :] < window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def _qk_headnorm(x, w, eps):
+    return rms_norm(x, w, eps)
+
+
+def gqa_project_qkv(p, x, cfg: ModelConfig, positions, theta,
+                    mrope_positions=None, use_rope: bool = True):
+    b, s, _ = x.shape
+    h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hk, dh)
+    v = v.reshape(b, s, hk, dh)
+    if cfg.qk_norm:
+        q = _qk_headnorm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_headnorm(k, p["k_norm"], cfg.norm_eps)
+    if not use_rope:
+        return q, k, v
+    if cfg.mrope_sections and mrope_positions is not None:
+        q = rp.rotate_mrope(q, mrope_positions, theta, cfg.mrope_sections)
+        k = rp.rotate_mrope(k, mrope_positions, theta, cfg.mrope_sections)
+    else:
+        q = rp.rotate(q, positions, theta)
+        k = rp.rotate(k, positions, theta)
+    return q, k, v
+
+
+def gqa_core(q, k, v, mask, scale):
+    """[B,Sq,H,D] x [B,Sk,Hkv,D] -> [B,Sq,H,D]; grouped heads.
+
+    Operands stay in their storage dtype; the contractions accumulate in
+    f32 via ``preferred_element_type`` (the MXU-native form).  Casting
+    K/V to f32 first would materialize a full-cache f32 copy per decode
+    layer — the dominant temp buffer at 32k decode before this change.
+    """
+    b, sq, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, sq, hk, g, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def gqa_prefill(p, x, cfg: ModelConfig, *, theta, window=None,
+                mrope_positions=None, cross_kv=None, causal=True,
+                use_rope: bool = True):
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = gqa_project_qkv(p, x, cfg, positions, theta,
+                              mrope_positions, use_rope=use_rope)
+    q = hint(q, "batch", "seq", "heads", None)
+    scale = cfg.head_dim ** -0.5
+    if cross_kv is not None:
+        k, v = cross_kv                      # pre-projected encoder KV
+        mask = jnp.ones((b, s, k.shape[1]), bool)
+        out = gqa_core(q, k, v, mask, scale)
+    elif causal and s >= flash.FLASH_THRESHOLD:
+        # long prefill: chunked online-softmax (O(S*block) live memory)
+        out = flash.flash_gqa(q, k, v, scale=scale, causal=True,
+                              window=window)
+    elif causal:
+        mask = causal_mask(positions, positions, window)
+        mask = jnp.broadcast_to(mask, (b, s, s))
+        out = gqa_core(q, k, v, mask, scale)
+    else:
+        mask = jnp.ones((b, s, s), bool)
+        out = gqa_core(q, k, v, mask, scale)
+    out = jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), p["wo"])
+    return hint(out, "batch", "res_seq", "model_d"), (k, v)
+
+
+def project_cross_kv(p, enc_out, cfg: ModelConfig):
+    """Project encoder output to (k, v) once per utterance (whisper)."""
+    b, s, _ = enc_out.shape
+    hk, dh = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dq->bsq", enc_out, p["wk"]).reshape(b, s, hk, dh)
+    v = jnp.einsum("bsd,dq->bsq", enc_out, p["wv"]).reshape(b, s, hk, dh)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(hk, dh)
+        v = v + p["bv"].reshape(hk, dh)
+    return k, v
+
+
+def gqa_decode(p, x, cfg: ModelConfig, cache, *, theta, window=None,
+               use_rope: bool = True, cross_kv=None):
+    """x: [B, 1, D]; cache: dict(k=[B,S,Hkv,Dh], v=..., length=[B]).
+
+    With ``cross_kv`` the cache is ignored for K/V (whisper cross-attn:
+    encoder KV is static) but ``length`` still drives positions.
+    """
+    b = x.shape[0]
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = q.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+        mask = jnp.ones((b, 1, k.shape[1]), bool)
+        out = gqa_core(q, k, v, mask, cfg.head_dim ** -0.5)
+        out = jnp.einsum("bsq,qd->bsd", out.reshape(b, 1, -1), p["wo"])
+        return out, cache
+    positions = cache["length"][:, None]                  # [B, 1]
+    q, k_new, v_new = gqa_project_qkv(p, x, cfg, positions, theta,
+                                      use_rope=use_rope)
+    at = cache["length"]                                   # [B]
+    if window is not None and cache["k"].shape[1] <= window:
+        # Ring-free sliding cache: shift-evict the oldest entry.  K was
+        # roped at its absolute position when inserted, so eviction is a
+        # pure memory move; absolute positions reconstruct from `length`.
+        w = cache["k"].shape[1]
+        k = jnp.concatenate([cache["k"][:, 1:], k_new], axis=1)
+        v = jnp.concatenate([cache["v"][:, 1:], v_new], axis=1)
+        kpos = at[:, None] - (w - 1) + jnp.arange(w, dtype=jnp.int32)[None]
+        mask = (kpos >= 0) & (at[:, None] - kpos < window)
+        mask = mask[:, None, :]
+        out = gqa_core(q, k, v, mask, cfg.head_dim ** -0.5)
+        out = jnp.einsum("bsq,qd->bsd", out.reshape(b, 1, -1), p["wo"])
+        return out, {"k": k, "v": v, "length": cache["length"] + 1}
+    smax = cache["k"].shape[1]
+    z = jnp.int32(0)
+    k = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, z, z)))(cache["k"], k_new, at)
+    v = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, z, z)))(cache["v"], v_new, at)
+    kpos = jnp.arange(smax, dtype=jnp.int32)[None, :]
+    mask = kpos <= at[:, None]
+    if window is not None:
+        mask = mask & (at[:, None] - kpos < window)
+    mask = mask[:, None, :]                                # [B, 1, S]
+    out = gqa_core(q, k, v, mask, cfg.head_dim ** -0.5)
+    out = jnp.einsum("bsq,qd->bsd", out.reshape(b, 1, -1), p["wo"])
+    new_cache = {"k": k, "v": v, "length": cache["length"] + 1}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek)
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if m.q_lora_rank:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]),
+                      p["q_a_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rq->bsq", cq, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    q = q.reshape(b, s, h, qk_head)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = rp.rotate(q[..., m.qk_nope_head_dim:], positions,
+                       cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_latent(p, x, cfg: ModelConfig, positions):
+    """Compute the cached latent: c_kv [B,S,R], k_rope [B,S,Dr]."""
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rms_norm(kv[..., :m.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = rp.rotate(kv[..., None, m.kv_lora_rank:], positions,
+                       cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_prefill(p, x, cfg: ModelConfig):
+    """Non-absorbed prefill (DeepSeek's own choice for the compute-bound
+    phase): expand K/V from the latent, run (flash) attention at head_dim
+    (e + r) = 192 — cheaper in the quadratic term than the absorbed form
+    (rl + r = 576).  Decode uses the absorbed latent form (mla_decode)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = mla_latent(p, x, cfg, positions)
+    kvb = p["wkv_b"].reshape(m.kv_lora_rank, h,
+                             m.qk_nope_head_dim + m.v_head_dim)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, kvb[..., :m.qk_nope_head_dim])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, kvb[..., m.qk_nope_head_dim:])
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    if s >= flash.FLASH_THRESHOLD:
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)   # [B,S,H,E+R]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, m.qk_rope_head_dim))],
+            axis=-1)
+        out = flash.flash_gqa(q_full, k_full, v, scale=scale, causal=True)
+        out = out.astype(jnp.float32)
+    else:
+        logits = (jnp.einsum("bqhe,bshe->bhqs", q_nope.astype(jnp.float32),
+                             k_nope.astype(jnp.float32))
+                  + jnp.einsum("bqhe,bse->bhqs", q_rope.astype(jnp.float32),
+                               k_rope.astype(jnp.float32))) * scale
+        mask = causal_mask(positions, positions, None)
+        logits = jnp.where(mask[:, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqs,bshe->bqhe", w, v.astype(jnp.float32))
+    out = out.reshape(b, s, h * m.v_head_dim).astype(x.dtype)
+    out = jnp.einsum("bsv,vd->bsd", out, p["wo"])
+    return hint(out, "batch", "res_seq", "model_d"), (c_kv, k_rope)
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache):
+    """Absorbed decode over the latent cache.
+
+    cache: dict(c_kv=[B,S,R], k_rope=[B,S,Dr], length=[B]).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    positions = cache["length"][:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)          # [B,1,H,*]
+    c_new, kr_new = mla_latent(p, x, cfg, positions)
+    at = cache["length"]
+    z = jnp.int32(0)
+    c_kv = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, z)))(cache["c_kv"], c_new, at)
+    k_rope = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, z)))(cache["k_rope"], kr_new, at)
+
+    kvb = p["wkv_b"].reshape(m.kv_lora_rank, h,
+                             m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = kvb[..., :m.qk_nope_head_dim]                   # [R, H, E]
+    w_uv = kvb[..., m.qk_nope_head_dim:]                   # [R, H, V]
+    # absorb W_uk into q: q_lat [B,1,H,R].  The latent cache stays in its
+    # storage dtype — contractions accumulate f32 via
+    # preferred_element_type (no full-cache f32 copies at 32k decode).
+    q_lat = jnp.einsum("bqhe,rhe->bqhr", q_nope, w_uk,
+                       preferred_element_type=jnp.float32)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(c_kv.dtype),
+                         c_kv, preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhe,bse->bhqs", q_rope.astype(k_rope.dtype),
+                           k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    smax = c_kv.shape[1]
+    kpos = jnp.arange(smax, dtype=jnp.int32)[None, :]
+    mask = (kpos <= at[:, None])[:, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w.astype(c_kv.dtype), c_kv,
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(w_uv.dtype), w_uv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    out = jnp.einsum("bsv,vd->bsd", out, p["wo"])
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope,
+                 "length": cache["length"] + 1}
+    return out, new_cache

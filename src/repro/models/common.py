@@ -1,0 +1,188 @@
+"""Shared model-building blocks: config dataclasses, init helpers, norms.
+
+Pure-JAX (no flax): params are nested dicts of arrays; every module is an
+(init, apply) function pair.  Layers are grouped into homogeneous *scan
+groups* (transformer.py) so deep models lower as ``lax.scan`` — compile
+time and HLO size stay bounded at 61+ layers on a 512-device mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    first_dense_layers: int = 0
+    every_k: int = 1            # MoE layer every k-th layer (jamba: 2)
+    capacity_factor: float = 1.25
+    router: str = "softmax"     # softmax | sigmoid (deepseek-v3)
+    router_aux_free_bias: bool = False   # ds-v3 aux-loss-free balancing
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # attention flavor
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    local_rope_theta: float | None = None   # gemma3 local layers
+    sliding_window: Optional[int] = None
+    local_global_pattern: int = 0  # gemma3: 5 local then 1 global
+    mrope_sections: tuple[int, ...] = ()    # qwen2-vl (t, h, w)
+    # substructure
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    attn_layer_period: int = 0   # jamba: attention every 8th layer...
+    attn_layer_offset: int = 0   # ...at offset 4
+    # enc-dec (whisper)
+    encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 0         # 1500 frames for whisper
+    max_pos: int = 4096          # learned-position table size (whisper)
+    # extras
+    mtp_depth: int = 0           # deepseek-v3 multi-token prediction
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    # which attention layers are quadratic-free (filled by layer_kinds())
+
+    @property
+    def jnp_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (DESIGN.md §5)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.local_global_pattern > 0
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """LLaMA-style gated MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    """GELU MLP with biases (whisper)."""
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in) + b_in)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+def cross_entropy(logits, labels, *, z_loss: float = 0.0, mask=None):
+    """Token-mean cross entropy in f32 with optional z-loss.
+
+    The label log-prob uses a one-hot select+reduce rather than
+    ``take_along_axis``: a gather along the vocab axis would force GSPMD
+    to all-gather the (model-sharded) logits, while the masked reduction
+    fuses and reduces per-shard (tens of GB per device at 150k vocab).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    ll = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                 axis=-1)
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(loss)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)

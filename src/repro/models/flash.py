@@ -1,0 +1,139 @@
+"""Chunked online-softmax attention (pure-JAX flash) for long prefill.
+
+Materializing causal logits at 32k tokens is [B,H,S,S] f32 — petabytes at
+the assigned shapes — so prefill attention streams KV in blocks with the
+standard flash recurrence (running max / running sum / rescaled
+accumulator), carried by a ``lax.scan``.  Peak live memory drops from
+O(S^2) to O(S * block_k) per head group.
+
+The math is exact (tests assert allclose vs the dense core).  GQA grouping
+is handled inside; the sliding-window mask composes with causal.
+
+This is the XLA-lowerable path the dry-run compiles.  On a real TPU the
+same contract would dispatch to a fused Pallas flash kernel; the Pallas
+decode kernel (kernels/decode_attention.py) already implements the decode
+side of that contract over the indexed cache's pages.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+# prefill sequences at or above this length take the flash path
+FLASH_THRESHOLD = 2048
+DEFAULT_BLOCK_K = 1024
+
+
+def flash_gqa(q, k, v, *, scale, causal=True, window=None,
+              block_k: int = DEFAULT_BLOCK_K):
+    """q [B,Sq,H,Dq]; k [B,Sk,Hkv,Dq]; v [B,Sk,Hkv,Dv] -> [B,Sq,H,Dv].
+
+    Assumes q position i attends to k positions <= i (prefill: Sq == Sk and
+    aligned).  ``window`` limits lookback (exclusive of positions further
+    than window-1 back).
+    """
+    b, sq, h, dq = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    g = h // hk
+    nb = -(-sk // block_k)
+    pad = nb * block_k - sk
+
+    # K/V stay in storage dtype (no full-sequence f32 copies); the block
+    # contractions accumulate in f32 via preferred_element_type, and P is
+    # cast to the KV dtype for the PV matmul — the standard TPU-flash
+    # bf16-MXU/f32-accumulator recipe.
+    qf = q.reshape(b, sq, hk, g, dq)
+    kf = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = jnp.moveaxis(kf.reshape(b, nb, block_k, hk, dq), 1, 0)
+    vb = jnp.moveaxis(vf.reshape(b, nb, block_k, hk, dv), 1, 0)
+
+    q_pos = jnp.arange(sq, dtype=jnp.int32)
+
+    def body(carry, inp):
+        m, l, acc = carry                     # [b,hk,g,sq], same, [...,dv]
+        kblk, vblk, jb = inp                  # [b,bk,hk,d], [b,bk,hk,dv], []
+        k_pos = jb * block_k + jnp.arange(block_k, dtype=jnp.int32)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, kblk,
+                            preferred_element_type=jnp.float32) * scale
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((sq, block_k), bool)
+        mask = mask & (k_pos[None, :] < sk)
+        if window is not None:
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, hk, g, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hk, g, sq), jnp.float32),
+            jnp.zeros((b, hk, g, sq, dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (kb, vb, jnp.arange(nb, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # [b,hk,g,sq,dv]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def flash_mla(q_nope, q_rope, c_kv, k_rope, w_uk, w_uv, *, scale,
+              block_k: int = DEFAULT_BLOCK_K):
+    """Latent-space flash for MLA prefill (absorbed formulation).
+
+    q_nope [B,S,H,E]; q_rope [B,S,H,R]; c_kv [B,S,Rl]; k_rope [B,S,R];
+    w_uk [Rl,H,E]; w_uv [Rl,H,V].  Attention runs against the *latent*
+    cache (q_nope absorbed through W_uk), so the streamed KV block is the
+    low-rank latent — the whole point of MLA, kept intact under flash.
+    Returns [B,S,H,V] (pre-W_o).
+    """
+    b, s, h, e = q_nope.shape
+    rl = c_kv.shape[-1]
+    v_dim = w_uv.shape[-1]
+    nb = -(-s // block_k)
+    pad = nb * block_k - s
+
+    q_lat = jnp.einsum("bqhe,rhe->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))            # [B,S,H,Rl]
+    qr = q_rope.astype(jnp.float32)
+    ckv = jnp.pad(c_kv.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    kr = jnp.pad(k_rope.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    ckv_b = jnp.moveaxis(ckv.reshape(b, nb, block_k, rl), 1, 0)
+    kr_b = jnp.moveaxis(kr.reshape(b, nb, block_k, -1), 1, 0)
+
+    q_pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, inp):
+        m, l, acc = carry                      # [b,h,s], [b,h,s], [b,h,s,Rl]
+        cblk, rblk, jb = inp
+        k_pos = jb * block_k + jnp.arange(block_k, dtype=jnp.int32)
+        logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, cblk)
+                  + jnp.einsum("bqhr,bsr->bhqs", qr, rblk)) * scale
+        mask = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < s)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pc = jnp.einsum("bhqs,bsr->bhqr", p, cblk)          # latent accum
+        acc_new = acc * alpha[..., None] + pc
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, h, s), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, s), jnp.float32),
+            jnp.zeros((b, h, s, rl), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (ckv_b, kr_b, jnp.arange(nb, dtype=jnp.int32)))
+    o_lat = acc / jnp.maximum(l, 1e-30)[..., None]          # [b,h,s,Rl]
+    out = jnp.einsum("bhqr,rhv->bqhv", o_lat, w_uv.astype(jnp.float32))
+    return out

@@ -1,0 +1,65 @@
+"""Rotary position embeddings: standard, per-layer theta, and M-RoPE.
+
+All functions take explicit ``positions`` so prefill (arange) and decode
+(cache length) share one code path.  M-RoPE (Qwen2-VL) carries three
+position streams (t, h, w); text tokens use t = h = w = index, vision
+patches use their grid coordinates — supplied by the caller.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return inv                                            # [half]
+
+
+def rotate(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv   # [..., S, half]
+    sin = jnp.sin(ang)[..., None, :]                       # [..., S, 1, half]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def rotate_mrope(x, positions_thw, theta: float, sections: tuple[int, ...]):
+    """M-RoPE: head_dim/2 frequency slots split across (t, h, w) streams.
+
+    x             : [..., S, H, D]
+    positions_thw : [3, ..., S]  (t, h, w positions)
+    sections      : slot counts per stream, summing to D//2 (e.g. 16,24,24).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(d, theta)                             # [half]
+    # pick the position stream for each frequency slot
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=half)
+    pos = jnp.take_along_axis(
+        jnp.moveaxis(positions_thw, 0, -1),                # [..., S, 3]
+        sec_id[(None,) * (positions_thw.ndim - 1)].astype(jnp.int32),
+        axis=-1)                                           # [..., S, half]
+    ang = pos.astype(jnp.float32) * inv
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    """Whisper-encoder style fixed sinusoids [seq, d]."""
+    half = d // 2
+    inv = 1.0 / (10000 ** (jnp.arange(half, dtype=jnp.float32) / (half - 1)))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,113 @@
+"""Logical-axis sharding hints for model code.
+
+Model code annotates activations with *logical* axes ("batch", "seq",
+"model_d", "heads", "experts", ...).  The launcher installs a mapping from
+logical axes to mesh axes; outside a mesh context the hints are no-ops, so
+the same model code runs in CPU tests, smoke configs, and the 512-chip
+dry-run.
+
+The hillclimbing loop (EXPERIMENTS.md §Perf) works by swapping rule sets —
+e.g. moving "seq" from unsharded to the data axis turns on sequence
+parallelism without touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> dict | None:
+    return getattr(_state, "rules", None)
+
+
+def _mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def logical_sharding(mesh, rules: dict):
+    """rules: logical axis name -> mesh axis (str | tuple | None)."""
+    old = (_mesh(), _rules())
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = old
+
+
+def hint(x, *logical_axes):
+    """Constrain ``x`` (rank must equal len(logical_axes); None = any)."""
+    mesh, rules = _mesh(), _rules()
+    if mesh is None or rules is None:
+        return x
+    spec = P(*[rules.get(a) if a is not None else None
+               for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_for(*logical_axes) -> P:
+    rules = _rules() or {}
+    return P(*[rules.get(a) if a is not None else None
+               for a in logical_axes])
+
+
+# Default rule sets ----------------------------------------------------------
+#
+# "res_seq" is the *residual-stream* sequence axis (block inputs/outputs).
+# It is distinct from "seq" (attention-internal / logits) so Megatron-style
+# sequence parallelism can be switched on by mapping res_seq -> "model"
+# without touching attention math: GSPMD then lowers the TP all-reduce after
+# wo / w_down into reduce-scatter + all-gather pairs (half the wire bytes,
+# and norms/elementwise run on S/model_size tokens).
+
+def rules_single_pod() -> dict:
+    return {
+        "batch": "data", "seq": None, "res_seq": None, "model_d": None,
+        "heads": "model", "kv_heads": "model", "ff": "model",
+        "vocab": "model", "experts": "model", "expert_cap": None,
+        "state": "model",
+    }
+
+
+def rules_multi_pod() -> dict:
+        return {
+            "batch": ("pod", "data"), "seq": None, "res_seq": None,
+            "model_d": None, "heads": "model", "kv_heads": "model",
+            "ff": "model", "vocab": "model", "experts": "model",
+            "expert_cap": None, "state": "model",
+        }
+
+
+def rules_seq_parallel(base: dict) -> dict:
+    """Sequence parallelism over data: shard the sequence axis when batch
+    cannot be sharded (long-context, batch=1)."""
+    out = dict(base)
+    out["seq"] = "data"
+    out["res_seq"] = "data"
+    out["batch"] = None
+    return out
+
+
+def rules_megatron_sp(base: dict) -> dict:
+    """Megatron SP: residual stream sharded over the model axis between
+    blocks (reduce-scatter/all-gather instead of all-reduce)."""
+    out = dict(base)
+    out["res_seq"] = "model"
+    return out
+
+
+def rules_pure_dp(multi_pod: bool = False) -> dict:
+    """Small-model policy: no tensor parallelism — every axis of the mesh
+    is data parallel (params replicated, batch over all axes)."""
+    batch = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        "batch": batch, "seq": None, "res_seq": None, "model_d": None,
+        "heads": None, "kv_heads": None, "ff": None, "vocab": None,
+        "experts": None, "expert_cap": None, "state": None,
+    }

@@ -1,0 +1,204 @@
+"""Mamba2 / SSD (state-space duality) layers — chunked, TPU-friendly.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): sequence split
+into chunks; intra-chunk terms are batched matmuls (MXU work), inter-chunk
+state is a short ``lax.scan`` over chunk summaries.  The same layer serves
+mamba2-370m and jamba's mamba blocks (DESIGN.md notes jamba ships mamba-1;
+we use the SSD formulation as the TPU-idiomatic equivalent — same
+selective-state semantics, hardware-appropriate compute shape).
+
+Decode keeps a fixed-size recurrent state [B, H, P, N] — O(1) per token,
+which is what makes the ssm/hybrid archs eligible for long_500k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, ones, rms_norm
+from repro.models.sharding import hint
+
+
+def _cfg_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def ssm_init(key, cfg: ModelConfig, dtype):
+    s, d_inner, n_heads = _cfg_dims(cfg)
+    ks = jax.random.split(key, 8)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    p = {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], cfg.d_model,
+                           2 * d_inner + 2 * s.n_groups * s.d_state
+                           + n_heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)
+                         ).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": ones((d_inner,), dtype),
+        "w_out": dense_init(ks[2], d_inner, cfg.d_model, dtype),
+    }
+    return p
+
+
+def _split_proj(cfg, zxbcdt):
+    s, d_inner, n_heads = _cfg_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn,
+                 2 * d_inner + 2 * gn], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d: x [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _segsum(logd):
+    """log-decay cumulative segment sums: [..., Q] -> [..., Q, Q] lower-tri."""
+    q = logd.shape[-1]
+    cs = jnp.cumsum(logd, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """SSD forward.
+
+    x  : [b, s, h, p]   (heads x head_dim)
+    dt : [b, s, h]      (softplus'd step sizes, >0)
+    A  : [h]            (negative decay rates)
+    B  : [b, s, g, n]   C: [b, s, g, n]
+    returns y [b, s, h, p], final_state [b, h, p, n]
+
+    Sequences not divisible by ``chunk`` are zero-padded internally
+    (dt = 0 on padding => exp(0) decay, zero state contribution — exact).
+    """
+    b, s_in, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    pad = (-s_in) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s_in + pad
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)          # [b,nc,q,h,n]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    logd = dtc * A[None, None, None, :]       # [b,nc,q,h] (negative)
+    # --- intra-chunk (quadratic within chunk; MXU batched matmuls) ---------
+    L = jnp.exp(_segsum(jnp.moveaxis(logd, -1, 2)))       # [b,nc,h,q,q]
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)     # [b,nc,h,q,q]
+    y_diag = jnp.einsum("bchqk,bchqk,bckh,bckhp->bcqhp",
+                        scores, L, dtc, xc)
+
+    # --- chunk summaries -> inter-chunk scan -------------------------------
+    total = jnp.sum(logd, axis=2)                          # [b,nc,h]
+    decay_out = jnp.exp(jnp.cumsum(logd, axis=2))          # [b,nc,q,h]
+    # state contribution of each chunk: sum_k exp(total - cum_k) dt_k B_k x_k
+    decay_in = jnp.exp(total[:, :, None, :]
+                       - jnp.cumsum(logd, axis=2))         # [b,nc,q,h]
+    states = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchpn",
+                        dtc, decay_in, Bh, xc)             # [b,nc,h,p,n]
+
+    def scan_fn(carry, inp):
+        st, tot = inp
+        new = carry * jnp.exp(tot)[..., None, None] + st
+        return new, carry                                  # emit PREV state
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(total, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # [b,nc,h,p,n]
+
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                       Ch, decay_out, prev_states)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    y = y + x * D[None, None, :, None]
+    return y[:, :s_in].astype(x.dtype), final
+
+
+def ssm_prefill(p, xin, cfg: ModelConfig):
+    """[B, S, D] -> ([B, S, D], state [B,H,P,N] + conv tail)."""
+    s_cfg, d_inner, n_heads = _cfg_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p["w_in"])
+    z, x, B, C, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([x, B, C], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    x, B, C = jnp.split(conv_out,
+                        [d_inner, d_inner + s_cfg.n_groups * s_cfg.d_state],
+                        axis=-1)
+    bsz, s, _ = x.shape
+    xh = x.reshape(bsz, s, n_heads, s_cfg.head_dim)
+    xh = hint(xh, "batch", "seq", "state", None)
+    Bh = B.reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
+    Ch = C.reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                           Bh.astype(jnp.float32), Ch.astype(jnp.float32),
+                           p["D"], s_cfg.chunk)
+    y = y.reshape(bsz, s, d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    conv_tail = conv_in[:, -(s_cfg.d_conv - 1):, :]
+    return hint(out, "batch", "res_seq", "model_d"), \
+        {"state": state, "conv": conv_tail}
+
+
+def ssm_decode(p, xin, cfg: ModelConfig, cache):
+    """Single-token step.  cache: {state [B,H,P,N], conv [B,K-1,Cc]}."""
+    s_cfg, d_inner, n_heads = _cfg_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p["w_in"])     # [B,1,E]
+    z, x, B, C, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([x, B, C], axis=-1)          # [B,1,Cc]
+    hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # [B,K,Cc]
+    w = p["conv_w"]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist[:, -w.shape[0]:, :], w)
+        + p["conv_b"])[:, None, :]
+    x, B, C = jnp.split(conv_out,
+                        [d_inner, d_inner + s_cfg.n_groups * s_cfg.d_state],
+                        axis=-1)
+    bsz = x.shape[0]
+    xh = x.reshape(bsz, n_heads, s_cfg.head_dim).astype(jnp.float32)
+    Bh = jnp.repeat(B.reshape(bsz, s_cfg.n_groups, s_cfg.d_state),
+                    n_heads // s_cfg.n_groups, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C.reshape(bsz, s_cfg.n_groups, s_cfg.d_state),
+                    n_heads // s_cfg.n_groups, axis=1).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32)[:, 0, :]
+                          + p["dt_bias"])                  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * A[None, :])                      # [B,H]
+    st = cache["state"] * decay[..., None, None] \
+        + jnp.einsum("bh,bhn,bhp->bhpn", dt1, Bh, xh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, st) \
+        + xh * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"state": st, "conv": hist[:, 1:, :]}

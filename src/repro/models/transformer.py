@@ -1,0 +1,357 @@
+"""Decoder-only LM assembly covering dense / MoE / MLA / SSM / hybrid / VLM.
+
+Layers are grouped into *scan groups* — maximal runs of structurally
+identical layers — and each group lowers as one ``lax.scan`` over stacked
+parameters.  deepseek-v3 (3 dense + 58 MoE layers) lowers as two scans;
+gemma3's 5-local:1-global pattern as alternating groups; jamba's
+1:7 attn:mamba interleave with MoE-every-2 as its repeating blocks.  This
+keeps HLO size and compile time bounded on the 512-device dry-run mesh.
+
+API (used by train/, serving/, launch/):
+  init_params(cfg, key)                  -> params pytree
+  forward_train(params, cfg, tokens, …)  -> (loss, metrics)
+  prefill(params, cfg, tokens, …)        -> (logits, caches)
+  init_cache(cfg, batch, max_len)        -> caches (dense KV / latent / ssm)
+  decode_step(params, cfg, last_tok, caches, …) -> (logits, caches)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.ad_checkpoint  # noqa: F401 (checkpoint_name in block bodies)
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (ModelConfig, cross_entropy, dense_init,
+                                 embed_init, ones, rms_norm, swiglu)
+from repro.models.sharding import hint
+
+
+# ---------------------------------------------------------------------------
+# Layer kinds & scan grouping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    attn: str            # gqa | mla | ssm
+    ffn: str             # dense | moe
+    window: int | None   # sliding window (None = global)
+    theta: float
+
+
+def layer_kinds(cfg: ModelConfig) -> list[LayerKind]:
+    kinds = []
+    for i in range(cfg.num_layers):
+        # attention flavor
+        if cfg.family == "ssm":
+            a = "ssm"
+        elif cfg.attn_layer_period:
+            a = ("gqa" if i % cfg.attn_layer_period == cfg.attn_layer_offset
+                 else "ssm")
+        elif cfg.mla is not None:
+            a = "mla"
+        else:
+            a = "gqa"
+        # window / theta (gemma3 local:global)
+        window, theta = None, cfg.rope_theta
+        if cfg.local_global_pattern and a == "gqa":
+            period = cfg.local_global_pattern + 1
+            if i % period != cfg.local_global_pattern:
+                window = cfg.sliding_window
+                theta = cfg.local_rope_theta or cfg.rope_theta
+        # ffn flavor ("none" = pure mixer blocks, e.g. mamba2 with d_ff=0)
+        f = "none" if cfg.d_ff == 0 else "dense"
+        if cfg.moe is not None:
+            m = cfg.moe
+            if i >= m.first_dense_layers and \
+                    (i % m.every_k) == (m.every_k - 1 if m.every_k > 1
+                                        else 0):
+                f = "moe"
+        if a == "ssm":
+            f = "dense" if f == "dense" else f   # jamba: moe applies too
+        kinds.append(LayerKind(a, f, window, theta))
+    return kinds
+
+
+def scan_groups(cfg: ModelConfig) -> list[tuple[LayerKind, int]]:
+    """[(kind, run_length), ...] over consecutive identical kinds."""
+    groups, kinds = [], layer_kinds(cfg)
+    for k in kinds:
+        if groups and groups[-1][0] == k:
+            groups[-1] = (k, groups[-1][1] + 1)
+        else:
+            groups.append((k, 1))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init/apply
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, kind: LayerKind):
+    ks = jax.random.split(key, 4)
+    dtype = cfg.jnp_dtype
+    p = {"ln1": ones((cfg.d_model,), dtype),
+         "ln2": ones((cfg.d_model,), dtype)}
+    if kind.attn == "gqa":
+        p["attn"] = attn.gqa_init(ks[0], cfg, dtype)
+    elif kind.attn == "mla":
+        p["attn"] = attn.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = ssm_mod.ssm_init(ks[0], cfg, dtype)
+    if kind.ffn == "dense":
+        p["ffn"] = {
+            "w_gate": dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "w_up": dense_init(ks[2], cfg.d_model, cfg.d_ff, dtype),
+            "w_down": dense_init(ks[3], cfg.d_ff, cfg.d_model, dtype),
+        }
+    elif kind.ffn == "moe":
+        p["ffn"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    else:  # "none": pure mixer block (mamba2) — drop the second norm too
+        del p["ln2"]
+    return p
+
+
+def _block_prefill(pl, x, cfg: ModelConfig, kind: LayerKind,
+                   mrope_positions=None, want_cache: bool = True):
+    h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    if kind.attn == "gqa":
+        a, kv = attn.gqa_prefill(pl["attn"], h, cfg, theta=kind.theta,
+                                 window=kind.window,
+                                 mrope_positions=mrope_positions)
+        cache = {"k": kv[0], "v": kv[1]} if want_cache else None
+    elif kind.attn == "mla":
+        a, kv = attn.mla_prefill(pl["attn"], h, cfg)
+        cache = {"c_kv": kv[0], "k_rope": kv[1]} if want_cache else None
+    else:
+        a, cache = ssm_mod.ssm_prefill(pl["attn"], h, cfg)
+        cache = cache if want_cache else None
+    # name block outputs so the 'outs' remat policy can pin exactly the
+    # post-collective tensors (backward then skips re-running the TP
+    # all-reduces that dominate the collective term)
+    a = jax.ad_checkpoint.checkpoint_name(a, "block_attn_out")
+    x = x + a
+    if kind.ffn == "none":
+        return x, cache, jnp.zeros((), jnp.float32)
+    h2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    if kind.ffn == "dense":
+        f = swiglu(h2, pl["ffn"]["w_gate"], pl["ffn"]["w_up"],
+                   pl["ffn"]["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        f, aux = moe_mod.moe_ffn(pl["ffn"], h2, cfg)
+    f = jax.ad_checkpoint.checkpoint_name(f, "block_ffn_out")
+    return x + f, cache, aux
+
+
+def _block_decode(pl, x, cache, cfg: ModelConfig, kind: LayerKind):
+    h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    if kind.attn == "gqa":
+        a, cache = attn.gqa_decode(pl["attn"], h, cfg, cache,
+                                   theta=kind.theta, window=kind.window)
+    elif kind.attn == "mla":
+        a, cache = attn.mla_decode(pl["attn"], h, cfg, cache)
+    else:
+        a, cache = ssm_mod.ssm_decode(pl["attn"], h, cfg, cache)
+    x = x + a
+    if kind.ffn == "none":
+        return x, cache
+    h2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    if kind.ffn == "dense":
+        f = swiglu(h2, pl["ffn"]["w_gate"], pl["ffn"]["w_up"],
+                   pl["ffn"]["w_down"])
+    else:
+        f, _ = moe_mod.moe_ffn(pl["ffn"], h2, cfg)
+    return x + f, cache
+
+
+# ---------------------------------------------------------------------------
+# Model init / apply
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    dtype = cfg.jnp_dtype
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    params = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                  dtype),
+              "final_norm": ones((cfg.d_model,), dtype),
+              "groups": []}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model,
+                                       cfg.vocab_size, dtype)
+    li = 0
+    for kind, n in scan_groups(cfg):
+        gkeys = jnp.stack([keys[2 + li + j] for j in range(n)])
+        params["groups"].append(
+            jax.vmap(lambda k: _layer_init(k, cfg, kind))(gkeys))
+        li += n
+    if cfg.mtp_depth:
+        mk = jax.random.split(keys[-1], cfg.mtp_depth + 1)
+        kind = layer_kinds(cfg)[-1]
+        params["mtp"] = {
+            "proj": dense_init(mk[0], 2 * cfg.d_model, cfg.d_model, dtype),
+            "norm_h": ones((cfg.d_model,), dtype),
+            "norm_e": ones((cfg.d_model,), dtype),
+            "block": _layer_init(mk[1], cfg, kind),
+        }
+    return params
+
+
+def _embed(params, cfg, tokens, patch_emb=None):
+    x = params["embed"][tokens]                       # [B,S,D]
+    x = x.astype(cfg.jnp_dtype)
+    if patch_emb is not None:
+        # VLM stub: patch embeddings overwrite the first P positions
+        p = patch_emb.shape[1]
+        x = jnp.concatenate([patch_emb.astype(cfg.jnp_dtype),
+                             x[:, p:]], axis=1)
+    return hint(x, "batch", "res_seq", "model_d")
+
+
+def _logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return hint(out, "batch", "seq", "vocab")
+
+
+def backbone_prefill(params, cfg: ModelConfig, x, mrope_positions=None,
+                     remat: str = "none", want_cache: bool = True):
+    """``remat``: 'none' | 'dots' (save matmul outputs — cheap recompute,
+    high memory) | 'full' (save only layer-boundary activations — the
+    production default at scale).  Training passes want_cache=False so KV
+    tensors are never built/stacked (they'd ride the backward scan carry
+    otherwise)."""
+    caches, aux_total = [], jnp.zeros((), jnp.float32)
+    for gi, (kind, n) in enumerate(scan_groups(cfg)):
+        body = partial(_block_prefill, cfg=cfg, kind=kind,
+                       mrope_positions=mrope_positions,
+                       want_cache=want_cache)
+
+        def scan_body(carry, pl, body=body):
+            y, cache, aux = body(pl, carry)
+            return y, (cache, aux)
+
+        if remat == "full":
+            scan_body = jax.checkpoint(scan_body)
+        elif remat == "dots":
+            scan_body = jax.checkpoint(
+                scan_body,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        elif remat == "outs":
+            # save only the named post-collective block outputs: memory
+            # ~2 residual-sized tensors per layer, and backward recompute
+            # never re-runs the wo/w_down all-reduces
+            scan_body = jax.checkpoint(
+                scan_body,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "block_attn_out", "block_ffn_out"))
+        x, (cache_g, aux_g) = jax.lax.scan(scan_body, x,
+                                           params["groups"][gi])
+        caches.append(cache_g)
+        aux_total = aux_total + jnp.sum(aux_g)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches, aux_total
+
+
+def forward_train(params, cfg: ModelConfig, tokens, *, patch_emb=None,
+                  mrope_positions=None, loss_mask=None, remat: str = "dots",
+                  aux_weight: float = 0.01, mtp_weight: float = 0.3):
+    """tokens [B, S] -> scalar loss (+ metrics dict)."""
+    x = _embed(params, cfg, tokens, patch_emb)
+    h, _, aux = backbone_prefill(params, cfg, x,
+                                 mrope_positions=mrope_positions,
+                                 remat=remat, want_cache=False)
+    logits = _logits(params, cfg, h)
+    labels = tokens[:, 1:]
+    mask = loss_mask[:, 1:] if loss_mask is not None else None
+    loss = cross_entropy(logits[:, :-1], labels, mask=mask, z_loss=1e-4)
+    metrics = {"lm_loss": loss, "aux_loss": aux}
+    total = loss + aux_weight * aux
+
+    if cfg.mtp_depth:
+        # deepseek-v3 multi-token prediction: predict t+2 from (h_t, e_{t+1})
+        mp = params["mtp"]
+        h_in = rms_norm(h[:, :-1], mp["norm_h"], cfg.norm_eps)
+        e_in = rms_norm(_embed(params, cfg, tokens[:, 1:]),
+                        mp["norm_e"], cfg.norm_eps)
+        z = jnp.einsum("bsd,dk->bsk",
+                       jnp.concatenate([h_in, e_in], axis=-1), mp["proj"])
+        kind = layer_kinds(cfg)[-1]
+        z, _, _ = _block_prefill(mp["block"], z, cfg, kind)
+        mtp_logits = _logits(params, cfg, z)
+        mtp_loss = cross_entropy(mtp_logits[:, :-1], tokens[:, 2:])
+        metrics["mtp_loss"] = mtp_loss
+        total = total + mtp_weight * mtp_loss
+
+    metrics["loss"] = total
+    return total, metrics
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, patch_emb=None,
+            mrope_positions=None):
+    x = _embed(params, cfg, tokens, patch_emb)
+    h, caches, _ = backbone_prefill(params, cfg, x,
+                                    mrope_positions=mrope_positions)
+    return _logits(params, cfg, h[:, -1:]), caches
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> list:
+    """Dense decode caches, one stacked pytree per scan group."""
+    dtype = dtype or cfg.jnp_dtype
+    caches = []
+    for kind, n in scan_groups(cfg):
+        if kind.attn == "gqa":
+            cap = min(max_len, kind.window) if kind.window else max_len
+            c = {"k": jnp.zeros((n, batch, cap, cfg.num_kv_heads,
+                                 cfg.head_dim), dtype),
+                 "v": jnp.zeros((n, batch, cap, cfg.num_kv_heads,
+                                 cfg.head_dim), dtype),
+                 "length": jnp.zeros((n, batch), jnp.int32)}
+        elif kind.attn == "mla":
+            m = cfg.mla
+            c = {"c_kv": jnp.zeros((n, batch, max_len, m.kv_lora_rank),
+                                   dtype),
+                 "k_rope": jnp.zeros((n, batch, max_len,
+                                      m.qk_rope_head_dim), dtype),
+                 "length": jnp.zeros((n, batch), jnp.int32)}
+        else:
+            s = cfg.ssm
+            d_inner = s.expand * cfg.d_model
+            heads = d_inner // s.head_dim
+            conv_dim = d_inner + 2 * s.n_groups * s.d_state
+            c = {"state": jnp.zeros((n, batch, heads, s.head_dim,
+                                     s.d_state), jnp.float32),
+                 "conv": jnp.zeros((n, batch, s.d_conv - 1, conv_dim),
+                                   dtype)}
+        caches.append(c)
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, last_tok, caches):
+    """last_tok [B, 1] -> (logits [B, 1, V], updated caches)."""
+    x = _embed(params, cfg, last_tok)
+    new_caches = []
+    for gi, (kind, n) in enumerate(scan_groups(cfg)):
+
+        def scan_body(carry, inp, kind=kind):
+            pl, cache = inp
+            y, cache = _block_decode(pl, carry, cache, cfg, kind)
+            return y, cache
+
+        x, cache_g = jax.lax.scan(scan_body, x,
+                                  (params["groups"][gi], caches[gi]))
+        new_caches.append(cache_g)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, x), new_caches

@@ -1,0 +1,207 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed post-conv frame embeddings [B, frames, D] (whisper
+large-v3: 1500 frames).  Encoder = non-causal self-attention + GELU MLP
+with LayerNorm(+bias); decoder = causal self-attn + cross-attn over the
+encoder output + GELU MLP; learned decoder positions; tied lm head — all
+faithful to the original architecture.
+
+Serving note (DESIGN.md §5): the cross-attention KV is computed once per
+utterance and cached; the serving layer stores it in the indexed cache
+keyed by utterance id — a literal point-lookup workload.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import rope as rp
+from repro.models.common import (ModelConfig, cross_entropy, dense_init,
+                                 embed_init, gelu_mlp, layer_norm, ones,
+                                 zeros)
+from repro.models.sharding import hint
+
+
+def _ln_init(d, dtype):
+    return {"w": ones((d,), dtype), "b": zeros((d,), dtype)}
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln1": _ln_init(d, dtype), "ln2": _ln_init(d, dtype),
+        "attn": attn.gqa_init(ks[0], cfg, dtype),
+        "mlp": {"w_in": dense_init(ks[1], d, f, dtype),
+                "b_in": zeros((f,), dtype),
+                "w_out": dense_init(ks[2], f, d, dtype),
+                "b_out": zeros((d,), dtype)},
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 5)
+    p = _enc_layer_init(ks[0], cfg, dtype)
+    p["ln_x"] = _ln_init(cfg.d_model, dtype)
+    p["cross"] = attn.cross_init(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = cfg.jnp_dtype
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_dec": embed_init(ks[3], cfg.max_pos, cfg.d_model, dtype),
+        "enc_ln_post": _ln_init(cfg.d_model, dtype),
+        "dec_ln_post": _ln_init(cfg.d_model, dtype),
+        "enc": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "dec": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+    }
+
+
+def _enc_block(pl, x, cfg):
+    h = layer_norm(x, pl["ln1"]["w"], pl["ln1"]["b"])
+    a, _ = attn.gqa_prefill(pl["attn"], h, cfg, theta=cfg.rope_theta,
+                            causal=False, use_rope=False)
+    x = x + a
+    h = layer_norm(x, pl["ln2"]["w"], pl["ln2"]["b"])
+    return x + gelu_mlp(h, pl["mlp"]["w_in"], pl["mlp"]["b_in"],
+                        pl["mlp"]["w_out"], pl["mlp"]["b_out"])
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: [B, T, D] post-conv features (stub frontend output)."""
+    x = frames.astype(cfg.jnp_dtype) \
+        + rp.sinusoidal_positions(frames.shape[1],
+                                  cfg.d_model).astype(cfg.jnp_dtype)
+    x = hint(x, "batch", "seq", "model_d")
+
+    def body(carry, pl):
+        return _enc_block(pl, carry, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return layer_norm(x, params["enc_ln_post"]["w"],
+                      params["enc_ln_post"]["b"])
+
+
+def _dec_block(pl, x, cfg, cross_kv):
+    h = layer_norm(x, pl["ln1"]["w"], pl["ln1"]["b"])
+    a, kv = attn.gqa_prefill(pl["attn"], h, cfg, theta=cfg.rope_theta,
+                             causal=True, use_rope=False)
+    x = x + a
+    h = layer_norm(x, pl["ln_x"]["w"], pl["ln_x"]["b"])
+    c, _ = attn.gqa_prefill(pl["cross"], h, cfg, theta=cfg.rope_theta,
+                            cross_kv=cross_kv, use_rope=False)
+    x = x + c
+    h = layer_norm(x, pl["ln2"]["w"], pl["ln2"]["b"])
+    x = x + gelu_mlp(h, pl["mlp"]["w_in"], pl["mlp"]["b_in"],
+                     pl["mlp"]["w_out"], pl["mlp"]["b_out"])
+    return x, kv
+
+
+def forward_train(params, cfg: ModelConfig, frames, tokens, *,
+                  loss_mask=None, remat: str = "dots"):
+    enc_out = encode(params, cfg, frames)
+
+    x = params["embed"][tokens].astype(cfg.jnp_dtype)
+    x = x + params["pos_dec"][:tokens.shape[1]].astype(cfg.jnp_dtype)
+
+    def body(carry, pl):
+        cross_kv = attn.project_cross_kv(pl["cross"], enc_out, cfg)
+        y, _ = _dec_block(pl, carry, cfg, cross_kv)
+        return y, None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = layer_norm(x, params["dec_ln_post"]["w"], params["dec_ln_post"]["b"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    logits = hint(logits, "batch", "seq", "vocab")
+    mask = loss_mask[:, 1:] if loss_mask is not None else None
+    loss = cross_entropy(logits[:, :-1], tokens[:, 1:], mask=mask)
+    return loss, {"loss": loss, "lm_loss": loss}
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens):
+    """Inference prefill: encode once, teacher-forced decoder pass.
+    Returns logits at the last position (the decode caches mirror the
+    self-attn KV computed here; dry-run lowers this compute shape)."""
+    enc_out = encode(params, cfg, frames)
+    x = params["embed"][tokens].astype(cfg.jnp_dtype)
+    x = x + params["pos_dec"][:tokens.shape[1]].astype(cfg.jnp_dtype)
+
+    def body(carry, pl):
+        cross_kv = attn.project_cross_kv(pl["cross"], enc_out, cfg)
+        y, kv = _dec_block(pl, carry, cfg, cross_kv)
+        return y, kv
+
+    x, kvs = jax.lax.scan(body, x, params["dec"])
+    x = layer_norm(x, params["dec_ln_post"]["w"], params["dec_ln_post"]["b"])
+    logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], params["embed"])
+    return logits, kvs
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.jnp_dtype
+    n = cfg.num_layers
+    return {
+        "k": jnp.zeros((n, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                       dtype),
+        "v": jnp.zeros((n, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                       dtype),
+        "length": jnp.zeros((n, batch), jnp.int32),
+        # cross-attn KV: computed once per utterance, then point-looked-up
+        "cross_k": jnp.zeros((n, batch, cfg.encoder_seq, cfg.num_kv_heads,
+                              cfg.head_dim), dtype),
+        "cross_v": jnp.zeros((n, batch, cfg.encoder_seq, cfg.num_kv_heads,
+                              cfg.head_dim), dtype),
+    }
+
+
+def build_cross_cache(params, cfg: ModelConfig, enc_out):
+    ks, vs = [], []
+
+    def body(_, pl):
+        k, v = attn.project_cross_kv(pl["cross"], enc_out, cfg)
+        return None, (k, v)
+
+    _, (k, v) = jax.lax.scan(body, None, params["dec"])
+    return k, v
+
+
+def decode_step(params, cfg: ModelConfig, last_tok, cache):
+    """last_tok [B,1]; cache from init_cache with cross_k/v filled."""
+    x = params["embed"][last_tok].astype(cfg.jnp_dtype)
+    pos = cache["length"][0]                               # [B]
+    x = x + params["pos_dec"][pos][:, None, :].astype(cfg.jnp_dtype)
+
+    def body(carry, inp):
+        pl, k, v, ck, cv, ln = inp
+        self_cache = {"k": k, "v": v, "length": ln}
+        h = layer_norm(carry, pl["ln1"]["w"], pl["ln1"]["b"])
+        a, self_cache = attn.gqa_decode(pl["attn"], h, cfg, self_cache,
+                                        theta=cfg.rope_theta,
+                                        use_rope=False)
+        y = carry + a
+        h = layer_norm(y, pl["ln_x"]["w"], pl["ln_x"]["b"])
+        c, _ = attn.gqa_decode(pl["cross"], h, cfg, self_cache,
+                               theta=cfg.rope_theta, cross_kv=(ck, cv))
+        y = y + c
+        h = layer_norm(y, pl["ln2"]["w"], pl["ln2"]["b"])
+        y = y + gelu_mlp(h, pl["mlp"]["w_in"], pl["mlp"]["b_in"],
+                         pl["mlp"]["w_out"], pl["mlp"]["b_out"])
+        return y, (self_cache["k"], self_cache["v"], self_cache["length"])
+
+    x, (k, v, ln) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"], cache["length"]))
+    x = layer_norm(x, params["dec_ln_post"]["w"], params["dec_ln_post"]["b"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    new_cache = dict(cache, k=k, v=v, length=ln)
+    return logits, new_cache

@@ -1,0 +1,14 @@
+"""serving — indexed prefix/KV cache + decode engine.
+
+  kvcache.py  PagePool (row batches) + PrefixCache (hash-index lookup,
+              MVCC commits) — the paper's cache applied to inference
+  engine.py   dense serve_step (dry-run path), paged GQA fast path,
+              host-side batched Engine
+"""
+
+from repro.serving.kvcache import PagePool, PrefixCache, prefix_hashes
+from repro.serving.engine import Engine, Request, make_serve_step, \
+    paged_decode_step
+
+__all__ = ["PagePool", "PrefixCache", "prefix_hashes", "Engine", "Request",
+           "make_serve_step", "paged_decode_step"]

@@ -1,0 +1,211 @@
+"""Serving engine: batched decode with the indexed prefix/KV cache.
+
+Two decode paths, one contract:
+
+  * ``make_serve_step`` — dense-cache decode step for *any* family
+    (gqa/mla/ssm/hybrid/whisper).  This is what the dry-run lowers for the
+    decode_32k / long_500k shapes: one new token against a seq_len KV
+    cache, global-view shardable.
+  * ``paged_decode_step`` — the paged fast path for uniform GQA models:
+    attention reads KV pages straight from the PagePool via the Pallas
+    kernel (kernels/decode_attention.py), i.e. serving *consumes the
+    indexed cache's row batches on-TPU*.  Pages are resolved once per
+    request by PrefixCache.lookup_prefix (the paper's point lookup), not
+    per token.
+
+The host-side ``Engine`` glues them: request admission, prefix-cache
+lookup (skip cached pages), prefill, page commit (MVCC append), batched
+decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models import transformer as tf
+from repro.models import rope as rp
+from repro.models.common import ModelConfig, rms_norm, swiglu
+from repro.serving.kvcache import PagePool, PrefixCache, prefix_hashes
+
+
+# ---------------------------------------------------------------------------
+# Dense serve step (the dry-run path)
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, caches, last_tok [B,1]) -> (logits, caches)."""
+    if cfg.encoder_decoder:
+        from repro.models import whisper as wh
+
+        def serve_step(params, caches, last_tok):
+            return wh.decode_step(params, cfg, last_tok, caches)
+    else:
+        def serve_step(params, caches, last_tok):
+            return tf.decode_step(params, cfg, last_tok, caches)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (GQA fast path over the indexed cache's pages)
+# ---------------------------------------------------------------------------
+
+def paged_decode_step(params, cfg: ModelConfig, last_tok, pool: PagePool,
+                      page_tables, lengths, *, interpret: bool = True):
+    """One decode step reading/writing KV pages in place.
+
+    last_tok    : [B, 1] int32
+    pool        : PagePool (k/v: [L, P, page, Hkv, D])
+    page_tables : [B, MAXP] int32 (-1 padded) — resolved by PrefixCache
+    lengths     : [B] int32 current sequence lengths
+    returns (logits [B, 1, V], new pool)
+
+    Restriction: uniform dense GQA models (one scan group, no window) —
+    the fast-path regime; other families use the dense path.
+    """
+    groups = tf.scan_groups(cfg)
+    assert len(groups) == 1 and groups[0][0].attn == "gqa" \
+        and groups[0][0].ffn == "dense" and groups[0][0].window is None, \
+        "paged fast path supports uniform GQA stacks"
+    kind = groups[0][0]
+    page = pool.page
+    b = last_tok.shape[0]
+
+    x = tf._embed(params, cfg, last_tok)                   # [B, 1, D]
+    pids = page_tables[jnp.arange(b), lengths // page]     # [B]
+    offs = lengths % page                                  # [B]
+
+    def body(carry, inp):
+        x = carry
+        pl, kp, vp = inp                                   # kp: [P,page,Hkv,D]
+        h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+        from repro.models.attention import gqa_project_qkv
+        q, k_new, v_new = gqa_project_qkv(
+            pl["attn"], h, cfg, lengths[:, None], kind.theta)
+        kp = kp.at[pids, offs].set(k_new[:, 0].astype(kp.dtype))
+        vp = vp.at[pids, offs].set(v_new[:, 0].astype(vp.dtype))
+        out = ops.decode_attention(
+            q[:, 0], kp, vp, page_tables, lengths + 1,
+            cfg.head_dim ** -0.5, interpret=interpret)     # [B, Hq, D]
+        out = out.reshape(b, 1, cfg.q_dim).astype(x.dtype)
+        x = x + jnp.einsum("bsq,qd->bsd", out, pl["attn"]["wo"])
+        h2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, pl["ffn"]["w_gate"], pl["ffn"]["w_up"],
+                       pl["ffn"]["w_down"])
+        return x, (kp, vp)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["groups"][0], pool.k, pool.v))
+    pool = dataclasses.replace(pool, k=new_k, v=new_v)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return tf._logits(params, cfg, x), pool
+
+
+# ---------------------------------------------------------------------------
+# Host-side engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    seq_id: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+
+
+class Engine:
+    """Batched serving with indexed prefix reuse (paper-cache-as-KV-cache)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, num_pages: int = 256,
+                 page: int = 16, max_pages_per_seq: int = 32,
+                 interpret: bool = True):
+        self.params, self.cfg = params, cfg
+        self.page, self.maxp = page, max_pages_per_seq
+        self.pool = PagePool.create(cfg.num_layers, num_pages, page,
+                                    cfg.num_kv_heads, cfg.head_dim,
+                                    dtype=jnp.float32)
+        self.cache = PrefixCache()
+        self.interpret = interpret
+        self.stats = {"pages_reused": 0, "pages_computed": 0,
+                      "prefill_tokens_skipped": 0}
+
+    # -- admission --------------------------------------------------------
+    def admit(self, req: Request):
+        """Prefill with prefix reuse; returns (page_table [MAXP], length)."""
+        cfg, page = self.cfg, self.page
+        n_cached, cached_ids = self.cache.lookup_prefix(req.prompt, page)
+        self.stats["pages_reused"] += n_cached
+        self.stats["prefill_tokens_skipped"] += n_cached * page
+
+        # full prefill for simplicity of KV extraction; cached pages are
+        # *not recomputed* in the page pool (they're shared), only new ones
+        # are written.  (A production engine would prefill the suffix only;
+        # the page-sharing bookkeeping is identical.)
+        toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+        _, caches = tf.prefill(self.params, cfg, toks)
+        # caches: list per scan group, dict k: [n, B, S, Hkv, D]
+        k = jnp.concatenate([c["k"][:, 0] for c in caches], axis=0)
+        v = jnp.concatenate([c["v"][:, 0] for c in caches], axis=0)
+
+        s_full = (len(req.prompt) // page) * page
+        n_new = s_full // page - n_cached
+        new_ids = self.pool.alloc(max(n_new, 0) + 1)  # +1 decode page
+        if n_new > 0:
+            lo = n_cached * page
+            self.pool = self.pool.write_pages(
+                k[:, lo:s_full], v[:, lo:s_full], new_ids[:n_new])
+            self.stats["pages_computed"] += n_new
+            hs = prefix_hashes(req.prompt, page)
+            self.cache.commit(hs[n_cached:], new_ids[:n_new], req.seq_id)
+
+        # tail tokens (not page aligned) go into the decode page
+        tail = len(req.prompt) - s_full
+        decode_page = new_ids[-1]
+        if tail:
+            l, _, hkv, d = k.shape
+            pad = page - tail
+            kt = jnp.pad(k[:, s_full:], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vt = jnp.pad(v[:, s_full:], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            self.pool = self.pool.write_pages(kt, vt, [decode_page])
+
+        pt = np.full((self.maxp,), -1, np.int32)
+        ids = list(cached_ids) + new_ids[:n_new] + [decode_page]
+        pt[:len(ids)] = ids
+        return pt, len(req.prompt)
+
+    # -- batched decode ---------------------------------------------------
+    def run(self, requests: list[Request], steps: int):
+        cfg = self.cfg
+        pts, lens = [], []
+        for r in requests:
+            pt, ln = self.admit(r)
+            pts.append(pt)
+            lens.append(ln)
+        page_tables = jnp.asarray(np.stack(pts))
+        lengths = jnp.asarray(np.asarray(lens, np.int32))
+        # greedy last token of each prompt
+        last = jnp.asarray(np.stack([r.prompt[-1:] for r in requests]))
+
+        for _ in range(steps):
+            # grow page tables when a sequence crosses a page boundary
+            need = np.asarray((lengths % self.page) == 0)
+            if need.any():
+                pts = np.asarray(page_tables)
+                for i in np.nonzero(need)[0]:
+                    slot = int(lengths[i]) // self.page
+                    if pts[i, slot] < 0:
+                        pts[i, slot] = self.pool.alloc(1)[0]
+                page_tables = jnp.asarray(pts)
+            logits, self.pool = paged_decode_step(
+                self.params, cfg, last, self.pool, page_tables, lengths,
+                interpret=self.interpret)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            for i, r in enumerate(requests):
+                r.out.append(int(nxt[i]))
+            last = nxt[:, None]
+            lengths = lengths + 1
+        return requests

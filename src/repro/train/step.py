@@ -1,0 +1,104 @@
+"""train_step factory: loss dispatch, microbatch accumulation, remat,
+optional cross-pod gradient compression.
+
+The returned ``train_step`` is a pure function
+``(params, opt_state, batch [, residual]) -> (params, opt_state, metrics
+[, residual])`` — the launcher jits it with mesh shardings; tests call it
+eagerly on CPU.  Microbatching reshapes the global batch ``[B, ...]`` into
+``[k, B/k, ...]`` and accumulates gradients with a ``lax.scan`` so peak
+activation memory is one microbatch (the standard memory/throughput knob;
+combined with remat policies from models/transformer.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models import whisper as wh
+from repro.train import compress as cmp
+from repro.train import optim
+
+
+def make_loss_fn(cfg, remat: str = "dots"):
+    """Family dispatch: batch dict -> scalar loss (+ metrics)."""
+    if cfg.encoder_decoder:
+        def loss_fn(params, batch):
+            return wh.forward_train(params, cfg, batch["frames"],
+                                    batch["tokens"], remat=remat)
+    elif cfg.family == "vlm":
+        def loss_fn(params, batch):
+            return tf.forward_train(params, cfg, batch["tokens"],
+                                    patch_emb=batch["patch_emb"],
+                                    mrope_positions=batch.get(
+                                        "mrope_positions"),
+                                    remat=remat)
+    else:
+        def loss_fn(params, batch):
+            return tf.forward_train(params, cfg, batch["tokens"],
+                                    remat=remat)
+    return loss_fn
+
+
+def init_params(cfg, key):
+    if cfg.encoder_decoder:
+        return wh.init_params(cfg, key)
+    return tf.init_params(cfg, key)
+
+
+def _split_micro(batch, k: int):
+    def sp(name, x):
+        if name == "mrope_positions":      # [3, B, S]: batch is dim 1
+            b = x.shape[1]
+            assert b % k == 0, (b, k)
+            parts = x.reshape(x.shape[0], k, b // k, *x.shape[2:])
+            return jnp.moveaxis(parts, 1, 0)
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        return x.reshape(k, b // k, *x.shape[1:])
+    return {name: sp(name, x) for name, x in batch.items()}
+
+
+def make_train_step(cfg, opt_cfg: optim.AdamWConfig, *,
+                    microbatches: int = 1, remat: str = "dots",
+                    compress_grads: bool = False):
+    loss_fn = make_loss_fn(cfg, remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        micro = _split_micro(batch, microbatches)
+
+        def body(carry, mb):
+            acc = carry
+            (loss, metrics), g = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32) / microbatches,
+                acc, g)
+            return acc, metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        grads, metrics = jax.lax.scan(body, zeros, micro)
+        metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        return grads, metrics
+
+    if compress_grads:
+        def train_step(params, opt_state, batch, residual):
+            grads, metrics = compute_grads(params, batch)
+            grads, residual = cmp.ef_compress_grads(grads, residual)
+            params, opt_state, om = optim.apply_updates(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, {**metrics, **om}, residual
+    else:
+        def train_step(params, opt_state, batch):
+            grads, metrics = compute_grads(params, batch)
+            params, opt_state, om = optim.apply_updates(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, {**metrics, **om}
+    return train_step

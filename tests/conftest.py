@@ -1,0 +1,14 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+run on the single real CPU device; only launch/dryrun.py (run as a script
+or subprocess) forces 512 placeholder devices.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

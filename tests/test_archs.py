@@ -1,0 +1,119 @@
+"""Per-arch smoke tests: reduced config of the same family, one
+forward/train step on CPU, output shapes + no NaNs (assignment f)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, REGISTRY, get_smoke
+from repro.configs import shapes as shp
+from repro.train import optim
+from repro.train.step import init_params, make_loss_fn, make_train_step
+
+
+def _smoke_batch(cfg, rng, b=2, s=16):
+    batch = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm":
+        p = 4
+        batch["patch_emb"] = jnp.asarray(
+            rng.standard_normal((b, p, cfg.d_model)), jnp.float32)
+        pos = np.broadcast_to(np.arange(s, dtype=np.int32), (3, b, s))
+        batch["mrope_positions"] = jnp.asarray(pos)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(rng, arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, rng)
+    ocfg = optim.AdamWConfig(lr_peak=1e-3, warmup_steps=2, decay_steps=10)
+    step = make_train_step(cfg, ocfg, remat="none")
+    opt = optim.init_state(ocfg, params)
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), params, params2)
+    assert max(jax.tree.leaves(moved)) > 0, arch
+    assert int(opt2["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes(rng, arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    loss_fn = make_loss_fn(cfg, remat="none")
+    batch = _smoke_batch(cfg, rng)
+    loss, metrics = loss_fn(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), arch
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if not REGISTRY[a].full().encoder_decoder])
+def test_smoke_decode_step(rng, arch):
+    from repro.models import transformer as tf
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    cache = tf.init_cache(cfg, 2, 32, dtype=jnp.float32)
+    tok = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 1)), jnp.int32)
+    logits, cache = tf.decode_step(params, cfg, tok, cache)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned numbers (layers/d_model/heads/kv/d_ff/vocab)."""
+    expect = {
+        "deepseek-v3-671b": (61, 7168, 128, 128, 129280),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 102400),
+        "qwen3-0.6b": (28, 1024, 16, 8, 151936),
+        "gemma3-4b": (34, 2560, 8, 4, 262144),
+        "qwen1.5-4b": (40, 2560, 20, 20, 151936),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 32000),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 151936),
+        "mamba2-370m": (48, 1024, 0, 0, 50280),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 65536),
+        "whisper-large-v3": (32, 1280, 20, 20, 51866),
+    }
+    for arch, (nl, dm, h, kv, vocab) in expect.items():
+        cfg = REGISTRY[arch].full()
+        assert cfg.num_layers == nl, arch
+        assert cfg.d_model == dm, arch
+        assert cfg.num_heads == h, arch
+        assert cfg.num_kv_heads == kv, arch
+        assert cfg.vocab_size == vocab, arch
+    assert REGISTRY["deepseek-v3-671b"].full().moe.num_experts == 256
+    assert REGISTRY["deepseek-v3-671b"].full().moe.top_k == 8
+    assert REGISTRY["jamba-v0.1-52b"].full().moe.num_experts == 16
+    assert REGISTRY["mamba2-370m"].full().ssm.d_state == 128
+
+
+def test_shape_applicability_rules():
+    """long_500k only for sub-quadratic archs (DESIGN.md §5)."""
+    runs_500k = {a for a in ARCH_IDS
+                 if shp.applicable(REGISTRY[a].full(), "long_500k")}
+    assert runs_500k == {"gemma3-4b", "mamba2-370m", "jamba-v0.1-52b"}
+    for a in ARCH_IDS:
+        assert shp.applicable(REGISTRY[a].full(), "train_4k")
+        assert shp.applicable(REGISTRY[a].full(), "decode_32k")
+
+
+def test_input_specs_no_allocation():
+    """ShapeDtypeStructs only — no device arrays created."""
+    cfg = REGISTRY["qwen3-0.6b"].full()
+    spec = shp.input_specs(cfg, "train_4k")
+    for leaf in jax.tree.leaves(spec["batch"]):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    spec_d = shp.input_specs(cfg, "decode_32k")
+    assert spec_d["last_tok"].shape == (128, 1)
+    for leaf in jax.tree.leaves(spec_d["caches"]):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)

@@ -1,0 +1,126 @@
+"""Unit + property tests for the dense hash index (the cTrie replacement)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+from repro.core.hashindex import (EMPTY_KEY, build_index, chain_walk,
+                                  match_counts, probe, suggest_num_buckets)
+from repro.core.pointers import NULL_PTR
+
+
+def _oracle_latest(keys, q):
+    """Latest (max row id) per query key, -1 if absent."""
+    out = np.full(len(q), -1, np.int32)
+    for i, k in enumerate(q):
+        hits = np.nonzero(keys == k)[0]
+        if len(hits):
+            out[i] = hits.max()
+    return out
+
+
+def test_probe_latest_matches_oracle(rng):
+    keys = rng.integers(0, 200, size=1000).astype(np.int64)
+    rids = np.arange(1000, dtype=np.int32)
+    idx, _, _ = build_index(keys, rids)
+    q = np.concatenate([keys[:100], rng.integers(200, 400, 50)]).astype(np.int64)
+    got = np.asarray(probe(idx, q))
+    np.testing.assert_array_equal(got, _oracle_latest(keys, q))
+
+
+def test_chain_walk_enumerates_all_rows(rng):
+    keys = rng.integers(0, 50, size=600).astype(np.int64)
+    rids = np.arange(600, dtype=np.int32)
+    idx, prev_rows, prev_vals = build_index(keys, rids)
+    prev = jnp.full((600,), NULL_PTR, jnp.int32).at[prev_rows].set(
+        prev_vals, mode="drop")
+    q = np.arange(50, dtype=np.int64)
+    head = probe(idx, q)
+    rows, truncated = chain_walk(prev, head, max_matches=64)
+    rows = np.asarray(rows)
+    for i, k in enumerate(q):
+        expect = np.sort(np.nonzero(keys == k)[0])[::-1]  # newest first
+        got = rows[i][rows[i] >= 0]
+        np.testing.assert_array_equal(got, expect[:64])
+    assert not np.asarray(truncated).any()
+
+
+def test_chain_walk_truncation(rng):
+    keys = np.zeros(100, np.int64)  # all same key
+    idx, prev_rows, prev_vals = build_index(keys, np.arange(100, dtype=np.int32))
+    prev = jnp.full((100,), NULL_PTR, jnp.int32).at[prev_rows].set(
+        prev_vals, mode="drop")
+    head = probe(idx, np.zeros(1, np.int64))
+    rows, truncated = chain_walk(prev, head, max_matches=10)
+    assert np.asarray(truncated)[0]
+    assert (np.asarray(rows)[0] >= 0).all()
+    counts = match_counts(prev, head, 10)
+    assert int(counts[0]) == 10
+
+
+def test_invalid_rows_excluded(rng):
+    keys = rng.integers(0, 30, size=200).astype(np.int64)
+    valid = rng.random(200) < 0.5
+    idx, _, _ = build_index(keys, np.arange(200, dtype=np.int32), valid=jnp.asarray(valid))
+    q = np.arange(30, dtype=np.int64)
+    got = np.asarray(probe(idx, q))
+    masked = np.where(valid, keys, -10**18)
+    np.testing.assert_array_equal(got, _oracle_latest(masked, q))
+
+
+def test_overflow_retry_doubles_buckets(rng):
+    # force tiny bucket count so the first build overflows
+    keys = rng.integers(0, 10**9, size=4096).astype(np.int64)
+    idx, _, _ = build_index(keys, np.arange(4096, dtype=np.int32),
+                            num_buckets=16, slots=4, max_retries=12)
+    assert idx.num_buckets > 16
+    got = np.asarray(probe(idx, keys[:64]))
+    assert (got >= 0).all()
+
+
+def test_empty_key_never_matches():
+    keys = np.array([1, 2, 3], np.int64)
+    idx, _, _ = build_index(keys, np.arange(3, dtype=np.int32))
+    got = probe(idx, jnp.asarray([np.iinfo(np.int64).min], jnp.int64))
+    assert int(got[0]) == -1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=-2**62, max_value=2**62), min_size=1,
+                max_size=300),
+       st.integers(min_value=0, max_value=10**6))
+def test_property_probe_exact(keys_list, extra):
+    """Every inserted key is found with its latest row id; absent keys miss."""
+    keys = np.asarray(keys_list, np.int64)
+    idx, _, _ = build_index(keys, np.arange(len(keys), dtype=np.int32))
+    q = np.concatenate([keys, [extra]]).astype(np.int64)
+    got = np.asarray(probe(idx, q))
+    np.testing.assert_array_equal(got, _oracle_latest(keys, q))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=10**5))
+def test_property_bucket_hash_in_range(n):
+    nb = suggest_num_buckets(n)
+    assert nb & (nb - 1) == 0
+    ks = np.arange(min(n, 1000), dtype=np.int64) * 7919
+    b = np.asarray(hashing.bucket_hash(jnp.asarray(ks), nb))
+    assert (b >= 0).all() and (b < nb).all()
+
+
+def test_partition_hash_balanced(rng):
+    keys = rng.integers(0, 2**60, size=100_000).astype(np.int64)
+    for s in (3, 4, 16, 255):
+        d = np.asarray(hashing.partition_hash(jnp.asarray(keys), s))
+        counts = np.bincount(d, minlength=s)
+        assert counts.min() > 0.8 * len(keys) / s
+        assert counts.max() < 1.2 * len(keys) / s
+
+
+def test_string_hashing_stable():
+    a = hashing.hash_string_host("N12345")
+    b = hashing.hash_string_host("N12345")
+    c = hashing.hash_string_host("N12346")
+    assert a == b and a != c

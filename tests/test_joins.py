@@ -1,0 +1,82 @@
+"""Join operators: indexed path vs the vanilla baselines (paper Fig 7/8)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Schema, create_index, joins
+
+SCH = Schema.of("k", k="int64", v="float32")
+
+
+def _sorted_pairs(cols, valid):
+    """Canonical multiset of (probe_tag, build_v) matches for comparison."""
+    v = np.asarray(valid)
+    out = []
+    bv = np.asarray(cols[0]["v"]) if "v" in cols[0] else None
+    return v
+
+
+def test_indexed_vs_hash_vs_sortmerge(rng):
+    n, q = 800, 100
+    bkeys = rng.integers(0, 150, n).astype(np.int64)
+    build = {"k": bkeys, "v": rng.random(n).astype(np.float32)}
+    t = create_index(build, SCH, rows_per_batch=128)
+    pk = np.concatenate([rng.choice(bkeys, q - 10),
+                         rng.integers(200, 300, 10)]).astype(np.int64)
+    probe_cols = {"pk": pk, "tag": np.arange(q, dtype=np.int32)}
+
+    bi, pi, vi = joins.indexed_join(t, probe_cols, "pk", max_matches=32)
+    bh, ph, vh = joins.hash_join(build, "k", probe_cols, "pk", max_matches=32)
+    bs, ps, vs = joins.sort_merge_join(build, "k", probe_cols, "pk",
+                                       max_matches=32)
+
+    np.testing.assert_array_equal(np.asarray(vi), np.asarray(vh))
+    np.testing.assert_array_equal(np.asarray(vi), np.asarray(vs))
+    # matched values agree (newest-first ordering is part of the contract)
+    for b in (bh, bs):
+        np.testing.assert_allclose(
+            np.asarray(bi["v"]) * np.asarray(vi),
+            np.asarray(b["v"]) * np.asarray(vi), rtol=1e-6)
+
+
+def test_scan_lookup_equals_indexed_lookup(rng):
+    n = 400
+    build = {"k": rng.integers(0, 60, n).astype(np.int64),
+             "v": rng.random(n).astype(np.float32)}
+    t = create_index(build, SCH, rows_per_batch=64)
+    q = np.arange(70, dtype=np.int64)
+    gi, vi = joins.indexed_lookup(t, q, max_matches=32)
+    gs, vs = joins.scan_lookup(t, q, max_matches=32)
+    np.testing.assert_array_equal(np.asarray(vi), np.asarray(vs))
+    np.testing.assert_allclose(np.asarray(gi["v"]) * np.asarray(vi),
+                               np.asarray(gs["v"]) * np.asarray(vs))
+
+
+def test_aggregate_ops():
+    vals = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    valid = jnp.asarray([True, True, False, True])
+    assert float(joins.aggregate(vals, valid, "sum")) == 7.0
+    assert int(joins.aggregate(vals, valid, "count")) == 3
+    assert float(joins.aggregate(vals, valid, "min")) == 1.0
+    assert float(joins.aggregate(vals, valid, "max")) == 4.0
+    assert abs(float(joins.aggregate(vals, valid, "mean")) - 7 / 3) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=12), min_size=1,
+                max_size=100),
+       st.lists(st.integers(min_value=0, max_value=15), min_size=1,
+                max_size=30))
+def test_property_join_agreement(bkeys, pkeys):
+    build = {"k": np.asarray(bkeys, np.int64),
+             "v": np.arange(len(bkeys), dtype=np.float32)}
+    probe_cols = {"pk": np.asarray(pkeys, np.int64),
+                  "tag": np.arange(len(pkeys), dtype=np.int32)}
+    t = create_index(build, SCH, rows_per_batch=32)
+    bi, _, vi = joins.indexed_join(t, probe_cols, "pk", max_matches=128)
+    bh, _, vh = joins.hash_join(build, "k", probe_cols, "pk", max_matches=128)
+    np.testing.assert_array_equal(np.asarray(vi), np.asarray(vh))
+    np.testing.assert_allclose(np.asarray(bi["v"]) * vi,
+                               np.asarray(bh["v"]) * vh)

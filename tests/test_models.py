@@ -1,0 +1,235 @@
+"""Model-family unit tests: forward/backward finite, prefill/decode
+consistency, SSD chunked-vs-sequential equivalence, MoE routing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.common import (MLAConfig, ModelConfig, MoEConfig,
+                                 SSMConfig)
+from repro.models import transformer as tf
+from repro.models import whisper as wh
+from repro.models import ssm as ssm_mod
+from repro.models import rope as rp
+
+
+def tiny_dense(**kw):
+    base = dict(name="tiny", family="dense", num_layers=3, d_model=64,
+                num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                vocab_size=128, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CONFIGS = {
+    "dense": tiny_dense(),
+    "qk_norm_bias": tiny_dense(qk_norm=True, qkv_bias=True),
+    "sliding": tiny_dense(num_layers=6, local_global_pattern=2,
+                          sliding_window=8, local_rope_theta=1e4),
+    "moe": tiny_dense(num_layers=4, moe=MoEConfig(
+        num_experts=4, top_k=2, d_ff_expert=64, num_shared=1,
+        first_dense_layers=1)),
+    "moe_v3": tiny_dense(num_layers=3, moe=MoEConfig(
+        num_experts=4, top_k=2, d_ff_expert=64, num_shared=1,
+        router="sigmoid", router_aux_free_bias=True), mtp_depth=1),
+    "mla": tiny_dense(mla=MLAConfig(q_lora_rank=32, kv_lora_rank=32,
+                                    qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                    v_head_dim=16)),
+    "ssm": tiny_dense(family="ssm", num_heads=0, num_kv_heads=0, head_dim=0,
+                      ssm=SSMConfig(d_state=16, head_dim=16, chunk=8)),
+    "hybrid": tiny_dense(family="hybrid", num_layers=4, attn_layer_period=4,
+                         attn_layer_offset=1,
+                         ssm=SSMConfig(d_state=16, head_dim=16, chunk=8),
+                         # ample capacity: no MoE token drops, so prefill
+                         # and decode agree exactly (drops are a train-time
+                         # approximation that decode never applies)
+                         moe=MoEConfig(num_experts=4, top_k=2,
+                                       d_ff_expert=64, every_k=2,
+                                       capacity_factor=8.0)),
+}
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_forward_backward_finite(rng, name):
+    cfg = CONFIGS[name]
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    loss, metrics = tf.forward_train(params, cfg, toks)
+    assert np.isfinite(float(loss)), name
+    g = jax.grad(lambda p: tf.forward_train(p, cfg, toks)[0])(params)
+    leaves = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves), name
+
+
+@pytest.mark.parametrize("name", ["dense", "sliding", "mla", "ssm", "hybrid"])
+def test_prefill_decode_consistency(rng, name):
+    """Greedy decode logits must match teacher-forced forward logits."""
+    cfg = CONFIGS[name]
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    # teacher-forced logits at the last position
+    x = tf._embed(params, cfg, toks)
+    h, _, _ = tf.backbone_prefill(params, cfg, x)
+    full_logits = tf._logits(params, cfg, h)          # [B, S, V]
+
+    # decode token-by-token from an empty cache
+    cache = tf.init_cache(cfg, B, S + 4, dtype=jnp.float32)
+    for t in range(S):
+        lg, cache = tf.decode_step(params, cfg, toks[:, t:t + 1], cache)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_scan_groups_partition():
+    cfg = CONFIGS["hybrid"]
+    groups = tf.scan_groups(cfg)
+    assert sum(n for _, n in groups) == cfg.num_layers
+    kinds = tf.layer_kinds(cfg)
+    assert kinds[1].attn == "gqa"          # period 4, offset 1
+    assert kinds[0].attn == "ssm"
+    assert kinds[1].ffn == "moe"           # every 2nd layer
+
+    g3 = tf.scan_groups(CONFIGS["sliding"])
+    kinds3 = tf.layer_kinds(CONFIGS["sliding"])
+    assert kinds3[2].window is None        # global every 3rd (pattern=2)
+    assert kinds3[0].window == 8
+
+
+def test_ssd_chunked_equals_sequential(rng):
+    """SSD chunked algorithm == naive sequential recurrence."""
+    b, s, h, p, n, chunk = 2, 32, 4, 8, 16, 8
+    x = rng.standard_normal((b, s, h, p)).astype(np.float32)
+    dt = np.abs(rng.standard_normal((b, s, h))).astype(np.float32) * 0.1 + 0.01
+    A = -np.abs(rng.standard_normal(h)).astype(np.float32)
+    B = rng.standard_normal((b, s, 1, n)).astype(np.float32)
+    C = rng.standard_normal((b, s, 1, n)).astype(np.float32)
+    D = rng.standard_normal(h).astype(np.float32)
+
+    y, final = ssm_mod.ssd_chunked(jnp.asarray(x), jnp.asarray(dt),
+                                   jnp.asarray(A), jnp.asarray(B),
+                                   jnp.asarray(C), jnp.asarray(D), chunk)
+
+    # sequential oracle
+    st = np.zeros((b, h, p, n), np.float32)
+    ys = np.zeros_like(x)
+    for t in range(s):
+        decay = np.exp(dt[:, t] * A[None, :])               # [b,h]
+        Bh = np.repeat(B[:, t], h, axis=1)                  # [b,h,n]
+        Ch = np.repeat(C[:, t], h, axis=1)
+        st = st * decay[..., None, None] + np.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, t], Bh, x[:, t])
+        ys[:, t] = np.einsum("bhn,bhpn->bhp", Ch, st) + x[:, t] * D[None, :, None]
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), st, rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drop_passthrough(rng):
+    """Tokens over capacity contribute nothing (residual passthrough)."""
+    from repro.models import moe as moe_mod
+    cfg = CONFIGS["moe"]
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    out, aux = moe_mod.moe_ffn(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0
+
+
+def test_mrope_sections(rng):
+    x = jnp.asarray(rng.standard_normal((1, 6, 2, 16)), jnp.float32)
+    pos = jnp.stack([jnp.arange(6)[None], jnp.arange(6)[None] * 0,
+                     jnp.arange(6)[None] * 0])     # [3, 1, 6]
+    out = rp.rotate_mrope(x, pos, 1e4, (4, 2, 2))
+    assert out.shape == x.shape
+    # all-zero positions = identity on the (h, w) slots
+    out0 = rp.rotate_mrope(x, pos * 0, 1e4, (4, 2, 2))
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(x), atol=1e-6)
+
+
+def test_flash_equals_dense_attention(rng):
+    from repro.models import flash
+    from repro.models.attention import causal_mask, gqa_core
+    b, s, h, hk, d = 2, 37, 8, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hk, d)), jnp.float32)
+    pos = jnp.arange(s)[None]
+    for window in (None, 7, 64):
+        mask = jnp.broadcast_to(causal_mask(pos, pos, window), (b, s, s))
+        dense = gqa_core(q, k, v, mask, d ** -0.5)
+        for bk in (8, 16, 64):
+            fl = flash.flash_gqa(q, k, v, scale=d ** -0.5, causal=True,
+                                 window=window, block_k=bk)
+            np.testing.assert_allclose(np.asarray(fl), np.asarray(dense),
+                                       rtol=2e-5, atol=2e-5)
+
+
+def test_moe_sorted_equals_einsum(rng):
+    from repro.models import moe as moe_mod
+    cfg = tiny_dense(moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
+                                   num_shared=1, capacity_factor=8.0))
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    o1, a1 = moe_mod.moe_ffn_einsum(p, x, cfg)
+    o2, a2 = moe_mod.moe_ffn_sorted(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
+
+
+def test_moe_ep_shardmap_single_device(rng):
+    from repro.models import moe as moe_mod
+    from repro.models import sharding as shd
+    cfg = tiny_dense(moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32,
+                                   capacity_factor=8.0))
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    o1, _ = moe_mod.moe_ffn_einsum(p, x, cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with shd.logical_sharding(mesh, shd.rules_single_pod()):
+        o3, _ = moe_mod.moe_ffn(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_flash_prefill_matches_dense(rng):
+    """MLA prefill above the flash threshold == dense-path logits."""
+    from repro.models import attention as attn, flash
+    cfg = CONFIGS["mla"]
+    p = attn.mla_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((1, 24, cfg.d_model)), jnp.float32)
+    dense_out, _ = attn.mla_prefill(p, x, cfg)
+    old = flash.FLASH_THRESHOLD
+    try:
+        flash.FLASH_THRESHOLD = 4
+        flash_out, _ = attn.mla_prefill(p, x, cfg)
+    finally:
+        flash.FLASH_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(flash_out), np.asarray(dense_out),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_whisper_train_and_decode(rng):
+    cfg = ModelConfig(name="tiny-whisper", family="audio", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+                      d_ff=128, vocab_size=100, encoder_decoder=True,
+                      encoder_layers=2, encoder_seq=30, dtype="float32",
+                      tie_embeddings=True)
+    params = wh.init_params(cfg, jax.random.PRNGKey(0))
+    frames = jnp.asarray(rng.standard_normal((2, 30, 64)), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, 100, (2, 10)), jnp.int32)
+    loss, _ = wh.forward_train(params, cfg, frames, toks)
+    assert np.isfinite(float(loss))
+
+    enc = wh.encode(params, cfg, frames)
+    cache = wh.init_cache(cfg, 2, 16, dtype=jnp.float32)
+    ck, cv = wh.build_cross_cache(params, cfg, enc)
+    cache = dict(cache, cross_k=ck, cross_v=cv)
+    lg, cache = wh.decode_step(params, cfg, toks[:, :1], cache)
+    assert np.isfinite(np.asarray(lg)).all()
+    assert int(cache["length"][0, 0]) == 1

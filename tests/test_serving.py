@@ -1,0 +1,120 @@
+"""Serving layer: prefix cache (point lookup / MVCC commit), page pool,
+paged decode vs dense decode equivalence, engine prefix reuse."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import transformer as tf
+from repro.models.common import ModelConfig
+from repro.serving import (Engine, PagePool, PrefixCache, Request,
+                           paged_decode_step, prefix_hashes)
+from repro.train.step import init_params
+
+CFG = ModelConfig(name="srv", family="dense", num_layers=3, d_model=64,
+                  num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=128, dtype="float32")
+
+
+def test_prefix_hashes_properties(rng):
+    t1 = rng.integers(1, 100, 64).astype(np.int32)
+    t2 = t1.copy()
+    t2[40] = t2[40] + 1  # diverge inside page 2 (page=16)
+    h1, h2 = prefix_hashes(t1, 16), prefix_hashes(t2, 16)
+    assert len(h1) == 4
+    np.testing.assert_array_equal(h1[:2], h2[:2])   # shared prefix pages
+    assert (h1[2:] != h2[2:]).all()                 # diverged + chained
+
+
+def test_prefix_cache_lookup_and_commit(rng):
+    cache = PrefixCache()
+    toks = rng.integers(1, 100, 64).astype(np.int32)
+    hs = prefix_hashes(toks, 16)
+    assert cache.lookup_prefix(toks, 16)[0] == 0
+    cache.commit(hs, [10, 11, 12, 13], seq_id=0)
+    n, ids = cache.lookup_prefix(toks, 16)
+    assert n == 4
+    np.testing.assert_array_equal(ids, [10, 11, 12, 13])
+    # a second sequence sharing 2 pages hits exactly those
+    toks2 = toks.copy()
+    toks2[40] += 1
+    n2, ids2 = cache.lookup_prefix(toks2, 16)
+    assert n2 == 2
+    np.testing.assert_array_equal(ids2, [10, 11])
+    # MVCC: commit of the divergent suffix bumps the version
+    v = cache.commit(prefix_hashes(toks2, 16)[2:], [20, 21], seq_id=1)
+    assert v == 1
+    assert cache.lookup_prefix(toks2, 16)[0] == 4
+
+
+def test_page_pool_alloc_release():
+    pool = PagePool.create(2, 8, 4, 2, 8, dtype=jnp.float32)
+    ids = pool.alloc(3)
+    assert len(pool.free) == 5
+    pool.release(ids)
+    assert len(pool.free) == 8
+    with pytest.raises(RuntimeError):
+        pool.alloc(9)
+
+
+def test_paged_decode_matches_dense(rng):
+    """The Pallas-paged path == the dense-cache decode path."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    B, S, page = 2, 32, 8
+    prompts = rng.integers(1, CFG.vocab_size, (B, S)).astype(np.int32)
+
+    # dense path: prefill -> decode one token
+    _, caches = tf.prefill(params, CFG, jnp.asarray(prompts))
+    dense_cache = tf.init_cache(CFG, B, S + 8, dtype=jnp.float32)
+    k = caches[0]["k"]                      # [L, B, S, Hkv, Dh]
+    dense_cache[0]["k"] = dense_cache[0]["k"].at[:, :, :S].set(k)
+    dense_cache[0]["v"] = dense_cache[0]["v"].at[:, :, :S].set(
+        caches[0]["v"])
+    dense_cache[0]["length"] = jnp.full((CFG.num_layers, B), S, jnp.int32)
+    tok = jnp.asarray(rng.integers(1, CFG.vocab_size, (B, 1)), jnp.int32)
+    dense_logits, _ = tf.decode_step(params, CFG, tok, dense_cache)
+
+    # paged path: write pages + decode with the kernel
+    pool = PagePool.create(CFG.num_layers, 32, page, CFG.num_kv_heads,
+                           CFG.head_dim, dtype=jnp.float32)
+    npages = S // page
+    pts = np.full((B, 8), -1, np.int32)
+    for b in range(B):
+        ids = pool.alloc(npages + 1)        # + decode page
+        pool = pool.write_pages(k[:, b], caches[0]["v"][:, b],
+                                ids[:npages])
+        pts[b, :npages + 1] = ids
+    lengths = jnp.full((B,), S, jnp.int32)
+    paged_logits, pool = paged_decode_step(
+        params, CFG, tok, pool, jnp.asarray(pts), lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(paged_logits),
+                               np.asarray(dense_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_engine_prefix_reuse(rng):
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    eng = Engine(params, CFG, num_pages=128, page=8)
+    shared = rng.integers(1, CFG.vocab_size, 24)
+    reqs = []
+    for i in range(3):
+        tail = rng.integers(1, CFG.vocab_size, 8)
+        reqs.append(Request(seq_id=i, prompt=np.concatenate(
+            [shared, tail]).astype(np.int32)))
+    eng.run(reqs, steps=3)
+    # requests 2,3 hit the pages request 1 committed
+    assert eng.stats["pages_reused"] >= 4
+    assert eng.stats["prefill_tokens_skipped"] >= 32
+    assert all(len(r.out) == 3 for r in reqs)
+    assert eng.cache.memory_overhead_bytes() > 0
+
+
+def test_make_serve_step_families(rng):
+    from repro.serving.engine import make_serve_step
+    step = make_serve_step(CFG)
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    cache = tf.init_cache(CFG, 2, 16, dtype=jnp.float32)
+    tok = jnp.asarray(rng.integers(1, CFG.vocab_size, (2, 1)), jnp.int32)
+    logits, cache2 = step(params, cache, tok)
+    assert logits.shape == (2, 1, CFG.vocab_size)

@@ -1,0 +1,146 @@
+"""IndexedTable: create/append/MVCC/divergence/compaction (paper §III-C/E)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Schema, append, compact, create_index, joins
+from repro.core.table import IndexedTable
+
+
+SCH = Schema.of("k", k="int64", v="float32", tag="int32")
+
+
+def _mk(rng, n, key_range=100, rows_per_batch=64, layout="row"):
+    cols = {"k": rng.integers(0, key_range, n).astype(np.int64),
+            "v": rng.random(n).astype(np.float32),
+            "tag": np.arange(n, dtype=np.int32)}
+    return cols, create_index(cols, SCH, rows_per_batch=rows_per_batch,
+                              layout=layout)
+
+
+def _oracle_rows(all_cols_list, key):
+    """(v, tag) rows for `key`, newest first across appends."""
+    ks = np.concatenate([c["k"] for c in all_cols_list])
+    vs = np.concatenate([c["v"] for c in all_cols_list])
+    ts = np.concatenate([c["tag"] for c in all_cols_list])
+    hits = np.nonzero(ks == key)[0][::-1]
+    return vs[hits], ts[hits]
+
+
+@pytest.mark.parametrize("layout", ["row", "columnar"])
+def test_lookup_matches_oracle(rng, layout):
+    cols, t = _mk(rng, 500, layout=layout)
+    for key in (int(cols["k"][0]), int(cols["k"][37]), 10**9):
+        got, valid = joins.indexed_lookup(t, np.array([key], np.int64),
+                                          max_matches=32)
+        ev, et = _oracle_rows([cols], key)
+        n = int(valid[0].sum())
+        assert n == min(len(ev), 32)
+        np.testing.assert_allclose(np.asarray(got["v"][0][:n]), ev[:n])
+        np.testing.assert_array_equal(np.asarray(got["tag"][0][:n]), et[:n])
+
+
+@pytest.mark.parametrize("layout", ["row", "columnar"])
+def test_append_chains_into_parent(rng, layout):
+    cols, t = _mk(rng, 300, layout=layout)
+    key = int(cols["k"][5])
+    extra = {"k": np.array([key, key], np.int64),
+             "v": np.array([100.0, 200.0], np.float32),
+             "tag": np.array([9000, 9001], np.int32)}
+    t2 = append(t, extra)
+    got, valid = joins.indexed_lookup(t2, np.array([key], np.int64),
+                                      max_matches=64)
+    ev, et = _oracle_rows([cols, extra], key)
+    n = int(valid[0].sum())
+    assert n == len(ev)
+    np.testing.assert_allclose(np.asarray(got["v"][0][:n]), ev)
+    assert t2.version == t.version + 1
+
+
+def test_divergent_appends_coexist(rng):
+    """Paper Listing 2: two appends on one parent — both materialize."""
+    cols, t = _mk(rng, 200)
+    a = {"k": np.array([1], np.int64), "v": np.array([1.0], np.float32),
+         "tag": np.array([1], np.int32)}
+    b = {"k": np.array([1], np.int64), "v": np.array([2.0], np.float32),
+         "tag": np.array([2], np.int32)}
+    ta, tb = append(t, a), append(t, b)
+    ga, va = joins.indexed_lookup(ta, np.array([1], np.int64), max_matches=64)
+    gb, vb = joins.indexed_lookup(tb, np.array([1], np.int64), max_matches=64)
+    base = _oracle_rows([cols], 1)[0]
+    assert int(va[0].sum()) == len(base) + 1
+    assert int(vb[0].sum()) == len(base) + 1
+    assert float(ga["v"][0, 0]) == 1.0
+    assert float(gb["v"][0, 0]) == 2.0
+    # zero-copy sharing: parent segment arrays are the same buffers
+    assert ta.segments[0] is t.segments[0]
+    assert tb.segments[0] is t.segments[0]
+
+
+def test_compact_preserves_semantics(rng):
+    cols, t = _mk(rng, 200, key_range=20)
+    extra = {"k": rng.integers(0, 20, 50).astype(np.int64),
+             "v": rng.random(50).astype(np.float32),
+             "tag": np.arange(50, dtype=np.int32) + 1000}
+    t2 = append(t, extra)
+    t3 = compact(t2)
+    assert t3.num_segments == 1
+    q = np.arange(20, dtype=np.int64)
+    g2, v2 = joins.indexed_lookup(t2, q, max_matches=64)
+    g3, v3 = joins.indexed_lookup(t3, q, max_matches=64)
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v3))
+    np.testing.assert_allclose(np.asarray(g2["v"]) * np.asarray(v2),
+                               np.asarray(g3["v"]) * np.asarray(v3))
+
+
+def test_scan_column_returns_all_valid_rows(rng):
+    cols, t = _mk(rng, 130, rows_per_batch=64)  # padding rows exist
+    vals, valid = t.scan_column("v")
+    assert int(valid.sum()) == 130
+    np.testing.assert_allclose(np.sort(np.asarray(vals)[np.asarray(valid)]),
+                               np.sort(cols["v"]))
+
+
+def test_memory_overhead_accounting(rng):
+    """Fig-11 analog: index bytes ≪ data bytes for wide rows."""
+    n = 4096
+    wide = Schema.of("k", k="int64", **{f"c{i}": "float32" for i in range(62)})
+    cols = {"k": np.arange(n, dtype=np.int64) * 3,
+            **{f"c{i}": np.ones(n, np.float32) for i in range(62)}}
+    t = create_index(cols, wide, rows_per_batch=1024)
+    ratio = t.index_nbytes() / t.data_nbytes()
+    assert ratio < 0.25  # wide-row regime; benchmark reports the full curve
+
+
+def test_version_increments_and_num_rows(rng):
+    cols, t = _mk(rng, 100)
+    assert t.version == 0
+    t2 = append(t, {"k": np.array([5], np.int64),
+                    "v": np.array([0.5], np.float32),
+                    "tag": np.array([7], np.int32)})
+    assert t2.version == 1
+    assert int(t2.num_rows()) == 101
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=9), min_size=1,
+                max_size=80),
+       st.lists(st.integers(min_value=0, max_value=9), min_size=1,
+                max_size=40))
+def test_property_append_lookup(base_keys, delta_keys):
+    base = {"k": np.asarray(base_keys, np.int64),
+            "v": np.arange(len(base_keys), dtype=np.float32),
+            "tag": np.arange(len(base_keys), dtype=np.int32)}
+    delta = {"k": np.asarray(delta_keys, np.int64),
+             "v": np.arange(len(delta_keys), dtype=np.float32) + 1000,
+             "tag": np.arange(len(delta_keys), dtype=np.int32) + 1000}
+    t = append(create_index(base, SCH, rows_per_batch=32), delta)
+    q = np.arange(10, dtype=np.int64)
+    got, valid = joins.indexed_lookup(t, q, max_matches=128)
+    for i in range(10):
+        ev, et = _oracle_rows([base, delta], i)
+        n = int(valid[i].sum())
+        assert n == len(ev)
+        np.testing.assert_allclose(np.asarray(got["v"][i][:n]), ev)

@@ -1,0 +1,107 @@
+"""Training substrate: optimizer math, schedules, microbatch equivalence,
+gradient compression with error feedback."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.common import ModelConfig
+from repro.train import compress, optim
+from repro.train.step import init_params, make_train_step
+
+CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                  num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                  vocab_size=64, dtype="float32")
+
+
+def test_lr_schedule():
+    c = optim.AdamWConfig(lr_peak=1e-3, warmup_steps=10, decay_steps=100,
+                          lr_min_ratio=0.1)
+    assert float(optim.lr_at(c, jnp.asarray(0))) < 2e-4
+    assert abs(float(optim.lr_at(c, jnp.asarray(10))) - 1e-3) < 1e-5
+    assert abs(float(optim.lr_at(c, jnp.asarray(1000))) - 1e-4) < 1e-6
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - np.sqrt(1000)) < 1e-3
+    assert abs(float(optim.global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_training_reduces_loss(rng):
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    ocfg = optim.AdamWConfig(lr_peak=3e-3, warmup_steps=5, decay_steps=200,
+                             weight_decay=0.0)
+    step = jax.jit(make_train_step(CFG, ocfg, remat="none"))
+    opt = optim.init_state(ocfg, params)
+    # one fixed batch: loss must drop by a lot when memorizing
+    batch = {"tokens": jnp.asarray(rng.integers(1, 64, (4, 16)), jnp.int32)}
+    first = None
+    for i in range(60):
+        params, opt, metrics = step(params, opt, batch)
+        first = first if first is not None else float(metrics["loss"])
+    assert float(metrics["loss"]) < first * 0.5
+
+
+def test_microbatch_equivalence(rng):
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    ocfg = optim.AdamWConfig()
+    batch = {"tokens": jnp.asarray(rng.integers(1, 64, (8, 16)), jnp.int32)}
+    s1 = make_train_step(CFG, ocfg, microbatches=1, remat="none")
+    s4 = make_train_step(CFG, ocfg, microbatches=4, remat="none")
+    opt = optim.init_state(ocfg, params)
+    p1, _, m1 = s1(params, opt, batch)
+    p4, _, m4 = s4(params, opt, batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_moment_dtype_bf16_state_size():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    s32 = optim.init_state(optim.AdamWConfig(moment_dtype="float32"), params)
+    s16 = optim.init_state(optim.AdamWConfig(moment_dtype="bfloat16"),
+                           params)
+    b32 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s32["m"]))
+    b16 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s16["m"]))
+    assert b16 * 2 == b32
+
+
+def test_compress_roundtrip_small_error(rng):
+    x = jnp.asarray(rng.standard_normal(1000) * 5, jnp.float32)
+    y = compress.compress_roundtrip(x)
+    rel = float(jnp.linalg.norm(x - y) / jnp.linalg.norm(x))
+    assert rel < 0.01  # int8 block quant ~ 0.5% rms error
+
+
+def test_error_feedback_accumulates(rng):
+    """Sum of compressed grads + final residual == sum of true grads."""
+    grads = [{"w": jnp.asarray(rng.standard_normal(256), jnp.float32)}
+             for _ in range(10)]
+    res = compress.init_residual(grads[0])
+    sent_total = jnp.zeros(256)
+    for g in grads:
+        sent, res = compress.ef_compress_grads(g, res)
+        sent_total = sent_total + sent["w"]
+    true_total = sum(g["w"] for g in grads)
+    np.testing.assert_allclose(np.asarray(sent_total + res["w"]),
+                               np.asarray(true_total), rtol=1e-4, atol=1e-4)
+
+
+def test_master_weights_update_bf16_params(rng):
+    cfg_bf = ModelConfig(**{**CFG.__dict__, "dtype": "bfloat16",
+                            "name": "bf"})
+    params = init_params(cfg_bf, jax.random.PRNGKey(0))
+    ocfg = optim.AdamWConfig(master_weights=True, lr_peak=1e-3,
+                             warmup_steps=1, decay_steps=10)
+    opt = optim.init_state(ocfg, params)
+    assert "master" in opt
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(1, 64, (2, 8)), jnp.int32)}
+    step = make_train_step(cfg_bf, ocfg, remat="none")
+    p2, o2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    # master copy stays f32
+    assert all(x.dtype == jnp.float32 for x in jax.tree.leaves(o2["master"]))
