@@ -1,0 +1,122 @@
+"""Fused vs segment-looped lookup — the paper's Fig-1 amortization claim.
+
+The index is built once and probed millions of times (paper §III-C), so the
+probe -> chain-walk -> gather path must not scale with the number of MVCC
+append segments.  This benchmark measures exactly that: the same point
+lookup through
+
+  * ``fused``  — one pass over the table's FlatView (DESIGN.md §3): stacked
+    bucket planes, flat prev array, single-gather row decode;
+  * ``ref``    — the pre-fusion segment loop: every probe re-scans all
+    segment indexes and every chain step re-scans all segments.
+
+swept over segment counts (1 / 4 / 16 appends) and key skew (uniform and
+SNB-like power-law), at ``max_matches=8``.  Results also land in
+``BENCH_lookup.json`` at the repo root (the committed artifact).
+
+Both paths are timed in their production call style: the fused path's core
+is jitted inside ops.fused_lookup; the segment-looped path runs eagerly —
+jit-compiling its O(segments x matches) select/gather chain is itself
+pathological (XLA compile grows super-linearly: ~2 s at 8 segments, ~40 s
+at 10, minutes at 16 on CPU), which is exactly the fan-out the FlatView
+removes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Report, powerlaw_keys, timeit
+from repro.core import Schema, append, create_index, joins
+
+SCH = Schema.of("k", k="int64", v="float32", tag="int32")
+
+MAX_MATCHES = 8
+SEGMENT_COUNTS = (1, 4, 16)
+
+
+def _make_cols(rng, n, n_unique, skew):
+    if skew == "powerlaw":
+        keys = powerlaw_keys(rng, n, n_unique)
+    else:
+        keys = rng.integers(0, n_unique, n).astype(np.int64)
+    return {"k": keys,
+            "v": rng.random(n).astype(np.float32),
+            "tag": np.arange(n, dtype=np.int32)}
+
+
+def _build_table(rng, total_rows, num_segments, n_unique, skew,
+                 rows_per_batch):
+    per = total_rows // num_segments
+    t = create_index(_make_cols(rng, per, n_unique, skew), SCH,
+                     rows_per_batch=rows_per_batch)
+    for _ in range(num_segments - 1):
+        t = append(t, _make_cols(rng, per, n_unique, skew))
+    return t
+
+
+def run(quick: bool = True):
+    rep = Report("lookup_path")
+    rng = np.random.default_rng(0)
+    total_rows = 24_576 if quick else 262_144
+    nq = 4096 if quick else 32_768
+    n_unique = max(64, total_rows // 8)
+    rows_per_batch = 512
+
+    bench_rows = []
+    for skew in ("uniform", "powerlaw"):
+        for segs in SEGMENT_COUNTS:
+            t = _build_table(rng, total_rows, segs, n_unique, skew,
+                             rows_per_batch)
+            if skew == "powerlaw":
+                q = powerlaw_keys(rng, nq, n_unique)
+            else:
+                q = rng.integers(0, n_unique, nq).astype(np.int64)
+
+            t0 = time.perf_counter()
+            fv = t.flat_view()
+            jax.block_until_ready(fv.prev)
+            flat_build_s = time.perf_counter() - t0
+
+            fused_fn = lambda qq: t.lookup(qq, MAX_MATCHES)[0]
+            ref_fn = lambda qq: t.lookup(qq, MAX_MATCHES, fused=False)[0]
+            fused_t = timeit(fused_fn, q, reps=3, warmup=1)
+            ref_t = timeit(ref_fn, q, reps=3, warmup=1)
+
+            fused_full = lambda qq: joins.indexed_lookup(
+                t, qq, max_matches=MAX_MATCHES)[0]["v"]
+            ref_full = lambda qq: joins.indexed_lookup(
+                t, qq, max_matches=MAX_MATCHES, fused=False)[0]["v"]
+            fused_full_t = timeit(fused_full, q, reps=3, warmup=1)
+            ref_full_t = timeit(ref_full, q, reps=3, warmup=1)
+
+            speedup = ref_t["median_s"] / fused_t["median_s"]
+            speedup_full = (ref_full_t["median_s"]
+                            / fused_full_t["median_s"])
+            row = dict(skew=skew, segments=segs, queries=nq,
+                       max_matches=MAX_MATCHES, total_rows=total_rows,
+                       fused_s=fused_t["median_s"],
+                       ref_s=ref_t["median_s"],
+                       speedup=speedup,
+                       fused_full_s=fused_full_t["median_s"],
+                       ref_full_s=ref_full_t["median_s"],
+                       speedup_full=speedup_full,
+                       flat_build_s=flat_build_s,
+                       flat_extra_bytes=fv.nbytes())
+            bench_rows.append(row)
+            rep.add(f"{skew}/segs={segs}", **{
+                k: v for k, v in row.items() if k not in ("skew",)})
+
+    out_path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_lookup.json")
+    with open(os.path.abspath(out_path), "w") as f:
+        json.dump({"benchmark": "lookup_path",
+                   "quick": quick,
+                   "backend": jax.default_backend(),
+                   "rows": bench_rows}, f, indent=2)
+    return rep.to_dict()

@@ -7,28 +7,31 @@ See DESIGN.md §8 for the module ↔ paper figure mapping.
 """
 
 import argparse
+import importlib
 import json
 import sys
 import time
 
-from benchmarks import (append_read_latency, batch_size_sweep,
-                        fault_tolerance, flights_queries, join_scaling,
-                        memory_overhead, operators, scalability,
-                        snb_queries, tpcds_join, write_throughput)
-
+# Modules import lazily so one broken/missing dependency (e.g. the repro.dist
+# layer that fault_tolerance needs) cannot take down the whole harness.
 MODULES = {
-    "join_scaling": join_scaling,          # Fig 7 + Table III
-    "operators": operators,                # Fig 8
-    "append_read_latency": append_read_latency,  # Fig 9
-    "write_throughput": write_throughput,  # Fig 10
-    "memory_overhead": memory_overhead,    # Fig 11
-    "fault_tolerance": fault_tolerance,    # Fig 12
-    "batch_size_sweep": batch_size_sweep,  # Fig 5
-    "scalability": scalability,            # Fig 6
-    "tpcds_join": tpcds_join,              # Fig 14
-    "snb_queries": snb_queries,            # Fig 13
-    "flights_queries": flights_queries,    # Fig 15
+    "lookup_path": None,            # Fig 1 / §III-C hot path
+    "join_scaling": None,           # Fig 7 + Table III
+    "operators": None,              # Fig 8
+    "append_read_latency": None,    # Fig 9
+    "write_throughput": None,       # Fig 10
+    "memory_overhead": None,        # Fig 11
+    "fault_tolerance": None,        # Fig 12
+    "batch_size_sweep": None,       # Fig 5
+    "scalability": None,            # Fig 6
+    "tpcds_join": None,             # Fig 14
+    "snb_queries": None,            # Fig 13
+    "flights_queries": None,        # Fig 15
 }
+
+
+def _load(name: str):
+    return importlib.import_module(f"benchmarks.{name}")
 
 
 def main(argv=None):
@@ -38,13 +41,13 @@ def main(argv=None):
     ap.add_argument("--out", default="benchmarks/results.json")
     args = ap.parse_args(argv)
 
-    todo = {args.only: MODULES[args.only]} if args.only else MODULES
+    todo = [args.only] if args.only else list(MODULES)
     results, failures = [], 0
-    for name, mod in todo.items():
+    for name in todo:
         print(f"\n== {name} ==", flush=True)
         t0 = time.time()
         try:
-            results.append(mod.run(quick=not args.full))
+            results.append(_load(name).run(quick=not args.full))
             print(f"   done in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:  # report and continue
             failures += 1

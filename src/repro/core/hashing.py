@@ -18,6 +18,7 @@ hashes strings to 32-bit for the cTrie; we keep 64 bits to cut collisions).
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 # splitmix64 / Fibonacci constants.
@@ -48,6 +49,20 @@ def partition_hash(keys, num_shards: int):
     """Owning shard id in [0, num_shards) for routing (any shard count)."""
     h = _splitmix64(jnp.asarray(keys).astype(jnp.uint64) ^ _GOLDEN)
     return (h % np.uint64(num_shards)).astype(jnp.int32)
+
+
+def split64(x):
+    """int64 array -> (hi, lo) int32 planes.
+
+    The TPU VPU has no 64-bit lanes (DESIGN.md §7); kernels and the FlatView
+    carry keys as two int32 planes and equality is two compares AND'd.
+    """
+    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.int64), jnp.uint64)
+    lo = jax.lax.bitcast_convert_type(
+        (bits & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32), jnp.int32)
+    hi = jax.lax.bitcast_convert_type(
+        (bits >> jnp.uint64(32)).astype(jnp.uint32), jnp.int32)
+    return hi, lo
 
 
 def hash_string_host(s: str) -> int:

@@ -32,17 +32,21 @@ from repro.core.table import IndexedTable
 # ---------------------------------------------------------------------------
 
 def indexed_lookup(table: IndexedTable, keys, *, max_matches: int,
-                   names=None):
+                   names=None, fused: bool = True):
     """Point lookup: rows for each key, newest-first.  Returns
-    (cols dict with shape [Q, max_matches], valid [Q, max_matches])."""
-    rids, _ = table.lookup(keys, max_matches)
+    (cols dict with shape [Q, max_matches], valid [Q, max_matches]).
+
+    ``fused=True`` (default) runs the probe -> chain-walk -> gather pipeline
+    in one pass over the table's FlatView (DESIGN.md §3); ``fused=False``
+    keeps the segment-looped reference path for parity sweeps."""
+    rids, _ = table.lookup(keys, max_matches, fused=fused)
     valid = rids != NULL_PTR
-    cols = table.gather_rows(jnp.maximum(rids, 0), names=names)
+    cols = table.gather_rows(jnp.maximum(rids, 0), names=names, fused=fused)
     return cols, valid
 
 
 def indexed_join(table: IndexedTable, probe_cols: dict, probe_key: str, *,
-                 max_matches: int, names=None):
+                 max_matches: int, names=None, fused: bool = True):
     """Equi-join: ``table`` (indexed) is the build side; ``probe_cols`` rows
     probe it locally (the distributed layer shuffles probes to the owning
     partition first; see dist/dtable.py).
@@ -51,7 +55,7 @@ def indexed_join(table: IndexedTable, probe_cols: dict, probe_key: str, *,
     """
     keys = jnp.asarray(probe_cols[probe_key], jnp.int64)
     build_cols, valid = indexed_lookup(table, keys, max_matches=max_matches,
-                                       names=names)
+                                       names=names, fused=fused)
     m = valid.shape[1]
     probe_b = {k: jnp.broadcast_to(v[:, None], (v.shape[0], m))
                for k, v in probe_cols.items()}
@@ -143,17 +147,24 @@ def scan_lookup(table: IndexedTable, keys, *, max_matches: int, names=None):
 # Simple relational reducers used by the planner + benchmarks
 # ---------------------------------------------------------------------------
 
+def _reduce_identity(dtype, op: str):
+    """Dtype-preserving identity for min/max (no silent int->float cast)."""
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return dtype.type(info.max if op == "min" else info.min)
+    return dtype.type(jnp.inf if op == "min" else -jnp.inf)
+
+
 def aggregate(values, valid, op: str):
     v = jnp.asarray(values)
     if op == "sum":
-        return jnp.sum(jnp.where(valid, v, 0))
+        return jnp.sum(jnp.where(valid, v, v.dtype.type(0)))
     if op == "count":
         return jnp.sum(valid)
-    if op == "min":
-        return jnp.min(jnp.where(valid, v, jnp.inf))
-    if op == "max":
-        return jnp.max(jnp.where(valid, v, -jnp.inf))
+    if op in ("min", "max"):
+        red = jnp.min if op == "min" else jnp.max
+        return red(jnp.where(valid, v, _reduce_identity(v.dtype, op)))
     if op == "mean":
-        return jnp.sum(jnp.where(valid, v, 0)) / jnp.maximum(
-            jnp.sum(valid), 1)
+        total = jnp.sum(jnp.where(valid, v, v.dtype.type(0)))
+        return total / jnp.maximum(jnp.sum(valid), 1)
     raise ValueError(op)

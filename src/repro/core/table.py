@@ -18,6 +18,13 @@ Row storage is batch-granular: a segment's data is ``[num_batches,
 rows_per_batch, width_words] int32`` (row layout) or per-column typed arrays
 (columnar layout).  ``rows_per_batch`` is the paper's Fig-5 knob.
 
+The read hot path (probe -> chain walk -> gather) runs **fused** over a
+cached ``FlatView`` of all segments (DESIGN.md §3): ragged per-segment
+bucket planes (split int64 keys), one flat backward-pointer array, plus a
+lazily-built contiguous data copy for single-gather decode.  ``append``
+carries the view forward incrementally; the original segment-looped
+methods survive as ``*_ref`` and anchor the parity tests.
+
 Everything here is written to be **vmap-friendly over a leading shard
 axis**: the inner segment constructor is pure (no host branching), padding
 rows carry ``valid=False`` and an EMPTY key, and the overflow-doubling retry
@@ -35,10 +42,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashindex as hix
+from repro.core import hashing
 from repro.core.hashindex import EMPTY_KEY, HashIndex
 from repro.core.pointers import NULL_PTR, PTR_DTYPE
 from repro.core.schema import Schema
-
+# kernels only imports leaf core modules (hashing/hashindex/pointers), so
+# this does not cycle; importing here (not inside methods) keeps module
+# constants from being created inside an active jit trace.
+from repro.kernels import ops as kops
 
 # ---------------------------------------------------------------------------
 # Segment
@@ -70,6 +81,97 @@ class Segment:
 
     def index_nbytes(self) -> int:
         return self.index.nbytes + self.prev.size * 4 + self.valid.size
+
+
+# ---------------------------------------------------------------------------
+# FlatView — the fused lookup pipeline's table representation (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatBlock:
+    """One segment's probe-side contribution to a FlatView.
+
+    Blocks are immutable and shared by reference across table versions:
+    ``append`` extends the parent's blocks with one new block (the delta) —
+    it never recomputes a parent block (tests assert identity).  Planes are
+    kept **ragged** (each segment's own bucket count): bucket ids are
+    computed modulo the segment's own ``num_buckets``, so nothing is padded
+    and per-delta cost stays O(delta index size).
+    """
+
+    key_hi: jax.Array     # [nb, slots] int32 — bucket keys, high plane
+    key_lo: jax.Array     # [nb, slots] int32 — bucket keys, low plane
+    ptrs: jax.Array       # [nb, slots] int32 — head ptrs (GLOBAL row ids)
+    prev: jax.Array       # [cap] int32 — shares the Segment.prev buffer
+    num_buckets: int
+    capacity: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatView:
+    """Probe-side flat view of all segments for one table version.
+
+    * per-segment bucket planes (ragged, int64 keys pre-split to int32
+      hi/lo) exposed via ``key_planes``;
+    * ``prev`` — the segments' backward-pointer arrays concatenated in
+      global row order, so a chain walk is a single gather per step.
+
+    The *data* side (contiguous rows for single-gather decode) is cached
+    separately and lazily on the table (``IndexedTable._flat_data``) — the
+    probe/chain-walk path never touches row data, and append-heavy
+    workloads shouldn't pay a full-table copy per version.
+
+    Invalidation: none.  A FlatView is a pure function of an immutable
+    ``segments`` tuple; it is cached on the IndexedTable instance and new
+    versions get a new (incrementally extended) view.
+    """
+
+    blocks: tuple[FlatBlock, ...]
+    prev: jax.Array
+    bucket_counts: tuple[int, ...]
+    layout: str
+
+    @property
+    def capacity(self) -> int:
+        return self.prev.shape[0]
+
+    @property
+    def key_planes(self):
+        """Per-segment (hi, lo, ptrs) triples, oldest -> newest."""
+        return tuple((b.key_hi, b.key_lo, b.ptrs) for b in self.blocks)
+
+    def nbytes(self) -> int:
+        """Extra memory the probe-side view holds beyond the segments."""
+        return sum((b.key_hi.size + b.key_lo.size + b.ptrs.size) * 4
+                   for b in self.blocks) + self.prev.size * 4
+
+
+def _block_from_segment(seg: Segment) -> FlatBlock:
+    hi, lo = hashing.split64(seg.index.bucket_keys)
+    return FlatBlock(key_hi=hi, key_lo=lo, ptrs=seg.index.bucket_ptrs,
+                     prev=seg.prev, num_buckets=seg.index.num_buckets,
+                     capacity=seg.capacity)
+
+
+def _assemble_flatview(blocks, layout: str) -> FlatView:
+    return FlatView(
+        blocks=tuple(blocks),
+        prev=jnp.concatenate([b.prev for b in blocks]),
+        bucket_counts=tuple(b.num_buckets for b in blocks),
+        layout=layout,
+    )
+
+
+def _extend_flatview(fv: FlatView, block: FlatBlock,
+                     layout: str) -> FlatView:
+    """Parent view + one delta block -> child view: every parent block is
+    reused by reference; only ``prev`` is re-concatenated (4 B/row)."""
+    return FlatView(
+        blocks=fv.blocks + (block,),
+        prev=jnp.concatenate([fv.prev, block.prev]),
+        bucket_counts=fv.bucket_counts + (block.num_buckets,),
+        layout=layout,
+    )
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -107,14 +209,68 @@ class IndexedTable:
         """Index memory overhead — the paper's Fig-11 measurement."""
         return sum(s.index_nbytes() for s in self.segments)
 
-    # -- point operations ------------------------------------------------------
+    # -- flat view (fused-path representation, DESIGN.md §3) -------------------
 
-    def probe_latest(self, keys) -> jax.Array:
+    def flat_view(self) -> FlatView:
+        """The cached FlatView for this version (built lazily once).
+
+        ``append`` extends the parent's cached view incrementally — only
+        the delta segment's block is computed; parent blocks are shared by
+        reference (the regression test asserts identity).
+        """
+        fv = getattr(self, "_flatview", None)
+        if fv is None:
+            blocks = [_block_from_segment(s) for s in self.segments]
+            fv = _assemble_flatview(blocks, self.layout)
+            # Cache only concrete views: a view built under a jit trace
+            # holds tracers and must not outlive that trace.
+            if not isinstance(fv.prev, jax.core.Tracer):
+                object.__setattr__(self, "_flatview", fv)
+        return fv
+
+    def _flat_data(self):
+        """Contiguous data for single-gather row decode, built lazily on
+        first fused ``gather_rows`` and cached per version.  Kept separate
+        from the FlatView: the probe path never reads row data, so appends
+        don't pay an O(capacity) data copy per version."""
+        d = getattr(self, "_flatdata", None)
+        if d is None:
+            if self.layout == "row":
+                w = self.schema.width_words
+                d = jnp.concatenate([s.data.reshape(s.capacity, w)
+                                     for s in self.segments], axis=0)
+                concrete = not isinstance(d, jax.core.Tracer)
+            else:
+                d = {c.name: jnp.concatenate(
+                        [s.data[c.name].reshape(-1) for s in self.segments])
+                     for c in self.schema.columns}
+                concrete = not any(isinstance(a, jax.core.Tracer)
+                                   for a in d.values())
+            if concrete:
+                object.__setattr__(self, "_flatdata", d)
+        return d
+
+    # -- point operations ------------------------------------------------------
+    #
+    # The default path is the FUSED one: probe -> chain walk -> gather runs
+    # against the FlatView in one pass (Pallas kernel on TPU, vectorized flat
+    # gathers elsewhere).  The *_ref methods keep the original segment-looped
+    # code as the semantic reference the parity tests sweep against.
+
+    def probe_latest(self, keys, *, fused: bool = True) -> jax.Array:
         """Global row id of the *latest* row per key (NULL_PTR if absent).
 
         Probes delta indexes newest -> oldest and takes the first hit —
         the cTrie-snapshot read path of paper §III-E.
         """
+        if not fused:
+            return self.probe_latest_ref(keys)
+        fv = self.flat_view()
+        return kops.fused_probe(keys, fv.key_planes, fv.bucket_counts,
+                                fv.prev)
+
+    def probe_latest_ref(self, keys) -> jax.Array:
+        """Segment-looped reference: one full probe per delta index."""
         keys = jnp.asarray(keys, jnp.int64)
         out = jnp.full(keys.shape, NULL_PTR, PTR_DTYPE)
         for seg in reversed(self.segments):
@@ -122,8 +278,18 @@ class IndexedTable:
             out = jnp.where(out == NULL_PTR, hit, out)
         return out
 
-    def gather_prev(self, rids) -> jax.Array:
+    def gather_prev(self, rids, *, fused: bool = True) -> jax.Array:
         """prev[rid] across segments (NULL for NULL/out-of-range input)."""
+        if not fused:
+            return self.gather_prev_ref(rids)
+        fv = self.flat_view()
+        rids = jnp.asarray(rids, PTR_DTYPE)
+        in_range = (rids >= 0) & (rids < fv.capacity)
+        got = fv.prev[jnp.clip(rids, 0, fv.capacity - 1)]
+        return jnp.where(in_range, got, NULL_PTR)
+
+    def gather_prev_ref(self, rids) -> jax.Array:
+        """Segment-looped reference: re-scans every segment per call."""
         rids = jnp.asarray(rids, PTR_DTYPE)
         out = jnp.full(rids.shape, NULL_PTR, PTR_DTYPE)
         for seg in self.segments:
@@ -133,21 +299,47 @@ class IndexedTable:
             out = jnp.where(in_seg, got, out)
         return out
 
-    def lookup(self, keys, max_matches: int):
+    def lookup(self, keys, max_matches: int, *, fused: bool = True):
         """[Q] keys -> ([Q, max_matches] global row ids newest-first,
         truncated flags).  Paper's point-lookup: cTrie probe + backward-
-        pointer traversal."""
-        head = self.probe_latest(keys)
+        pointer traversal — fused into one pass over the FlatView."""
+        if not fused:
+            return self.lookup_ref(keys, max_matches)
+        fv = self.flat_view()
+        return kops.fused_lookup(keys, fv.key_planes, fv.bucket_counts,
+                                 fv.prev, max_matches=max_matches)
+
+    def lookup_ref(self, keys, max_matches: int):
+        """Segment-looped reference lookup (the pre-fusion hot path)."""
+        head = self.probe_latest_ref(keys)
 
         def step(cur, _):
-            nxt = jnp.where(cur >= 0, self.gather_prev(cur), NULL_PTR)
+            nxt = jnp.where(cur >= 0, self.gather_prev_ref(cur), NULL_PTR)
             return nxt, cur
 
         last, rows = jax.lax.scan(step, head, None, length=max_matches)
         return jnp.moveaxis(rows, 0, 1), last >= 0
 
-    def gather_rows(self, rids, names=None) -> dict:
-        """Decode rows for global row ids (zeros where rid == NULL)."""
+    def gather_rows(self, rids, names=None, *, fused: bool = True) -> dict:
+        """Decode rows for global row ids (zeros where rid out of range)."""
+        if not fused:
+            return self.gather_rows_ref(rids, names=names)
+        data = self._flat_data()
+        rids = jnp.asarray(rids, PTR_DTYPE)
+        in_range = (rids >= 0) & (rids < self.capacity)
+        safe = jnp.clip(rids, 0, self.capacity - 1)
+        if self.layout == "row":
+            flat = jnp.where(in_range[..., None], data[safe], 0)
+            return self.schema.decode_rows(flat, names=names)
+        out = {}
+        for name in (names or self.schema.names):
+            col = self.schema.column(name)
+            out[name] = jnp.where(in_range, data[name][safe],
+                                  jnp.zeros((), col.jnp_dtype))
+        return out
+
+    def gather_rows_ref(self, rids, names=None) -> dict:
+        """Segment-looped reference: one masked pass per segment."""
         rids = jnp.asarray(rids, PTR_DTYPE)
         if self.layout == "row":
             w = self.schema.width_words
@@ -299,13 +491,25 @@ def append(table: IndexedTable, cols: dict, valid=None) -> IndexedTable:
     keys = jnp.where(valid_p,
                      jnp.asarray(cols_p[table.schema.key], jnp.int64),
                      EMPTY_KEY)
-    heads = table.probe_latest(keys)
+    # Head-link probe: always the eager segment-looped reference.  The
+    # fused path would either force an O(capacity) view build (cold) or
+    # retrace its jitted core (shapes change every append); a one-shot
+    # probe over |delta| keys amortizes neither.
+    parent_fv = getattr(table, "_flatview", None)
+    heads = table.probe_latest_ref(keys)
     seg = _build_segment_retrying(cols_p, valid_p, heads, table.schema,
                                   row_base=table.capacity,
                                   rows_per_batch=table.rows_per_batch,
                                   layout=table.layout, slots=table.slots)
-    return dataclasses.replace(table, segments=table.segments + (seg,),
-                               version=table.version + 1)
+    child = dataclasses.replace(table, segments=table.segments + (seg,),
+                                version=table.version + 1)
+    # Incremental FlatView carry: only the delta segment's block is built;
+    # the parent's blocks are shared by reference, never rebuilt.
+    if parent_fv is not None:
+        block = _block_from_segment(seg)
+        object.__setattr__(child, "_flatview",
+                           _extend_flatview(parent_fv, block, table.layout))
+    return child
 
 
 def compact(table: IndexedTable) -> IndexedTable:

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import runtime
+
 NEG_INF = -1e30
 
 
@@ -82,7 +84,7 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
 @functools.partial(jax.jit,
                    static_argnames=("scale", "interpret"))
 def decode_paged(q, k_pages, v_pages, page_table, lengths, scale: float, *,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """One decode step of paged attention.
 
     q          : [B, Hq, D] (bf16/f32)
@@ -92,6 +94,7 @@ def decode_paged(q, k_pages, v_pages, page_table, lengths, scale: float, *,
     lengths    : [B] int32
     returns    : [B, Hq, D] float32
     """
+    interpret = runtime.resolve_interpret(interpret)
     bsz, hq, d = q.shape
     _, page, hkv, _ = k_pages.shape
     npages = page_table.shape[1]

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import runtime
+
 QUERY_TILE = 256
 
 
@@ -56,11 +58,12 @@ def _probe_kernel(bids_ref, qhi_ref, qlo_ref, khi_ref, klo_ref, ptr_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def probe_tiles(bucket_ids, q_hi, q_lo, keys_hi, keys_lo, ptrs, *,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """[Q] bucket ids + key planes against [NB, S] table planes -> [Q] ptrs.
 
     Q must be a multiple of QUERY_TILE (ops.py pads).
     """
+    interpret = runtime.resolve_interpret(interpret)
     q = bucket_ids.shape[0]
     assert q % QUERY_TILE == 0, q
     nb, s = keys_hi.shape
@@ -77,3 +80,107 @@ def probe_tiles(bucket_ids, q_hi, q_lo, keys_hi, keys_lo, ptrs, *,
         out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
         interpret=interpret,
     )(bucket_ids, q_hi, q_lo, keys_hi, keys_lo, ptrs)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-segment lookup: probe -> first hit -> in-kernel chain walk
+# ---------------------------------------------------------------------------
+
+def _fused_lookup_kernel(*refs, num_segments: int, max_matches: int):
+    """One grid step: QUERY_TILE queries against ALL segment index planes.
+
+    refs layout: bids, qhi, qlo, then (hi, lo, ptr) per segment (ragged —
+    each segment keeps its own bucket count), then prev, then the two
+    outputs (rows, last).
+
+    Per query j (DESIGN.md §3):
+      1. probe the per-segment bucket planes newest -> oldest; the first
+         non-NULL match is the head pointer (the cTrie-snapshot read of
+         paper §III-E);
+      2. walk the backward-pointer chain against the FLAT prev array —
+         global row ids index ``prev_ref`` directly, no per-segment rebase —
+         emitting ``max_matches`` row ids newest-first;
+      3. record the would-be next pointer so the wrapper can flag truncation.
+
+    Both loops stay branch-free scalar code: the segment loop is unrolled
+    (num_segments is static and small), the chain walk is a fori over
+    ``max_matches`` of one dynamic scalar load from VMEM-resident ``prev``.
+    """
+    bids_ref, qhi_ref, qlo_ref = refs[:3]
+    plane_refs = refs[3:3 + 3 * num_segments]
+    prev_ref = refs[3 + 3 * num_segments]
+    rows_ref, last_ref = refs[-2:]
+    null = jnp.array(-1, jnp.int32)
+
+    def body(j, _):
+        qhi = qhi_ref[j]
+        qlo = qlo_ref[j]
+        head = null
+        for s in range(num_segments - 1, -1, -1):     # newest -> oldest
+            khi_ref, klo_ref, ptr_ref = plane_refs[3 * s:3 * s + 3]
+            b = bids_ref[s, j]
+            row_hi = khi_ref[pl.ds(b, 1), :]          # [1, S] scalar-steered
+            row_lo = klo_ref[pl.ds(b, 1), :]
+            row_ptr = ptr_ref[pl.ds(b, 1), :]
+            match = (row_hi == qhi) & (row_lo == qlo)
+            cand = jnp.max(jnp.where(match, row_ptr, null))
+            head = jnp.where(head == null, cand, head)
+
+        def walk(m, cur):
+            rows_ref[j, m] = cur
+            nxt = prev_ref[jnp.maximum(cur, 0)]
+            return jnp.where(cur >= 0, nxt, null)
+
+        last = jax.lax.fori_loop(0, max_matches, walk, head)
+        last_ref[j] = last
+        return 0
+
+    jax.lax.fori_loop(0, QUERY_TILE, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_matches", "interpret"))
+def fused_lookup_tiles(bucket_ids, q_hi, q_lo, key_planes, prev,
+                       *, max_matches: int, interpret: bool | None = None):
+    """Fused probe + chain walk over a flat multi-segment table view.
+
+    bucket_ids : [S, Q] int32  per-segment bucket ids (Q padded to tile)
+    q_hi/q_lo  : [Q] int32     query key planes
+    key_planes : per-segment (hi, lo, ptrs) triples, each [nb_s, slots]
+                 int32 — ragged, a FlatView's blocks
+    prev       : [capacity] int32      flat backward-pointer array
+    returns    : (rows [Q, max_matches] int32 newest-first NULL-padded,
+                  last [Q] int32 — next row id after the walk; >= 0 means
+                  the chain was truncated at max_matches)
+
+    VMEM budget: sum_s(nb_s) * slots * 12 bytes of planes + capacity * 4
+    bytes for ``prev``; callers keep per-shard capacity small enough
+    (DESIGN.md §3) or compact() to bound S.
+    """
+    interpret = runtime.resolve_interpret(interpret)
+    s, q = bucket_ids.shape
+    assert q % QUERY_TILE == 0, q
+    assert len(key_planes) == s
+    cap = prev.shape[0]
+    grid = (q // QUERY_TILE,)
+
+    qspec = pl.BlockSpec((QUERY_TILE,), lambda i: (i,))
+    bspec = pl.BlockSpec((s, QUERY_TILE), lambda i: (0, i))
+    plane_specs, plane_args = [], []
+    for hi, lo, ptr in key_planes:                 # planes resident in VMEM
+        nb, slots = hi.shape
+        plane_specs += [pl.BlockSpec((nb, slots), lambda i: (0, 0))] * 3
+        plane_args += [hi, lo, ptr]
+    pspec = pl.BlockSpec((cap,), lambda i: (0,))
+
+    kernel = functools.partial(_fused_lookup_kernel, num_segments=s,
+                               max_matches=max_matches)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[bspec, qspec, qspec, *plane_specs, pspec],
+        out_specs=(pl.BlockSpec((QUERY_TILE, max_matches), lambda i: (i, 0)),
+                   qspec),
+        out_shape=(jax.ShapeDtypeStruct((q, max_matches), jnp.int32),
+                   jax.ShapeDtypeStruct((q,), jnp.int32)),
+        interpret=interpret,
+    )(bucket_ids, q_hi, q_lo, *plane_args, prev)

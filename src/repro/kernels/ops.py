@@ -2,12 +2,23 @@
 
 ``probe`` is a drop-in accelerated replacement for
 ``repro.core.hashindex.probe`` — same signature, same results (tests sweep
-both).  The wrapper owns everything that does not belong in the vector
-kernel: bucket-id hashing (64-bit scalar math), int64 -> (hi, lo) plane
-splitting, tile padding, and EMPTY-key masking.
+both).  ``fused_lookup`` is the multi-segment hot path: probe + in-kernel
+chain walk over a table's FlatView (DESIGN.md §3).  The wrappers own
+everything that does not belong in the vector kernel: bucket-id hashing
+(64-bit scalar math), int64 -> (hi, lo) plane splitting, tile padding, and
+EMPTY-key masking.
+
+Backend dispatch: ``interpret=None`` resolves per jax backend (kernel
+compiled on TPU, interpret elsewhere).  For the fused path on non-TPU
+backends the Pallas interpreter's per-query scalar loops are pure overhead,
+so the dispatcher runs the *vectorized* flat oracle (ref.fused_lookup_ref —
+bit-identical contract, swept against the kernel in tests) unless
+``use_kernel=True`` forces the kernel.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -15,20 +26,13 @@ import jax.numpy as jnp
 from repro.core import hashing
 from repro.core.hashindex import EMPTY_KEY, HashIndex
 from repro.core.pointers import NULL_PTR
-from repro.kernels import hash_probe
+from repro.kernels import hash_probe, ref, runtime
 from repro.kernels import decode_attention as _da
 
-
-def _split64(x):
-    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.int64), jnp.uint64)
-    lo = jax.lax.bitcast_convert_type(
-        (bits & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32), jnp.int32)
-    hi = jax.lax.bitcast_convert_type(
-        (bits >> jnp.uint64(32)).astype(jnp.uint32), jnp.int32)
-    return hi, lo
+_split64 = hashing.split64  # kept under the old name for external callers
 
 
-def probe(index: HashIndex, query_keys, *, interpret: bool = True):
+def probe(index: HashIndex, query_keys, *, interpret: bool | None = None):
     """Latest row id per query key — Pallas-accelerated probe."""
     q = jnp.asarray(query_keys, jnp.int64)
     nq = q.shape[0]
@@ -37,8 +41,8 @@ def probe(index: HashIndex, query_keys, *, interpret: bool = True):
     qp = jnp.pad(q, (0, pad), constant_values=int(EMPTY_KEY))
 
     bids = hashing.bucket_hash(qp, index.num_buckets)
-    qhi, qlo = _split64(qp)
-    khi, klo = _split64(index.bucket_keys)
+    qhi, qlo = hashing.split64(qp)
+    khi, klo = hashing.split64(index.bucket_keys)
 
     out = hash_probe.probe_tiles(bids, qhi, qlo, khi, klo,
                                  index.bucket_ptrs, interpret=interpret)
@@ -48,8 +52,89 @@ def probe(index: HashIndex, query_keys, *, interpret: bool = True):
     return jnp.where(q == EMPTY_KEY, NULL_PTR, out)
 
 
+# ---------------------------------------------------------------------------
+# Fused multi-segment lookup (probe -> chain walk) over a FlatView
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("bucket_counts", "max_matches"))
+def _fused_ref_jit(qp, key_planes, prev, *, bucket_counts, max_matches):
+    bids = jnp.stack([hashing.bucket_hash(qp, nb) for nb in bucket_counts])
+    qhi, qlo = hashing.split64(qp)
+    return ref.fused_lookup_ref(bids, qhi, qlo, key_planes, prev,
+                                max_matches)
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_counts", "max_matches",
+                                             "interpret"))
+def _fused_kernel_jit(q, key_planes, prev, *, bucket_counts, max_matches,
+                      interpret):
+    """Kernel-branch prep (pad, hash, split) fused into one jitted program
+    so a direct fused_lookup call dispatches once, not per prep op."""
+    pad = (-q.shape[0]) % hash_probe.QUERY_TILE
+    qp = jnp.pad(q, (0, pad), constant_values=int(EMPTY_KEY))
+    bids = jnp.stack([hashing.bucket_hash(qp, nb) for nb in bucket_counts])
+    qhi, qlo = hashing.split64(qp)
+    rows, last = hash_probe.fused_lookup_tiles(
+        bids, qhi, qlo, key_planes, prev, max_matches=max_matches,
+        interpret=interpret)
+    return rows[:q.shape[0]], last[:q.shape[0]]
+
+
+def fused_lookup(query_keys, key_planes, bucket_counts, prev, *,
+                 max_matches: int, interpret: bool | None = None,
+                 use_kernel: bool | None = None):
+    """[Q] keys against per-segment planes -> ([Q, M] rows, truncated).
+
+    query_keys    : [Q] int64
+    key_planes    : per-segment (hi, lo, ptrs) triples, each [nb_s, slots]
+                    int32 — a FlatView's ragged bucket planes
+    bucket_counts : tuple[int, ...] per-segment bucket counts (each
+                    segment's bucket ids are computed modulo its own count)
+    prev          : [capacity] int32 flat backward-pointer array
+    Returns rows [Q, max_matches] global row ids newest-first (NULL-padded)
+    and truncated [Q] bool — identical contract to IndexedTable.lookup_ref.
+
+    ``use_kernel=True`` with ``interpret=True`` is a parity-test/debug
+    combination: emulating the unrolled per-segment loop is slow to trace
+    beyond ~8 segments.  Production paths never hit it — the dispatcher
+    picks the compiled kernel on TPU and the vectorized oracle elsewhere.
+    """
+    q = jnp.asarray(query_keys, jnp.int64)
+    if use_kernel is None:
+        use_kernel = not runtime.resolve_interpret(interpret)
+
+    if use_kernel:
+        rows, last = _fused_kernel_jit(
+            q, tuple(key_planes), prev,
+            bucket_counts=tuple(bucket_counts), max_matches=max_matches,
+            interpret=runtime.resolve_interpret(interpret))
+    else:
+        rows, last = _fused_ref_jit(q, tuple(key_planes), prev,
+                                    bucket_counts=tuple(bucket_counts),
+                                    max_matches=max_matches)
+
+    # EMPTY query keys never match (EMPTY slots hold NULL ptrs) — explicit
+    # mask for defense in depth, mirroring probe():
+    empty = (q == EMPTY_KEY)[:, None]
+    rows = jnp.where(empty, NULL_PTR, rows)
+    truncated = jnp.where(empty[:, 0], False, last >= 0)
+    return rows, truncated
+
+
+def fused_probe(query_keys, key_planes, bucket_counts, prev, *,
+                interpret: bool | None = None,
+                use_kernel: bool | None = None):
+    """Head (latest) row id per key over stacked segment planes. [Q] int32."""
+    # A one-step fused lookup: rows[:, 0] is the head pointer.
+    rows, _ = fused_lookup(query_keys, key_planes, bucket_counts, prev,
+                           max_matches=1, interpret=interpret,
+                           use_kernel=use_kernel)
+    return rows[:, 0]
+
+
 def decode_attention(q, k_pages, v_pages, page_table, lengths, scale, *,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """Paged GQA flash decode attention (serving hot path)."""
     return _da.decode_paged(q, k_pages, v_pages, page_table, lengths, scale,
                             interpret=interpret)

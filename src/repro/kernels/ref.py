@@ -6,6 +6,7 @@ and assert_allclose against these.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 NULL = jnp.int32(-1)
@@ -18,6 +19,48 @@ def probe_ref(bucket_ids, q_hi, q_lo, keys_hi, keys_lo, ptrs):
     row_ptr = ptrs[bucket_ids]
     match = (row_hi == q_hi[:, None]) & (row_lo == q_lo[:, None])
     return jnp.max(jnp.where(match, row_ptr, NULL), axis=1)
+
+
+def fused_probe_ref(bucket_ids, q_hi, q_lo, key_planes):
+    """Oracle for the probe stage of hash_probe.fused_lookup_tiles.
+
+    bucket_ids [S, Q]; key_planes = per-segment (hi, lo, ptrs) triples,
+    each [nb_s, slots] (ragged).  One [Q, slots] gather + compare per
+    segment, then a first-non-NULL select newest -> oldest.  This IS the
+    vectorized flat lookup — on non-TPU backends ops.fused_lookup runs it
+    directly instead of emulating the Pallas kernel (DESIGN.md §3).
+    """
+    cands = []
+    for s, (hi, lo, ptr) in enumerate(key_planes):
+        row_hi = hi[bucket_ids[s]]                    # [Q, slots]
+        row_lo = lo[bucket_ids[s]]
+        row_ptr = ptr[bucket_ids[s]]
+        match = (row_hi == q_hi[:, None]) & (row_lo == q_lo[:, None])
+        cands.append(jnp.max(jnp.where(match, row_ptr, NULL), axis=-1))
+    # First non-NULL newest -> oldest via one stacked argmax select.  (An
+    # unrolled where(head==NULL, ...) fold compiles pathologically on the
+    # CPU backend beyond ~10 segments — XLA fusion goes combinatorial.)
+    cands = jnp.stack(cands)[::-1]                    # [S, Q] newest first
+    hit = cands != NULL
+    first = jnp.argmax(hit, axis=0)                   # [Q]
+    head = jnp.take_along_axis(cands, first[None], axis=0)[0]
+    return jnp.where(hit.any(axis=0), head, NULL)
+
+
+def fused_lookup_ref(bucket_ids, q_hi, q_lo, key_planes, prev,
+                     max_matches: int):
+    """Oracle for hash_probe.fused_lookup_tiles: fused probe + chain walk.
+
+    Returns (rows [Q, max_matches] newest-first NULL-padded, last [Q] — the
+    would-be next row id; >= 0 means truncated)."""
+    head = fused_probe_ref(bucket_ids, q_hi, q_lo, key_planes)
+
+    def step(cur, _):
+        nxt = jnp.where(cur >= 0, prev[jnp.maximum(cur, 0)], NULL)
+        return nxt, cur
+
+    last, rows = jax.lax.scan(step, head, None, length=max_matches)
+    return jnp.moveaxis(rows, 0, 1), last
 
 
 def decode_attention_ref(q, k_pages, v_pages, page_table, lengths, scale):

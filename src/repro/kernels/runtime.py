@@ -1,0 +1,14 @@
+"""Kernel runtime helpers shared by the Pallas wrappers."""
+
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret) -> bool:
+    """Resolve the ``interpret=None`` default: interpret everywhere except on
+    a real TPU backend, so the same call sites compile on hardware and still
+    run (emulated) in CPU containers/CI."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -181,6 +181,8 @@ def lower_cell(cfg, shape_name: str, mesh, *, remat: str = "full",
                          "generated_code_size_in_bytes")
                if hasattr(mem, k)}
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     cost_rec = {k: float(v) for k, v in cost.items()
                 if isinstance(v, (int, float)) and k in
                 ("flops", "bytes accessed", "transcendentals",

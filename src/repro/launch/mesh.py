@@ -17,12 +17,20 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions: ``axis_types``/``AxisType``
+    only exist on newer jax; older releases are Auto-by-default anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(shape))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_from_spec(spec: str):
@@ -32,8 +40,7 @@ def make_mesh_from_spec(spec: str):
     """
     dims = tuple(int(x) for x in spec.split("x"))
     axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
-    return jax.make_mesh(
-        dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return make_mesh(dims, axes)
 
 
 def data_axes(mesh) -> tuple:

@@ -55,7 +55,7 @@ def make_serve_step(cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def paged_decode_step(params, cfg: ModelConfig, last_tok, pool: PagePool,
-                      page_tables, lengths, *, interpret: bool = True):
+                      page_tables, lengths, *, interpret: bool | None = None):
     """One decode step reading/writing KV pages in place.
 
     last_tok    : [B, 1] int32
@@ -122,7 +122,7 @@ class Engine:
 
     def __init__(self, params, cfg: ModelConfig, *, num_pages: int = 256,
                  page: int = 16, max_pages_per_seq: int = 32,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
         self.params, self.cfg = params, cfg
         self.page, self.maxp = page, max_pages_per_seq
         self.pool = PagePool.create(cfg.num_layers, num_pages, page,

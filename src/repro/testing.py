@@ -1,0 +1,158 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this repo's tests.
+
+The property tests in tests/ use a small slice of hypothesis: ``@given`` with
+``integers``/``lists``/``floats`` strategies and ``@settings(max_examples,
+deadline)``.  Hermetic containers do not always ship hypothesis, and the
+tier-1 suite must still collect and run there, so ``tests/conftest.py`` calls
+:func:`install` when the real package is missing.  The fallback is a
+deterministic sampler (seeded per test name) — no shrinking, no database,
+just N drawn examples per test.  When real hypothesis is importable it always
+wins; this module is never registered.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class SearchStrategy:
+    """A strategy is just a draw function over a ``random.Random``."""
+
+    def __init__(self, draw_fn, label: str = "strategy"):
+        self._draw_fn = draw_fn
+        self._label = label
+
+    def draw(self, rnd: random.Random):
+        return self._draw_fn(rnd)
+
+    def __repr__(self):
+        return f"<fallback {self._label}>"
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = -(2 ** 63) if min_value is None else int(min_value)
+    hi = 2 ** 63 - 1 if max_value is None else int(max_value)
+
+    def draw(rnd):
+        r = rnd.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        if r < 0.25 and lo <= 0 <= hi:
+            return 0
+        return rnd.randint(lo, hi)
+
+    return SearchStrategy(draw, f"integers({lo}, {hi})")
+
+
+def floats(min_value=None, max_value=None, *, allow_nan=None,
+           allow_infinity=None, width: int = 64) -> SearchStrategy:
+    span = 3.0e38 if width == 32 else 1.0e308
+    lo = -span if min_value is None else float(min_value)
+    hi = span if max_value is None else float(max_value)
+
+    def draw(rnd):
+        r = rnd.random()
+        if r < 0.08:
+            val = 0.0
+        elif r < 0.16:
+            val = -0.0
+        elif r < 0.30:
+            val = rnd.uniform(-1.0, 1.0)
+        else:
+            val = rnd.uniform(lo / 2, hi / 2)
+        return min(max(val, lo), hi)
+
+    return SearchStrategy(draw, "floats")
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size=None) -> SearchStrategy:
+    cap = max_size if max_size is not None else min_size + 20
+
+    def draw(rnd):
+        r = rnd.random()
+        if r < 0.15:
+            n = min_size
+        elif r < 0.30:
+            n = cap
+        else:
+            # Quantize sizes to powers of two: bounds the number of
+            # distinct array shapes the suite produces, so jit'd code
+            # under test retraces O(log cap) times instead of O(examples).
+            n = rnd.randint(min_size, cap)
+            if n > 0:
+                n = min(cap, max(min_size, 1 << (n.bit_length() - 1)))
+        return [elements.draw(rnd) for _ in range(n)]
+
+    return SearchStrategy(draw, f"lists[{min_size}..{cap}]")
+
+
+def sampled_from(options) -> SearchStrategy:
+    options = list(options)
+    return SearchStrategy(lambda rnd: rnd.choice(options), "sampled_from")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5, "booleans")
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Decorator recording the example budget (deadline etc. are ignored)."""
+
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(*strategies: SearchStrategy):
+    """Run the test once per drawn example, seeded by the test's name."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            rnd = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = [s.draw(rnd) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        # Hide the strategy-filled (rightmost) parameters from pytest so it
+        # does not try to resolve them as fixtures.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep = params[:len(params) - len(strategies)]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    if "hypothesis" in sys.modules:  # real package (or prior install) wins
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.SearchStrategy = SearchStrategy
+    hyp.__version__ = "0.0-repro-fallback"
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from", "booleans"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

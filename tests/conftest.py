@@ -8,6 +8,13 @@ or subprocess) forces 512 placeholder devices.
 import numpy as np
 import pytest
 
+try:  # hermetic containers may lack hypothesis; fall back to the shim
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro import testing as _repro_testing
+
+    _repro_testing.install()
+
 
 @pytest.fixture
 def rng():

@@ -5,6 +5,8 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+pytest.importorskip("repro.dist")
+
 from repro.core import Schema, create_index, joins
 from repro.dist import (append_distributed, checkpoint, choose_join,
                         create_distributed, indexed_join_bcast,

@@ -1,0 +1,223 @@
+"""Fused lookup pipeline vs segment-looped reference (DESIGN.md §3).
+
+The fused path (FlatView + one-pass probe/chain-walk/gather) is the default
+through joins.indexed_lookup / indexed_join; these sweeps pin it to the
+original segment-looped code bit for bit, and pin the Pallas kernel to the
+vectorized oracle that stands in for it off-TPU.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Schema, append, compact, create_index, joins
+from repro.core.hashindex import EMPTY_KEY
+from repro.kernels import ops
+
+SCH = Schema.of("k", k="int64", v="float32", tag="int32")
+
+
+def _table(rng, n_base, n_appends, layout, key_range=60, rows_per_batch=64,
+           append_rows=37):
+    cols = {"k": rng.integers(0, key_range, n_base).astype(np.int64),
+            "v": rng.random(n_base).astype(np.float32),
+            "tag": np.arange(n_base, dtype=np.int32)}
+    t = create_index(cols, SCH, rows_per_batch=rows_per_batch, layout=layout)
+    for i in range(n_appends):
+        extra = {"k": rng.integers(0, key_range, append_rows)
+                 .astype(np.int64),
+                 "v": rng.random(append_rows).astype(np.float32),
+                 "tag": np.arange(append_rows, dtype=np.int32)
+                 + 1000 * (i + 1)}
+        t = append(t, extra)
+    return t
+
+
+def _queries(rng, key_range):
+    """Duplicate-heavy present keys + absent keys + the EMPTY sentinel."""
+    q = np.concatenate([
+        rng.integers(0, key_range, 80),          # present (dup-heavy)
+        rng.integers(key_range, 2 * key_range, 15),  # absent
+        [np.iinfo(np.int64).min],                # EMPTY sentinel
+        [np.iinfo(np.int64).max, -1],            # extreme values
+    ])
+    return q.astype(np.int64)
+
+
+@pytest.mark.parametrize("layout", ["row", "columnar"])
+@pytest.mark.parametrize("n_appends", [0, 1, 4, 15])
+def test_fused_lookup_parity_sweep(rng, layout, n_appends):
+    """Fused row ids are bit-identical to the segment-looped reference."""
+    t = _table(rng, 300, n_appends, layout)
+    assert t.num_segments == n_appends + 1
+    q = _queries(rng, 60)
+    for mm in (1, 4, 8):
+        rf, tf = t.lookup(q, mm)
+        rr, tr = t.lookup_ref(q, mm)
+        np.testing.assert_array_equal(np.asarray(rf), np.asarray(rr))
+        np.testing.assert_array_equal(np.asarray(tf), np.asarray(tr))
+
+
+@pytest.mark.parametrize("layout", ["row", "columnar"])
+def test_fused_gather_and_probe_parity(rng, layout):
+    t = _table(rng, 250, 3, layout)
+    q = _queries(rng, 60)
+    np.testing.assert_array_equal(np.asarray(t.probe_latest(q)),
+                                  np.asarray(t.probe_latest_ref(q)))
+    rids, _ = t.lookup(q, 6)
+    safe = jnp.maximum(rids, 0)
+    gf = t.gather_rows(safe)
+    gr = t.gather_rows_ref(safe)
+    for name in gf:
+        np.testing.assert_array_equal(np.asarray(gf[name]),
+                                      np.asarray(gr[name]))
+    # gather_prev parity incl. NULL and out-of-range ids
+    probe_ids = jnp.asarray([-1, 0, 5, t.capacity - 1, t.capacity, 10**6],
+                            jnp.int32)
+    np.testing.assert_array_equal(np.asarray(t.gather_prev(probe_ids)),
+                                  np.asarray(t.gather_prev_ref(probe_ids)))
+
+
+def test_fused_truncation_matches_reference(rng):
+    """All-equal keys: chains longer than max_matches truncate identically."""
+    n = 100
+    cols = {"k": np.zeros(n, np.int64),
+            "v": rng.random(n).astype(np.float32),
+            "tag": np.arange(n, dtype=np.int32)}
+    t = create_index(cols, SCH, rows_per_batch=32)
+    t = append(t, {"k": np.zeros(8, np.int64),
+                   "v": np.ones(8, np.float32),
+                   "tag": np.arange(8, dtype=np.int32)})
+    q = np.array([0, 1], np.int64)
+    for mm in (4, 108, 128):
+        rf, tf = t.lookup(q, mm)
+        rr, tr = t.lookup_ref(q, mm)
+        np.testing.assert_array_equal(np.asarray(rf), np.asarray(rr))
+        np.testing.assert_array_equal(np.asarray(tf), np.asarray(tr))
+    assert bool(t.lookup(q, 4)[1][0])        # 108 rows > 4 -> truncated
+    assert not bool(t.lookup(q, 128)[1][0])  # fits -> not truncated
+
+
+@pytest.mark.parametrize("layout", ["row", "columnar"])
+def test_indexed_join_fused_default_matches_ref(rng, layout):
+    t = _table(rng, 400, 2, layout)
+    pk = rng.integers(0, 80, 64).astype(np.int64)
+    probe_cols = {"pk": pk, "tag": np.arange(64, dtype=np.int32)}
+    bf, pf, vf = joins.indexed_join(t, probe_cols, "pk", max_matches=16)
+    br, pr, vr = joins.indexed_join(t, probe_cols, "pk", max_matches=16,
+                                    fused=False)
+    np.testing.assert_array_equal(np.asarray(vf), np.asarray(vr))
+    for name in bf:
+        np.testing.assert_array_equal(np.asarray(bf[name]),
+                                      np.asarray(br[name]))
+
+
+def test_fused_kernel_matches_oracle_and_reference(rng):
+    """Force the Pallas kernel (interpret) — parity with both the oracle
+    path and the segment-looped reference."""
+    t = _table(rng, 200, 2, "row", key_range=40)
+    fv = t.flat_view()
+    q = _queries(rng, 40)
+    rk, tk = ops.fused_lookup(q, fv.key_planes, fv.bucket_counts, fv.prev,
+                              max_matches=5, use_kernel=True, interpret=True)
+    ro, to = ops.fused_lookup(q, fv.key_planes, fv.bucket_counts, fv.prev,
+                              max_matches=5, use_kernel=False)
+    rr, tr = t.lookup_ref(q, 5)
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(ro))
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(to))
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(tr))
+
+
+def test_flatview_append_reuses_parent_blocks(rng):
+    """Regression: append extends the parent FlatView — it must reuse the
+    parent's per-segment blocks by reference, not rebuild them."""
+    t = _table(rng, 300, 2, "row")
+    fv1 = t.flat_view()
+    t2 = append(t, {"k": np.array([1, 2], np.int64),
+                    "v": np.array([0.5, 0.7], np.float32),
+                    "tag": np.array([7, 8], np.int32)})
+    fv2 = getattr(t2, "_flatview", None)
+    assert fv2 is not None, "append must carry the parent's cached FlatView"
+    assert fv2 is t2.flat_view()
+    assert len(fv2.blocks) == len(fv1.blocks) + 1
+    for b1, b2 in zip(fv1.blocks, fv2.blocks):
+        assert b2 is b1  # shared by reference, never recomputed
+    # parent's cached view is untouched (MVCC: versions coexist)
+    assert t.flat_view() is fv1
+    assert len(fv1.blocks) == t.num_segments
+
+
+def test_flatview_lazy_without_append_carry(rng):
+    """A table built fresh has no cached view until first fused use."""
+    cols = {"k": np.arange(50, dtype=np.int64),
+            "v": np.ones(50, np.float32),
+            "tag": np.zeros(50, np.int32)}
+    t = create_index(cols, SCH, rows_per_batch=32)
+    assert getattr(t, "_flatview", None) is None
+    fv = t.flat_view()
+    assert getattr(t, "_flatview", None) is fv
+
+
+def test_flatview_mixed_bucket_counts(rng):
+    """Segments whose delta indexes have different bucket counts keep
+    ragged planes; each segment probes modulo its own count."""
+    cols = {"k": rng.integers(0, 5000, 3000).astype(np.int64),
+            "v": rng.random(3000).astype(np.float32),
+            "tag": np.arange(3000, dtype=np.int32)}
+    t = create_index(cols, SCH, rows_per_batch=256)
+    t = append(t, {"k": rng.integers(0, 5000, 10).astype(np.int64),
+                   "v": rng.random(10).astype(np.float32),
+                   "tag": np.arange(10, dtype=np.int32)})
+    fv = t.flat_view()
+    assert len(set(fv.bucket_counts)) > 1  # genuinely mixed
+    q = np.concatenate([cols["k"][:50],
+                        rng.integers(5000, 10000, 20)]).astype(np.int64)
+    rf, tf = t.lookup(q, 8)
+    rr, tr = t.lookup_ref(q, 8)
+    np.testing.assert_array_equal(np.asarray(rf), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(tf), np.asarray(tr))
+
+
+def test_compact_resets_flatview(rng):
+    t = _table(rng, 200, 3, "row", key_range=20)
+    t.flat_view()
+    tc = compact(t)
+    assert tc.num_segments == 1
+    q = np.arange(25, dtype=np.int64)
+    rf, _ = tc.lookup(q, 32)
+    rr, _ = tc.lookup_ref(q, 32)
+    np.testing.assert_array_equal(np.asarray(rf), np.asarray(rr))
+
+
+def test_aggregate_preserves_integer_dtypes():
+    """min/max/sum on integer columns must not promote to float."""
+    vals = jnp.asarray([5, -3, 7, 2], jnp.int32)
+    valid = jnp.asarray([True, False, True, True])
+    mn = joins.aggregate(vals, valid, "min")
+    mx = joins.aggregate(vals, valid, "max")
+    sm = joins.aggregate(vals, valid, "sum")
+    assert mn.dtype == jnp.int32 and int(mn) == 2
+    assert mx.dtype == jnp.int32 and int(mx) == 7
+    # sum may widen for overflow safety but must stay integral
+    assert jnp.issubdtype(sm.dtype, jnp.integer) and int(sm) == 14
+    # all-invalid: identity values, still the column dtype
+    none = jnp.zeros(4, bool)
+    assert joins.aggregate(vals, none, "min").dtype == jnp.int32
+    i64 = jnp.asarray([2**40, -2**40], jnp.int64)
+    v64 = jnp.asarray([True, True])
+    assert joins.aggregate(i64, v64, "max").dtype == jnp.int64
+    assert int(joins.aggregate(i64, v64, "max")) == 2**40
+    # floats unchanged
+    f = jnp.asarray([1.5, 2.5], jnp.float32)
+    assert joins.aggregate(f, v64, "min").dtype == jnp.float32
+    assert float(joins.aggregate(f, jnp.zeros(2, bool), "max")) == -np.inf
+
+
+def test_interpret_resolution():
+    from repro.kernels import runtime
+    import jax
+    on_tpu = jax.default_backend() == "tpu"
+    assert runtime.resolve_interpret(None) == (not on_tpu)
+    assert runtime.resolve_interpret(True) is True
+    assert runtime.resolve_interpret(False) is False

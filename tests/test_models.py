@@ -189,8 +189,8 @@ def test_moe_ep_shardmap_single_device(rng):
     p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
     x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
     o1, _ = moe_mod.moe_ffn_einsum(p, x, cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     with shd.logical_sharding(mesh, shd.rules_single_pod()):
         o3, _ = moe_mod.moe_ffn(p, x, cfg)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o3),
