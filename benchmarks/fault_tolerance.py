@@ -1,8 +1,17 @@
 """Fig 12: executor failure during a query sequence.
 
 Kill one shard mid-run; the failed query pays the rebuild (re-shuffle +
-re-index + append replay), subsequent queries return to steady state."""
+re-index + append replay), subsequent queries return to steady state.
+Because a rebuilt dtable has identical leaf shapes, the recovered queries
+re-enter the jitted join's compile cache — the paper's flat post-recovery
+tail depends on exactly that.
 
+Results land in ``BENCH_dist.json`` at the repo root (the committed
+artifact) as well as the harness report.
+"""
+
+import json
+import os
 import time
 
 import numpy as np
@@ -36,20 +45,37 @@ def run(quick: bool = True):
     jfn = jax.jit(lambda d, p: indexed_join_bcast(d, {"pk": p}, "pk", 16))
     block(jfn(dt, probe))                          # compile outside loop
     lat = []
+    rebuild_s = None
     for i in range(n_queries):
         t0 = time.perf_counter()
         if i == kill_at:
             dt = runtime.fail_shard(dt, 2)        # executor dies
             dt = runtime.rebuild_shard(dt, 2, lin)  # lineage recovery
+            rebuild_s = time.perf_counter() - t0
         block(jfn(dt, probe))
         lat.append(time.perf_counter() - t0)
 
     steady = float(np.median(lat[1:kill_at]))
+    post = float(np.median(lat[kill_at + 1:]))
     rep.add("steady_state", ms=steady * 1e3)
     rep.add("failure_query", ms=lat[kill_at] * 1e3,
-            spike_x=lat[kill_at] / steady)
-    rep.add("post_recovery", ms=float(np.median(lat[kill_at + 1:])) * 1e3,
-            recovered=float(np.median(lat[kill_at + 1:])) < 2 * steady)
+            spike_x=lat[kill_at] / steady,
+            rebuild_ms=rebuild_s * 1e3)
+    rep.add("post_recovery", ms=post * 1e3, recovered=post < 2 * steady)
+
+    out_path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                            "BENCH_dist.json"))
+    with open(out_path, "w") as f:
+        json.dump({"benchmark": "fault_tolerance", "quick": quick,
+                   "backend": jax.default_backend(),
+                   "num_shards": 4, "rows": n, "queries": n_queries,
+                   "kill_at": kill_at,
+                   "steady_state_ms": steady * 1e3,
+                   "failure_query_ms": lat[kill_at] * 1e3,
+                   "failure_spike_x": lat[kill_at] / steady,
+                   "rebuild_ms": rebuild_s * 1e3,
+                   "post_recovery_ms": post * 1e3,
+                   "recovered": bool(post < 2 * steady)}, f, indent=2)
     return rep.to_dict()
 
 

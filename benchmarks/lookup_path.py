@@ -5,8 +5,10 @@ probe -> chain-walk -> gather path must not scale with the number of MVCC
 append segments.  This benchmark measures exactly that: the same point
 lookup through
 
-  * ``fused``  — one pass over the table's FlatView (DESIGN.md §3): stacked
-    bucket planes, flat prev array, single-gather row decode;
+  * ``fused``  — one pass over the table's stored Snapshot (DESIGN.md §3):
+    stacked bucket planes, flat prev array, single-gather row decode
+    (``flat_build_s`` is now just the field access: the probe-side view is
+    built eagerly inside create_index/append);
   * ``ref``    — the pre-fusion segment loop: every probe re-scans all
     segment indexes and every chain step re-scans all segments.
 
@@ -18,7 +20,7 @@ Both paths are timed in their production call style: the fused path's core
 is jitted inside ops.fused_lookup; the segment-looped path runs eagerly —
 jit-compiling its O(segments x matches) select/gather chain is itself
 pathological (XLA compile grows super-linearly: ~2 s at 8 segments, ~40 s
-at 10, minutes at 16 on CPU), which is exactly the fan-out the FlatView
+at 10, minutes at 16 on CPU), which is exactly the fan-out the Snapshot
 removes.
 """
 

@@ -12,8 +12,9 @@ import json
 import sys
 import time
 
-# Modules import lazily so one broken/missing dependency (e.g. the repro.dist
-# layer that fault_tolerance needs) cannot take down the whole harness.
+# Modules import lazily so one broken dependency cannot take down the whole
+# harness.  lookup_path and fault_tolerance additionally write the committed
+# artifacts BENCH_lookup.json / BENCH_dist.json at the repo root.
 MODULES = {
     "lookup_path": None,            # Fig 1 / §III-C hot path
     "join_scaling": None,           # Fig 7 + Table III

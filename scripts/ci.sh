@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests, example smoke runs, and the two quick benchmarks
+# that back the committed artifacts (BENCH_lookup.json / BENCH_dist.json).
+#
+#   bash scripts/ci.sh            # full gate (~20 min on CPU)
+#   bash scripts/ci.sh --fast     # tests + examples only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 pytest =="
+python -m pytest -q
+
+echo "== example smoke =="
+python scripts/smoke_examples.py
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== quick benchmarks =="
+  python -m benchmarks.run --only lookup_path --out /tmp/ci_bench_lookup.json
+  python -m benchmarks.run --only fault_tolerance --out /tmp/ci_bench_dist.json
+fi
+
+echo "CI gate OK"

@@ -1,0 +1,67 @@
+"""CI gate: execute every example end-to-end and fail on any error.
+
+    python scripts/smoke_examples.py [--only NAME] [--timeout SECONDS]
+
+Each example is run as its own subprocess with PYTHONPATH=src (exactly how
+a user runs them), so import errors, missing layers (the old repro.dist
+hole), and runtime exceptions all surface here instead of in user reports.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# example -> extra argv (keep every run CI-sized)
+EXAMPLES = {
+    "quickstart.py": [],
+    "threat_detection.py": [],
+    "serve_indexed.py": [],
+    "train_lm.py": ["--steps", "6"],
+}
+
+
+def run_example(name: str, extra, timeout: float) -> tuple[bool, float]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
+                                 if env.get("PYTHONPATH") else "")
+    t0 = time.time()
+    proc = subprocess.run(
+        [sys.executable, os.path.join("examples", name), *extra],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=timeout)
+    dt = time.time() - t0
+    ok = proc.returncode == 0
+    if not ok:
+        print(f"--- {name} stdout ---\n{proc.stdout[-2000:]}")
+        print(f"--- {name} stderr ---\n{proc.stderr[-4000:]}")
+    return ok, dt
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(EXAMPLES))
+    ap.add_argument("--timeout", type=float, default=900.0)
+    args = ap.parse_args(argv)
+
+    todo = [args.only] if args.only else list(EXAMPLES)
+    failures = 0
+    for name in todo:
+        print(f"== {name} ==", flush=True)
+        try:
+            ok, dt = run_example(name, EXAMPLES[name], args.timeout)
+        except subprocess.TimeoutExpired:
+            ok, dt = False, args.timeout
+            print(f"   TIMEOUT after {args.timeout:.0f}s")
+        print(f"   {'OK' if ok else 'FAILED'} in {dt:.1f}s", flush=True)
+        failures += 0 if ok else 1
+    print(f"\n{len(todo) - failures}/{len(todo)} examples passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,19 +6,22 @@ Layout:
   hashindex.py  dense bucketized hash index (cTrie replacement): bulk build,
                 probe, backward-pointer chain walk
   schema.py     fixed-width schemas, row-wise + columnar codecs
+  snapshot.py   Snapshot: the stored read-optimized pytree form (ragged
+                probe planes + flat prev + optional flat data)
   table.py      IndexedTable: segments, MVCC appends, snapshots, compaction
   joins.py      indexed join/lookup + vanilla baselines (hash, sort-merge, scan)
   planner.py    Catalyst-analog rewrite rules -> physical operators
 """
 
 from repro.core.schema import Schema, Column
+from repro.core.snapshot import FlatBlock, Snapshot
 from repro.core.table import (IndexedTable, FlatView, create_index, append,
                               compact)
 from repro.core.hashindex import HashIndex, build_index, probe, chain_walk
 from repro.core import joins, planner
 
 __all__ = [
-    "Schema", "Column", "IndexedTable", "FlatView", "create_index", "append",
-    "compact", "HashIndex", "build_index", "probe", "chain_walk", "joins",
-    "planner",
+    "Schema", "Column", "IndexedTable", "Snapshot", "FlatBlock", "FlatView",
+    "create_index", "append", "compact", "HashIndex", "build_index", "probe",
+    "chain_walk", "joins", "planner",
 ]

@@ -54,7 +54,7 @@ def partition_hash(keys, num_shards: int):
 def split64(x):
     """int64 array -> (hi, lo) int32 planes.
 
-    The TPU VPU has no 64-bit lanes (DESIGN.md §7); kernels and the FlatView
+    The TPU VPU has no 64-bit lanes (DESIGN.md §7); kernels and the Snapshot
     carry keys as two int32 planes and equality is two compares AND'd.
     """
     bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.int64), jnp.uint64)

@@ -37,8 +37,20 @@ def indexed_lookup(table: IndexedTable, keys, *, max_matches: int,
     (cols dict with shape [Q, max_matches], valid [Q, max_matches]).
 
     ``fused=True`` (default) runs the probe -> chain-walk -> gather pipeline
-    in one pass over the table's FlatView (DESIGN.md §3); ``fused=False``
-    keeps the segment-looped reference path for parity sweeps."""
+    in one pass over the table's stored Snapshot (DESIGN.md §3);
+    ``fused=False`` keeps the segment-looped reference path for parity
+    sweeps."""
+    if max_matches <= 0:
+        raise ValueError(
+            f"max_matches must be a positive match-slot count, "
+            f"got {max_matches}")
+    keys = jnp.asarray(keys)
+    if keys.dtype != jnp.int64:
+        raise ValueError(
+            f"query keys must be int64 (got {keys.dtype}); keys are int64 "
+            f"at every API boundary — pre-hash string keys at ingest "
+            f"(hashing.hash_string_host, DESIGN.md §9) and cast narrower "
+            f"integer keys explicitly")
     rids, _ = table.lookup(keys, max_matches, fused=fused)
     valid = rids != NULL_PTR
     cols = table.gather_rows(jnp.maximum(rids, 0), names=names, fused=fused)

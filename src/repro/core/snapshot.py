@@ -1,0 +1,190 @@
+"""Snapshot — the read-optimized *stored* form of an IndexedTable.
+
+DESIGN.md §3: the paper's core claim (Fig 1, §III-C) is that the index is
+built once and probed millions of times, so the probe path must not scale
+with the number of MVCC append segments.  The fused probe -> chain-walk ->
+gather pipeline therefore runs over a flat multi-segment view:
+
+* per-segment ``FlatBlock``s — each delta index's bucket planes with int64
+  keys pre-split into (hi, lo) int32 (DESIGN.md §7), kept **ragged** at the
+  segment's own bucket count (bucket ids are computed modulo each segment's
+  ``num_buckets``, carried as ``bucket_counts`` meta — nothing is padded);
+* ``prev [capacity] int32`` — the segments' backward-pointer arrays
+  concatenated in global row order, so a chain walk is one gather per step;
+* ``data`` — *optional* contiguous row storage (``[capacity, W]`` int32
+  words or per-column flat arrays) for single-gather row decode.  ``None``
+  until a version actually decodes rows: the probe path never touches row
+  data, so append-heavy workloads don't pay an O(capacity) copy per
+  version.
+
+A Snapshot is a **registered pytree** and lives on the table as a stored
+field (``IndexedTable.snapshot``), not a host-side cache: jitted functions
+that take the table as a pytree *argument* trace the snapshot's arrays as
+leaves instead of rebuilding the view in-graph per call, and the
+distributed layer (repro/dist) stacks snapshots across a leading shard
+axis and vmaps the same lookup code per shard.  ``bucket_counts`` and
+``layout`` ride in the treedef, so structurally equal tables hit the same
+jit cache entry.
+
+Construction rules (there is no invalidation — a Snapshot is a pure
+function of the immutable segments tuple):
+
+1. ``create_index`` builds the probe side eagerly (``snapshot_from_
+   segments``) — O(index size) split/concat, shares every buffer.
+2. ``append`` extends the parent's snapshot (``extend_snapshot``): only
+   the delta segment's block is computed; parent blocks are reused by
+   reference (a regression test asserts identity).  Flat data is carried
+   forward only if the parent had materialized it.
+3. ``compact`` starts from a fresh single-segment snapshot.
+4. Old versions keep their old snapshots — MVCC divergence (paper
+   Listing 2) needs no copy-on-write.
+
+``BLOCK_BUILDS`` / ``DATA_BUILDS`` count construction work; the tracing
+regression tests assert they do not move while a jitted lookup traces or
+runs with the table as an argument (zero in-graph rebuilds).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+# Construction counters (test instrumentation): bumped once per FlatBlock /
+# flat-data build.  Host-side eager builds (create/append) bump them; a
+# jitted lookup taking the table as a pytree argument must not.
+BLOCK_BUILDS = 0
+DATA_BUILDS = 0
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["key_hi", "key_lo", "ptrs"],
+         meta_fields=["num_buckets"])
+@dataclasses.dataclass(frozen=True)
+class FlatBlock:
+    """One segment's probe-side contribution to a Snapshot.
+
+    Blocks are immutable and shared by reference across table versions:
+    ``extend_snapshot`` appends one new block (the delta) and never
+    recomputes a parent block.  Planes stay ragged (each segment's own
+    bucket count) so per-delta cost is O(delta index size).
+    """
+
+    key_hi: jax.Array     # [nb, slots] int32 — bucket keys, high plane
+    key_lo: jax.Array     # [nb, slots] int32 — bucket keys, low plane
+    ptrs: jax.Array       # [nb, slots] int32 — head ptrs (GLOBAL row ids)
+    num_buckets: int
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["blocks", "prev", "data"],
+         meta_fields=["bucket_counts", "layout"])
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """Flat multi-segment view of one table version — a stored pytree."""
+
+    blocks: tuple[FlatBlock, ...]
+    prev: jax.Array                 # [capacity] int32, global row order
+    data: object                    # None | [cap, W] int32 | dict[name->[cap]]
+    bucket_counts: tuple[int, ...]  # per-segment bucket counts (ragged)
+    layout: str
+
+    @property
+    def capacity(self) -> int:
+        return self.prev.shape[-1]
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def key_planes(self):
+        """Per-segment (hi, lo, ptrs) triples, oldest -> newest."""
+        return tuple((b.key_hi, b.key_lo, b.ptrs) for b in self.blocks)
+
+    def nbytes(self) -> int:
+        """Memory the snapshot holds beyond the segments' own arrays."""
+        n = sum((b.key_hi.size + b.key_lo.size + b.ptrs.size) * 4
+                for b in self.blocks) + self.prev.size * 4
+        if self.data is None:
+            return n
+        if self.layout == "row":
+            return n + self.data.size * 4
+        return n + sum(a.size * a.dtype.itemsize for a in self.data.values())
+
+
+def block_from_segment(seg) -> FlatBlock:
+    """Split one segment's delta index into a probe-side block."""
+    global BLOCK_BUILDS
+    BLOCK_BUILDS += 1
+    hi, lo = hashing.split64(seg.index.bucket_keys)
+    return FlatBlock(key_hi=hi, key_lo=lo, ptrs=seg.index.bucket_ptrs,
+                     num_buckets=seg.index.num_buckets)
+
+
+def flat_data_from_segments(segments, schema, layout):
+    """Contiguous data for single-gather row decode (the optional side)."""
+    global DATA_BUILDS
+    DATA_BUILDS += 1
+    if layout == "row":
+        w = schema.width_words
+        if len(segments) == 1:
+            return segments[0].data.reshape(segments[0].capacity, w)
+        return jnp.concatenate([s.data.reshape(s.capacity, w)
+                                for s in segments], axis=0)
+    if len(segments) == 1:
+        return {c.name: segments[0].data[c.name].reshape(-1)
+                for c in schema.columns}
+    return {c.name: jnp.concatenate([s.data[c.name].reshape(-1)
+                                     for s in segments])
+            for c in schema.columns}
+
+
+def snapshot_from_segments(segments, layout, *, schema=None,
+                           with_data: bool = False) -> Snapshot:
+    """Build a Snapshot from scratch (create_index / compact path)."""
+    blocks = tuple(block_from_segment(s) for s in segments)
+    prev = (segments[0].prev if len(segments) == 1
+            else jnp.concatenate([s.prev for s in segments]))
+    data = (flat_data_from_segments(segments, schema, layout)
+            if with_data else None)
+    return Snapshot(blocks=blocks, prev=prev, data=data,
+                    bucket_counts=tuple(b.num_buckets for b in blocks),
+                    layout=layout)
+
+
+def extend_snapshot(snap: Snapshot, seg, *, schema) -> Snapshot:
+    """Parent snapshot + one delta segment -> child snapshot.
+
+    O(delta index) block build plus one ``prev`` concat (4 B/row); parent
+    blocks are reused by reference.  Flat data is extended only when the
+    parent had materialized it, so append-heavy versions that never decode
+    stay O(delta).
+    """
+    block = block_from_segment(seg)
+    prev = jnp.concatenate([snap.prev, seg.prev], axis=-1)
+    if snap.data is None:
+        data = None
+    elif snap.layout == "row":
+        w = schema.width_words
+        data = jnp.concatenate(
+            [snap.data, seg.data.reshape(seg.capacity, w)], axis=0)
+    else:
+        data = {c.name: jnp.concatenate(
+                    [snap.data[c.name], seg.data[c.name].reshape(-1)])
+                for c in schema.columns}
+    return Snapshot(blocks=snap.blocks + (block,), prev=prev, data=data,
+                    bucket_counts=snap.bucket_counts + (block.num_buckets,),
+                    layout=snap.layout)
+
+
+def strip_data(snap: Snapshot) -> Snapshot:
+    """Probe-side-only view: keeps lookup jit caches independent of whether
+    (and when) a table materialized its flat data."""
+    if snap.data is None:
+        return snap
+    return dataclasses.replace(snap, data=None)

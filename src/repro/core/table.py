@@ -18,18 +18,21 @@ Row storage is batch-granular: a segment's data is ``[num_batches,
 rows_per_batch, width_words] int32`` (row layout) or per-column typed arrays
 (columnar layout).  ``rows_per_batch`` is the paper's Fig-5 knob.
 
-The read hot path (probe -> chain walk -> gather) runs **fused** over a
-cached ``FlatView`` of all segments (DESIGN.md §3): ragged per-segment
-bucket planes (split int64 keys), one flat backward-pointer array, plus a
-lazily-built contiguous data copy for single-gather decode.  ``append``
-carries the view forward incrementally; the original segment-looped
-methods survive as ``*_ref`` and anchor the parity tests.
+The read hot path (probe -> chain walk -> gather) runs **fused** over the
+table's stored ``Snapshot`` (core/snapshot.py, DESIGN.md §3): ragged
+per-segment bucket planes (split int64 keys), one flat backward-pointer
+array, and optional contiguous data for single-gather decode.  The snapshot
+is part of the table's *pytree form* — ``create_index`` builds it eagerly,
+``append`` extends it incrementally — so jitted call sites that take the
+table as an argument trace it as leaves instead of rebuilding it in-graph.
+The original segment-looped methods survive as ``*_ref`` and anchor the
+parity tests.
 
 Everything here is written to be **vmap-friendly over a leading shard
 axis**: the inner segment constructor is pure (no host branching), padding
 rows carry ``valid=False`` and an EMPTY key, and the overflow-doubling retry
-lives in thin host wrappers.  dist/dtable.py stacks whole tables across
-shards and vmaps these same functions.
+lives in thin host wrappers.  dist/dtable.py stacks whole tables (segments
+AND snapshot) across shards and vmaps these same functions.
 """
 
 from __future__ import annotations
@@ -42,14 +45,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashindex as hix
-from repro.core import hashing
+from repro.core import snapshot as snap_mod
 from repro.core.hashindex import EMPTY_KEY, HashIndex
 from repro.core.pointers import NULL_PTR, PTR_DTYPE
 from repro.core.schema import Schema
-# kernels only imports leaf core modules (hashing/hashindex/pointers), so
-# this does not cycle; importing here (not inside methods) keeps module
-# constants from being created inside an active jit trace.
+from repro.core.snapshot import (FlatBlock, Snapshot, extend_snapshot,
+                                 snapshot_from_segments)
+# kernels only imports leaf core modules (hashing/hashindex/pointers/
+# snapshot), so this does not cycle; importing here (not inside methods)
+# keeps module constants from being created inside an active jit trace.
 from repro.kernels import ops as kops
+
+# Back-compat alias: PR-1 exported the probe-side view as ``FlatView``.
+FlatView = Snapshot
 
 # ---------------------------------------------------------------------------
 # Segment
@@ -83,106 +91,21 @@ class Segment:
         return self.index.nbytes + self.prev.size * 4 + self.valid.size
 
 
-# ---------------------------------------------------------------------------
-# FlatView — the fused lookup pipeline's table representation (DESIGN.md §3)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class FlatBlock:
-    """One segment's probe-side contribution to a FlatView.
-
-    Blocks are immutable and shared by reference across table versions:
-    ``append`` extends the parent's blocks with one new block (the delta) —
-    it never recomputes a parent block (tests assert identity).  Planes are
-    kept **ragged** (each segment's own bucket count): bucket ids are
-    computed modulo the segment's own ``num_buckets``, so nothing is padded
-    and per-delta cost stays O(delta index size).
-    """
-
-    key_hi: jax.Array     # [nb, slots] int32 — bucket keys, high plane
-    key_lo: jax.Array     # [nb, slots] int32 — bucket keys, low plane
-    ptrs: jax.Array       # [nb, slots] int32 — head ptrs (GLOBAL row ids)
-    prev: jax.Array       # [cap] int32 — shares the Segment.prev buffer
-    num_buckets: int
-    capacity: int
-
-
-@dataclasses.dataclass(frozen=True)
-class FlatView:
-    """Probe-side flat view of all segments for one table version.
-
-    * per-segment bucket planes (ragged, int64 keys pre-split to int32
-      hi/lo) exposed via ``key_planes``;
-    * ``prev`` — the segments' backward-pointer arrays concatenated in
-      global row order, so a chain walk is a single gather per step.
-
-    The *data* side (contiguous rows for single-gather decode) is cached
-    separately and lazily on the table (``IndexedTable._flat_data``) — the
-    probe/chain-walk path never touches row data, and append-heavy
-    workloads shouldn't pay a full-table copy per version.
-
-    Invalidation: none.  A FlatView is a pure function of an immutable
-    ``segments`` tuple; it is cached on the IndexedTable instance and new
-    versions get a new (incrementally extended) view.
-    """
-
-    blocks: tuple[FlatBlock, ...]
-    prev: jax.Array
-    bucket_counts: tuple[int, ...]
-    layout: str
-
-    @property
-    def capacity(self) -> int:
-        return self.prev.shape[0]
-
-    @property
-    def key_planes(self):
-        """Per-segment (hi, lo, ptrs) triples, oldest -> newest."""
-        return tuple((b.key_hi, b.key_lo, b.ptrs) for b in self.blocks)
-
-    def nbytes(self) -> int:
-        """Extra memory the probe-side view holds beyond the segments."""
-        return sum((b.key_hi.size + b.key_lo.size + b.ptrs.size) * 4
-                   for b in self.blocks) + self.prev.size * 4
-
-
-def _block_from_segment(seg: Segment) -> FlatBlock:
-    hi, lo = hashing.split64(seg.index.bucket_keys)
-    return FlatBlock(key_hi=hi, key_lo=lo, ptrs=seg.index.bucket_ptrs,
-                     prev=seg.prev, num_buckets=seg.index.num_buckets,
-                     capacity=seg.capacity)
-
-
-def _assemble_flatview(blocks, layout: str) -> FlatView:
-    return FlatView(
-        blocks=tuple(blocks),
-        prev=jnp.concatenate([b.prev for b in blocks]),
-        bucket_counts=tuple(b.num_buckets for b in blocks),
-        layout=layout,
-    )
-
-
-def _extend_flatview(fv: FlatView, block: FlatBlock,
-                     layout: str) -> FlatView:
-    """Parent view + one delta block -> child view: every parent block is
-    reused by reference; only ``prev`` is re-concatenated (4 B/row)."""
-    return FlatView(
-        blocks=fv.blocks + (block,),
-        prev=jnp.concatenate([fv.prev, block.prev]),
-        bucket_counts=fv.bucket_counts + (block.num_buckets,),
-        layout=layout,
-    )
-
-
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["segments"],
+         data_fields=["segments", "snapshot"],
          meta_fields=["schema", "rows_per_batch", "layout", "version",
                       "slots"])
 @dataclasses.dataclass(frozen=True)
 class IndexedTable:
-    """A fully functional (immutable) indexed partition with MVCC versions."""
+    """A fully functional (immutable) indexed partition with MVCC versions.
+
+    ``snapshot`` is the stored read-optimized form (DESIGN.md §3): both the
+    segments and the snapshot are pytree data, so the table round-trips
+    through jit/vmap with the fused-path arrays as leaves.
+    """
 
     segments: tuple[Segment, ...]
+    snapshot: Snapshot
     schema: Schema
     rows_per_batch: int
     layout: str           # "row" | "columnar"
@@ -209,51 +132,51 @@ class IndexedTable:
         """Index memory overhead — the paper's Fig-11 measurement."""
         return sum(s.index_nbytes() for s in self.segments)
 
-    # -- flat view (fused-path representation, DESIGN.md §3) -------------------
+    # -- snapshot access (fused-path representation, DESIGN.md §3) -------------
 
-    def flat_view(self) -> FlatView:
-        """The cached FlatView for this version (built lazily once).
+    def flat_view(self) -> Snapshot:
+        """The stored Snapshot for this version (a field access — the view
+        is built eagerly by ``create_index`` and extended by ``append``)."""
+        return self.snapshot
 
-        ``append`` extends the parent's cached view incrementally — only
-        the delta segment's block is computed; parent blocks are shared by
-        reference (the regression test asserts identity).
+    def with_flat_data(self) -> "IndexedTable":
+        """This table with the snapshot's flat data materialized.
+
+        Use before passing the table as a jit *argument* to call sites that
+        decode rows (``gather_rows`` / ``joins.indexed_lookup``): with the
+        data on board, the whole fused pipeline traces as stored leaves —
+        zero in-graph rebuilds.  Appends carry materialized data forward.
+        This is the ONLY way the stored pytree gains the data leaf — host
+        reads never mutate the table's structure (jit caches and captured
+        treedefs stay valid).
         """
-        fv = getattr(self, "_flatview", None)
-        if fv is None:
-            blocks = [_block_from_segment(s) for s in self.segments]
-            fv = _assemble_flatview(blocks, self.layout)
-            # Cache only concrete views: a view built under a jit trace
-            # holds tracers and must not outlive that trace.
-            if not isinstance(fv.prev, jax.core.Tracer):
-                object.__setattr__(self, "_flatview", fv)
-        return fv
+        if self.snapshot.data is not None:
+            return self
+        return dataclasses.replace(
+            self, snapshot=dataclasses.replace(self.snapshot,
+                                               data=self._flat_data()))
 
     def _flat_data(self):
-        """Contiguous data for single-gather row decode, built lazily on
-        first fused ``gather_rows`` and cached per version.  Kept separate
-        from the FlatView: the probe path never reads row data, so appends
-        don't pay an O(capacity) data copy per version."""
+        """Flat data for single-gather decode.  Prefers the snapshot's
+        stored copy; otherwise builds it once and caches it on the host
+        instance (``_flatdata``, deliberately OUTSIDE the pytree: the
+        table's structure must not change as a side effect of a read)."""
+        d = self.snapshot.data
+        if d is not None:
+            return d
         d = getattr(self, "_flatdata", None)
         if d is None:
-            if self.layout == "row":
-                w = self.schema.width_words
-                d = jnp.concatenate([s.data.reshape(s.capacity, w)
-                                     for s in self.segments], axis=0)
-                concrete = not isinstance(d, jax.core.Tracer)
-            else:
-                d = {c.name: jnp.concatenate(
-                        [s.data[c.name].reshape(-1) for s in self.segments])
-                     for c in self.schema.columns}
-                concrete = not any(isinstance(a, jax.core.Tracer)
-                                   for a in d.values())
-            if concrete:
+            d = snap_mod.flat_data_from_segments(self.segments, self.schema,
+                                                 self.layout)
+            leaves = jax.tree_util.tree_leaves(d)
+            if not any(isinstance(a, jax.core.Tracer) for a in leaves):
                 object.__setattr__(self, "_flatdata", d)
         return d
 
     # -- point operations ------------------------------------------------------
     #
     # The default path is the FUSED one: probe -> chain walk -> gather runs
-    # against the FlatView in one pass (Pallas kernel on TPU, vectorized flat
+    # against the Snapshot in one pass (Pallas kernel on TPU, vectorized flat
     # gathers elsewhere).  The *_ref methods keep the original segment-looped
     # code as the semantic reference the parity tests sweep against.
 
@@ -265,9 +188,7 @@ class IndexedTable:
         """
         if not fused:
             return self.probe_latest_ref(keys)
-        fv = self.flat_view()
-        return kops.fused_probe(keys, fv.key_planes, fv.bucket_counts,
-                                fv.prev)
+        return kops.fused_probe(keys, self.snapshot)
 
     def probe_latest_ref(self, keys) -> jax.Array:
         """Segment-looped reference: one full probe per delta index."""
@@ -282,10 +203,11 @@ class IndexedTable:
         """prev[rid] across segments (NULL for NULL/out-of-range input)."""
         if not fused:
             return self.gather_prev_ref(rids)
-        fv = self.flat_view()
+        prev = self.snapshot.prev
+        cap = self.snapshot.capacity
         rids = jnp.asarray(rids, PTR_DTYPE)
-        in_range = (rids >= 0) & (rids < fv.capacity)
-        got = fv.prev[jnp.clip(rids, 0, fv.capacity - 1)]
+        in_range = (rids >= 0) & (rids < cap)
+        got = prev[jnp.clip(rids, 0, cap - 1)]
         return jnp.where(in_range, got, NULL_PTR)
 
     def gather_prev_ref(self, rids) -> jax.Array:
@@ -302,12 +224,11 @@ class IndexedTable:
     def lookup(self, keys, max_matches: int, *, fused: bool = True):
         """[Q] keys -> ([Q, max_matches] global row ids newest-first,
         truncated flags).  Paper's point-lookup: cTrie probe + backward-
-        pointer traversal — fused into one pass over the FlatView."""
+        pointer traversal — fused into one pass over the Snapshot."""
         if not fused:
             return self.lookup_ref(keys, max_matches)
-        fv = self.flat_view()
-        return kops.fused_lookup(keys, fv.key_planes, fv.bucket_counts,
-                                 fv.prev, max_matches=max_matches)
+        return kops.fused_lookup(keys, self.snapshot,
+                                 max_matches=max_matches)
 
     def lookup_ref(self, keys, max_matches: int):
         """Segment-looped reference lookup (the pre-fusion hot path)."""
@@ -467,14 +388,16 @@ def create_index(cols: dict, schema: Schema, *, rows_per_batch: int = 4096,
     """Paper Listing 1 ``createIndex``: build the index over a dataframe.
 
     In the distributed layer this is preceded by the hash-partition shuffle;
-    here we build one partition.
+    here we build one partition.  The probe-side Snapshot is built eagerly
+    as part of the table's stored form (DESIGN.md §3); flat data stays lazy.
     """
     cols_p, valid_p, cap = prepare_cols(cols, schema, rows_per_batch, valid)
     heads = jnp.full((cap,), NULL_PTR, PTR_DTYPE)
     seg = _build_segment_retrying(cols_p, valid_p, heads, schema, row_base=0,
                                   rows_per_batch=rows_per_batch,
                                   layout=layout, slots=slots)
-    return IndexedTable(segments=(seg,), schema=schema,
+    snap = snapshot_from_segments((seg,), layout, schema=schema)
+    return IndexedTable(segments=(seg,), snapshot=snap, schema=schema,
                         rows_per_batch=rows_per_batch, layout=layout,
                         version=0, slots=slots)
 
@@ -484,7 +407,9 @@ def append(table: IndexedTable, cols: dict, valid=None) -> IndexedTable:
 
     O(|delta|) work; the parent's segments are shared by reference (the
     cTrie-snapshot analog).  Divergent appends on one parent (paper
-    Listing 2) both succeed and coexist.
+    Listing 2) both succeed and coexist.  The child's snapshot extends the
+    parent's incrementally: only the delta's block is computed, parent
+    blocks are shared, and flat data is carried only if materialized.
     """
     cols_p, valid_p, cap = prepare_cols(cols, table.schema,
                                         table.rows_per_batch, valid)
@@ -492,24 +417,16 @@ def append(table: IndexedTable, cols: dict, valid=None) -> IndexedTable:
                      jnp.asarray(cols_p[table.schema.key], jnp.int64),
                      EMPTY_KEY)
     # Head-link probe: always the eager segment-looped reference.  The
-    # fused path would either force an O(capacity) view build (cold) or
-    # retrace its jitted core (shapes change every append); a one-shot
-    # probe over |delta| keys amortizes neither.
-    parent_fv = getattr(table, "_flatview", None)
+    # fused path's jitted core would retrace per append (shapes grow every
+    # version); a one-shot probe over |delta| keys amortizes nothing.
     heads = table.probe_latest_ref(keys)
     seg = _build_segment_retrying(cols_p, valid_p, heads, table.schema,
                                   row_base=table.capacity,
                                   rows_per_batch=table.rows_per_batch,
                                   layout=table.layout, slots=table.slots)
-    child = dataclasses.replace(table, segments=table.segments + (seg,),
-                                version=table.version + 1)
-    # Incremental FlatView carry: only the delta segment's block is built;
-    # the parent's blocks are shared by reference, never rebuilt.
-    if parent_fv is not None:
-        block = _block_from_segment(seg)
-        object.__setattr__(child, "_flatview",
-                           _extend_flatview(parent_fv, block, table.layout))
-    return child
+    snap = extend_snapshot(table.snapshot, seg, schema=table.schema)
+    return dataclasses.replace(table, segments=table.segments + (seg,),
+                               snapshot=snap, version=table.version + 1)
 
 
 def compact(table: IndexedTable) -> IndexedTable:

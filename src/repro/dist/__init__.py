@@ -1,0 +1,28 @@
+"""repro.dist — the distributed Indexed DataFrame (paper §III-C/D).
+
+Layout:
+  shuffle.py     capacity-bounded all-to-all over partition_hash (route
+                 local outboxes + the src<->dest transpose)
+  dtable.py      DistributedTable: shard-stacked IndexedTables (segments +
+                 Snapshots as ONE pytree), create/append/lookup/joins —
+                 the single-partition code vmapped over the shard axis
+  runtime.py     Lineage append replay, fail/rebuild shard, VersionVector
+                 fencing, StragglerPolicy (paper Fig 12)
+  checkpoint.py  save/restore pytree leaves + elastic reshard
+
+CPU CI runs every shard axis under jax.vmap; on a real mesh the same
+functions run under shard_map with the leading axis sharded over devices
+(the shuffle's transpose becomes one lax.all_to_all).
+"""
+
+from repro.dist import checkpoint, runtime, shuffle
+from repro.dist.dtable import (DistributedTable, append_distributed,
+                               choose_join, create_distributed,
+                               indexed_join_bcast, indexed_join_shuffle,
+                               lookup)
+
+__all__ = [
+    "DistributedTable", "append_distributed", "checkpoint", "choose_join",
+    "create_distributed", "indexed_join_bcast", "indexed_join_shuffle",
+    "lookup", "runtime", "shuffle",
+]

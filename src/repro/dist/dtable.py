@@ -1,0 +1,268 @@
+"""DistributedTable — the hash-partitioned Indexed DataFrame (paper §III-C/D).
+
+A dtable stacks per-shard ``IndexedTable``s leaf-wise into ONE pytree whose
+every array leaf carries a leading ``[num_shards]`` axis — segments AND the
+stored Snapshot.  That buys two things the paper's distributed design needs:
+
+* **The single-partition code IS the distributed code.**  Every query
+  vmaps the unchanged ``IndexedTable`` methods over the shard axis; the
+  fused lookup consumes each shard's Snapshot leaves directly (zero
+  in-graph view rebuilds).  On a real mesh the same functions run under
+  ``shard_map`` with the leading axis sharded over devices; CPU CI vmaps.
+* **Jitted distributed queries take the dtable as a pytree argument** —
+  e.g. ``jax.jit(lambda dt, q: indexed_join_bcast(dt, {"k": q}, "k", 16))``
+  compiles once and stays cached across failure/rebuild cycles (leaf
+  shapes are deterministic) and across structurally equal appends.
+
+Construction routes rows to their owning shard (``partition_hash``) on the
+host, pads every shard to a common capacity with ``valid=False`` lanes, and
+builds all shards in one vmapped ``make_segment_arrays`` call (the
+overflow-doubling retry stays a host loop, doubling until *every* shard
+fits — bucket counts must agree across shards for the stacked pytree).
+
+MVCC (paper §III-D/E): ``append_distributed`` is the functional append —
+per-shard delta segments, snapshot extension, and a global version bump;
+parent and child dtables coexist and share every parent buffer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashindex as hix
+from repro.core import hashing
+from repro.core import snapshot as snap_mod
+from repro.core.hashindex import EMPTY_KEY
+from repro.core.pointers import NULL_PTR, PTR_DTYPE
+from repro.core.schema import Schema
+from repro.core.table import IndexedTable, make_segment_arrays, pad_to_batches
+from repro.dist import shuffle
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["table"],
+         meta_fields=["num_shards", "version"])
+@dataclasses.dataclass(frozen=True)
+class DistributedTable:
+    """Shard-stacked Indexed DataFrame: one pytree, leading shard axis."""
+
+    table: IndexedTable   # every array leaf is [num_shards, ...]
+    num_shards: int
+    version: int          # global MVCC version (paper §III-D)
+
+    @property
+    def schema(self) -> Schema:
+        return self.table.schema
+
+    @property
+    def rows_per_batch(self) -> int:
+        return self.table.rows_per_batch
+
+    @property
+    def layout(self) -> str:
+        return self.table.layout
+
+    @property
+    def slots(self) -> int:
+        return self.table.slots
+
+    def num_rows(self):
+        """Total valid rows across all shards."""
+        return self.table.num_rows()
+
+    def index_nbytes(self) -> int:
+        return self.table.index_nbytes()
+
+    def data_nbytes(self) -> int:
+        return self.table.data_nbytes()
+
+
+# ---------------------------------------------------------------------------
+# Host-side routing (ingest path: exact, no capacity bound)
+# ---------------------------------------------------------------------------
+
+def _route_host(cols, schema: Schema, num_shards: int, rows_per_batch: int,
+                valid=None):
+    """Partition columns by key hash into [num_shards, cap] padded arrays.
+
+    The ingest path routes on the host (numpy) so it is exact — capacity is
+    *derived* from the worst shard's row count, not guessed; query-time
+    probe routing is the vectorized ``dist.shuffle`` instead.
+    """
+    keys = np.asarray(cols[schema.key]).astype(np.int64)
+    n = keys.shape[0]
+    v = (np.ones(n, bool) if valid is None
+         else np.asarray(valid, bool).copy())
+    dest = np.asarray(hashing.partition_hash(jnp.asarray(keys), num_shards))
+    counts = np.bincount(dest[v], minlength=num_shards)
+    cap = pad_to_batches(max(int(counts.max()), 1), rows_per_batch)
+    out = {c.name: np.zeros((num_shards, cap), np.dtype(c.dtype))
+           for c in schema.columns}
+    vout = np.zeros((num_shards, cap), bool)
+    for d in range(num_shards):
+        m = v & (dest == d)
+        k = int(m.sum())
+        for c in schema.columns:
+            out[c.name][d, :k] = np.asarray(cols[c.name])[m]
+        vout[d, :k] = True
+    return ({name: jnp.asarray(a) for name, a in out.items()},
+            jnp.asarray(vout), cap)
+
+
+def _build_stacked_segment(shard_cols, shard_valid, heads, schema: Schema, *,
+                           row_base: int, rows_per_batch: int, layout: str,
+                           slots: int, max_retries: int = 6):
+    """One vmapped segment build across shards, retrying until no shard's
+    bucket array overflows (all shards share one bucket count — the
+    stacked pytree needs uniform shapes)."""
+    cap = int(shard_valid.shape[1])
+    nb = hix.suggest_num_buckets(cap, slots)
+    for _ in range(max_retries):
+        seg, overflow = jax.vmap(
+            lambda c, v, h, _nb=nb: make_segment_arrays(
+                c, v, h, schema, row_base=row_base,
+                rows_per_batch=rows_per_batch, layout=layout,
+                num_buckets=_nb, slots=slots))(shard_cols, shard_valid,
+                                               heads)
+        if int(jnp.max(overflow)) == 0:
+            return seg
+        nb *= 2
+    raise RuntimeError("distributed segment build kept overflowing")
+
+
+def create_distributed(cols: dict, schema: Schema, num_shards: int, *,
+                       rows_per_batch: int = 4096, layout: str = "row",
+                       slots: int = hix.DEFAULT_SLOTS,
+                       valid=None) -> DistributedTable:
+    """Paper Listing 1 ``createIndex`` at cluster scope: hash-partition the
+    dataframe, then build every shard's index in one vmapped pass.
+
+    Shard snapshots are built **with flat data**: distributed queries take
+    the dtable as a jit argument, so everything the fused pipeline needs
+    (probe planes, prev, row data) must live in the stored pytree.
+    """
+    sc, sv, cap = _route_host(cols, schema, num_shards, rows_per_batch,
+                              valid)
+    heads = jnp.full((num_shards, cap), NULL_PTR, PTR_DTYPE)
+    seg = _build_stacked_segment(sc, sv, heads, schema, row_base=0,
+                                 rows_per_batch=rows_per_batch,
+                                 layout=layout, slots=slots)
+    snap = jax.vmap(lambda s: snap_mod.snapshot_from_segments(
+        (s,), layout, schema=schema, with_data=True))(seg)
+    table = IndexedTable(segments=(seg,), snapshot=snap, schema=schema,
+                         rows_per_batch=rows_per_batch, layout=layout,
+                         version=0, slots=slots)
+    return DistributedTable(table=table, num_shards=num_shards, version=0)
+
+
+def append_distributed(dt: DistributedTable, cols: dict,
+                       valid=None) -> DistributedTable:
+    """Functional distributed append -> new version (paper §III-D MVCC).
+
+    Routes the delta to owning shards, probes each shard's parent for head
+    links, builds one delta segment per shard (vmapped), and extends each
+    shard's snapshot incrementally.  The parent dtable is untouched —
+    divergent appends coexist, sharing every parent buffer by reference.
+    """
+    schema, rpb = dt.schema, dt.rows_per_batch
+    sc, sv, cap = _route_host(cols, schema, dt.num_shards, rpb, valid)
+    keys = jnp.where(sv, jnp.asarray(sc[schema.key], jnp.int64), EMPTY_KEY)
+    heads = jax.vmap(lambda t, k: t.probe_latest_ref(k))(dt.table, keys)
+    seg = _build_stacked_segment(sc, sv, heads, schema,
+                                 row_base=dt.table.capacity,
+                                 rows_per_batch=rpb, layout=dt.layout,
+                                 slots=dt.slots)
+    snap = jax.vmap(lambda sn, sg: snap_mod.extend_snapshot(
+        sn, sg, schema=schema))(dt.table.snapshot, seg)
+    child = dataclasses.replace(dt.table,
+                                segments=dt.table.segments + (seg,),
+                                snapshot=snap,
+                                version=dt.table.version + 1)
+    return DistributedTable(table=child, num_shards=dt.num_shards,
+                            version=dt.version + 1)
+
+
+# ---------------------------------------------------------------------------
+# Distributed queries (vmapped single-partition ops + owner select)
+# ---------------------------------------------------------------------------
+
+def lookup(dt: DistributedTable, keys, *, max_matches: int, names=None):
+    """Distributed point lookup -> (cols [Q, M], valid [Q, M], owner [Q]).
+
+    Keys are routed by ``partition_hash``; every shard answers the full
+    query batch through its own Snapshot (the broadcast probe of
+    ``indexed_join_bcast``) and the owner shard's answer is selected per
+    query.  Rows for a key live only on its owner, so the select is exact.
+    """
+    q = jnp.asarray(keys, jnp.int64)
+    owner = hashing.partition_hash(q, dt.num_shards)
+
+    def shard(t):
+        rids, _ = t.lookup(q, max_matches)
+        valid = rids != NULL_PTR
+        cols = t.gather_rows(jnp.maximum(rids, 0), names=names)
+        return cols, valid
+
+    cols_s, valid_s = jax.vmap(shard)(dt.table)       # [s, Q, M] leaves
+    iq = jnp.arange(q.shape[0])
+    cols = {k: v[owner, iq] for k, v in cols_s.items()}
+    return cols, valid_s[owner, iq], owner
+
+
+def indexed_join_bcast(dt: DistributedTable, probe_cols: dict,
+                       probe_key: str, max_matches: int, *, names=None):
+    """Broadcast equi-join: ship the (small) probe side to every shard.
+
+    Returns (build_cols [Q, M], probe_cols broadcast [Q, M], valid [Q, M])
+    — the same contract as ``core.joins.indexed_join``.
+    """
+    q = jnp.asarray(probe_cols[probe_key], jnp.int64)
+    build_cols, valid, _ = lookup(dt, q, max_matches=max_matches,
+                                  names=names)
+    m = valid.shape[1]
+    probe_b = {k: jnp.broadcast_to(jnp.asarray(v)[:, None],
+                                   (q.shape[0], m))
+               for k, v in probe_cols.items()}
+    return build_cols, probe_b, valid
+
+
+def indexed_join_shuffle(dt: DistributedTable, probe_cols: dict,
+                         probe_key: str, probe_valid, max_matches: int, *,
+                         capacity: int | None = None, names=None):
+    """Shuffle equi-join: the (large) probe side arrives sharded [s, n];
+    probe rows are shuffled to the shard owning their key
+    (``dist.shuffle``), then joined locally — results stay sharded.
+
+    Returns (build_cols [s, s*cap, M], probe_cols [s, s*cap, M],
+    valid [s, s*cap, M], dropped [s]).  ``capacity`` bounds each
+    (src, dest) exchange lane; the default ``n`` can never drop.
+    """
+    s = dt.num_shards
+    keys = jnp.asarray(probe_cols[probe_key], jnp.int64)
+    assert keys.shape[0] == s, (keys.shape, s)
+    cap = capacity if capacity is not None else keys.shape[1]
+    payload = {k: jnp.asarray(v) for k, v in probe_cols.items()}
+    rk, rp, rv, dropped = shuffle.shuffle_global(
+        keys, payload, jnp.asarray(probe_valid, bool), s, cap)
+
+    def local(t, k, v):
+        rids, _ = t.lookup(k, max_matches)
+        valid = (rids != NULL_PTR) & v[:, None]
+        cols = t.gather_rows(jnp.maximum(rids, 0), names=names)
+        return cols, valid
+
+    build_cols, valid = jax.vmap(local)(dt.table, rk, rv)
+    probe_b = {k: jnp.broadcast_to(v[..., None], v.shape + (max_matches,))
+               for k, v in rp.items()}
+    return build_cols, probe_b, valid, dropped
+
+
+def choose_join(dt, probe_rows: int, *,
+                bcast_threshold: int = 1_000_000) -> str:
+    """Paper §III-D planner rule: broadcast the probe side while it is
+    cheaper to replicate than to shuffle; shuffle at scale."""
+    return "bcast" if probe_rows <= bcast_threshold else "shuffle"

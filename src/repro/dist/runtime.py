@@ -1,0 +1,187 @@
+"""Distributed runtime: lineage recovery, version fencing, stragglers.
+
+Paper §III-D + Fig 12: an executor failure must not lose the indexed
+cache — the lost partition is rebuilt from *lineage* (the deterministic
+recipe: re-route the base dataframe, re-index, replay appends), the failed
+query pays the rebuild, and subsequent queries return to steady state.
+``benchmarks/fault_tolerance.py`` measures exactly that spike shape.
+
+Because a dtable's construction pipeline is deterministic (host routing,
+vmapped builds, host-coordinated overflow retries), a lineage replay
+reproduces the lost shard's leaves bit-for-bit shape-wise — so a rebuilt
+dtable re-enters the same jit cache entry as the original (no recompile
+after recovery, which is what keeps the Fig-12 tail flat).
+
+``VersionVector`` is the stale-read fence of §III-D: readers carry the
+version they indexed against; a shard that has moved on (or is marked
+stale during rebuild) rejects the read.  ``StragglerPolicy`` plans
+speculative re-execution for shards running past a deadline factor —
+the standard lineage-system mitigation the paper inherits from Spark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashindex as hix
+from repro.core import hashing
+from repro.core.hashindex import EMPTY_KEY
+from repro.core.pointers import NULL_PTR
+from repro.core.schema import Schema
+from repro.dist import dtable as _dtable
+
+
+class Lineage:
+    """Host-side append log: the deterministic recipe for any shard.
+
+    Records the base dataframe and every appended delta (defensive copies
+    — lineage must survive mutation of the caller's buffers).  ``replay``
+    re-runs the exact construction pipeline at any shard count.
+    """
+
+    def __init__(self, schema: Schema, base_cols: dict, *,
+                 rows_per_batch: int = 4096, layout: str = "row",
+                 slots: int = hix.DEFAULT_SLOTS):
+        self.schema = schema
+        self.rows_per_batch = rows_per_batch
+        self.layout = layout
+        self.slots = slots
+        self.base = {k: np.array(v, copy=True)
+                     for k, v in base_cols.items()}
+        self.deltas: list[dict] = []
+
+    def record_append(self, delta_cols: dict):
+        self.deltas.append({k: np.array(v, copy=True)
+                            for k, v in delta_cols.items()})
+
+    def replay(self, num_shards: int) -> _dtable.DistributedTable:
+        dt = _dtable.create_distributed(
+            self.base, self.schema, num_shards,
+            rows_per_batch=self.rows_per_batch, layout=self.layout,
+            slots=self.slots)
+        for delta in self.deltas:
+            dt = _dtable.append_distributed(dt, delta)
+        return dt
+
+
+def fail_shard(dt: _dtable.DistributedTable,
+               shard: int) -> _dtable.DistributedTable:
+    """Simulate executor loss: blank the shard's slice of every leaf.
+
+    Shapes (and therefore jit caches) are preserved — only the shard's
+    contents are gone, exactly like a re-attached blank executor.  Index
+    structures are blanked to their *sentinels* (EMPTY keys, NULL
+    pointers, valid=False), not zero: zero is a legal key and a legal row
+    id, and a dead shard must answer every lookup with a miss, never a
+    fabricated key-0 match.
+    """
+
+    def kill(leaf, fill):
+        return leaf.at[shard].set(jnp.asarray(fill).astype(leaf.dtype))
+
+    t = dt.table
+    ehi, elo = hashing.split64(jnp.full((), EMPTY_KEY, jnp.int64))
+    segments = tuple(dataclasses.replace(
+        s,
+        data=jax.tree.map(lambda a: kill(a, 0), s.data),
+        valid=kill(s.valid, False),
+        prev=kill(s.prev, NULL_PTR),
+        index=dataclasses.replace(s.index,
+                                  bucket_keys=kill(s.index.bucket_keys,
+                                                   EMPTY_KEY),
+                                  bucket_ptrs=kill(s.index.bucket_ptrs,
+                                                   NULL_PTR)))
+        for s in t.segments)
+    snap = dataclasses.replace(
+        t.snapshot,
+        blocks=tuple(dataclasses.replace(b, key_hi=kill(b.key_hi, ehi),
+                                         key_lo=kill(b.key_lo, elo),
+                                         ptrs=kill(b.ptrs, NULL_PTR))
+                     for b in t.snapshot.blocks),
+        prev=kill(t.snapshot.prev, NULL_PTR),
+        data=(None if t.snapshot.data is None
+              else jax.tree.map(lambda a: kill(a, 0), t.snapshot.data)))
+    table = dataclasses.replace(t, segments=segments, snapshot=snap)
+    return dataclasses.replace(dt, table=table)
+
+
+def rebuild_shard(dt: _dtable.DistributedTable, shard: int,
+                  lineage: Lineage) -> _dtable.DistributedTable:
+    """Lineage recovery (paper Fig 12): rebuild one shard and splice it in.
+
+    CI-scale replays the whole pipeline and takes the shard's slice —
+    determinism makes the splice exact; a production runtime re-routes
+    only the lost partition's rows.  Raises if the lineage's version
+    disagrees with the live dtable (missed ``record_append``).
+    """
+    fresh = lineage.replay(dt.num_shards)
+    if fresh.version != dt.version:
+        raise ValueError(
+            f"lineage replays to version {fresh.version} but the dtable is "
+            f"at version {dt.version}; every append_distributed must be "
+            f"paired with Lineage.record_append")
+
+    def splice(broken, rebuilt):
+        return broken.at[shard].set(rebuilt[shard])
+
+    table = jax.tree.map(splice, dt.table, fresh.table)
+    return dataclasses.replace(dt, table=table)
+
+
+@dataclasses.dataclass
+class VersionVector:
+    """Per-shard MVCC fencing (paper §III-D stale-read detection)."""
+
+    versions: list
+    stale: set
+
+    @classmethod
+    def fresh(cls, num_shards: int) -> "VersionVector":
+        return cls(versions=[0] * num_shards, stale=set())
+
+    def bump(self, shard: int):
+        self.versions[shard] += 1
+
+    def bump_all(self):
+        self.versions = [v + 1 for v in self.versions]
+
+    def mark_stale(self, shard: int):
+        """Fence a shard out (failed / mid-rebuild): no version passes."""
+        self.stale.add(shard)
+
+    def mark_fresh(self, shard: int, version: int | None = None):
+        self.stale.discard(shard)
+        if version is not None:
+            self.versions[shard] = version
+
+    def check_fresh(self, shard: int, version: int) -> bool:
+        """True iff a read indexed at ``version`` is safe on ``shard``."""
+        return shard not in self.stale and version >= self.versions[shard]
+
+
+class StragglerPolicy:
+    """Speculative re-execution planning (deadline = factor x median)."""
+
+    def __init__(self, deadline_factor: float = 2.0):
+        self.deadline_factor = deadline_factor
+        self.slow: list[int] = []
+
+    def observe(self, durations) -> list:
+        """Record per-shard task durations; returns straggler indices."""
+        d = np.asarray(durations, dtype=np.float64)
+        deadline = self.deadline_factor * float(np.median(d))
+        self.slow = [i for i, t in enumerate(d) if t > deadline]
+        return self.slow
+
+    def plan_speculative(self, num_shards: int) -> dict:
+        """{straggler shard -> healthy shard to run the backup copy on};
+        backups round-robin over the healthy shards."""
+        healthy = [i for i in range(num_shards) if i not in self.slow]
+        if not healthy:
+            return {}
+        return {s: healthy[j % len(healthy)]
+                for j, s in enumerate(self.slow)}

@@ -1,0 +1,92 @@
+"""Capacity-bounded all-to-all shuffle over the partition hash.
+
+Paper §III-C: the distributed Indexed DataFrame hash-partitions rows by
+key so every row (and every probe) has exactly one owning shard.  Sparkle
+(arXiv:1708.05746) showed shared-memory shuffle restructuring is where
+distributed dataframe runtimes win or lose; ours is a two-phase, fully
+vectorized exchange with **static shapes** (XLA needs them):
+
+1. ``route_local`` — each source shard sorts its rows by destination
+   (``hashing.partition_hash``) and scatters them into ``num_shards``
+   capacity-bounded outboxes.  Overflow is *counted, never silent*: rows
+   beyond ``capacity`` for one destination are dropped and reported, the
+   exact analog of the hash-index build's overflow contract (callers
+   retry with a bigger capacity).
+2. ``shuffle_global`` — the all-to-all: outbox [src, dest, cap] becomes
+   inbox [dest, src * cap].  On CPU CI this is a transpose; under
+   ``shard_map`` on a real mesh the same data movement is one
+   ``jax.lax.all_to_all`` over the shard axis.
+
+Payloads are pytrees: ``rows`` may be a single [n, ...] array or a dict of
+per-column arrays — every leaf rides the same key-derived permutation, so
+routing stays consistent across columns.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.hashindex import _segment_rank
+
+
+def route_local(keys, rows, valid, num_shards: int, capacity: int):
+    """Route [n] rows into ``num_shards`` capacity-bounded outboxes.
+
+    keys     : [n] int64 routing keys
+    rows     : [n, ...] array or pytree of [n, ...] arrays (the payload)
+    valid    : [n] bool — invalid lanes are never routed
+    Returns ``(keys [s, cap], rows [s, cap, ...], valid [s, cap],
+    dropped)`` where ``dropped`` counts valid rows that overflowed their
+    destination's capacity (0 means the exchange was exact).
+    """
+    keys = jnp.asarray(keys, jnp.int64)
+    valid = jnp.asarray(valid, bool)
+    # invalid lanes sort to a virtual shard num_shards and are dropped
+    dest = jnp.where(valid, hashing.partition_hash(keys, num_shards),
+                     jnp.int32(num_shards))
+    order = jnp.argsort(dest, stable=True)
+    d_s = dest[order]
+    v_s = valid[order]
+    rank = _segment_rank(d_s)                 # slot within the destination
+    routed = v_s & (d_s < num_shards)
+    ok = routed & (rank < capacity)
+    dropped = jnp.sum(routed & (rank >= capacity))
+    flat = jnp.where(ok, d_s * capacity + jnp.minimum(rank, capacity - 1),
+                     jnp.int32(num_shards * capacity))  # out of range: drop
+
+    def scatter(a):
+        a = jnp.asarray(a)
+        out = jnp.zeros((num_shards * capacity,) + a.shape[1:], a.dtype)
+        out = out.at[flat].set(a[order], mode="drop")
+        return out.reshape((num_shards, capacity) + a.shape[1:])
+
+    out_keys = scatter(keys)
+    out_rows = jax.tree.map(scatter, rows)
+    out_valid = (jnp.zeros((num_shards * capacity,), bool)
+                 .at[flat].set(ok, mode="drop")
+                 .reshape(num_shards, capacity))
+    return out_keys, out_rows, out_valid, dropped
+
+
+def shuffle_global(keys, rows, valid, num_shards: int, capacity: int):
+    """All-to-all: per-source [s, n] rows -> per-destination inboxes.
+
+    keys/valid : [s, n]; rows: [s, n, ...] array or pytree of such.
+    Returns ``(keys [s, s*cap], rows [s, s*cap, ...], valid [s, s*cap],
+    dropped [s])`` — destination-major; ``dropped[i]`` is source shard i's
+    overflow count.  ``capacity`` bounds each (src, dest) lane; capacity =
+    n can never drop.  The src<->dest transpose is the all-to-all (one
+    ``lax.all_to_all`` under shard_map on a real mesh).
+    """
+    route = jax.vmap(
+        lambda k, r, v: route_local(k, r, v, num_shards, capacity))
+    lk, lr, lv, dropped = route(keys, rows, valid)    # [src, dest, cap, ...]
+
+    def all_to_all(x):                                # -> [dest, src*cap, ...]
+        x = jnp.swapaxes(x, 0, 1)
+        return x.reshape((num_shards, num_shards * capacity) + x.shape[3:])
+
+    return (all_to_all(lk), jax.tree.map(all_to_all, lr), all_to_all(lv),
+            dropped)

@@ -139,15 +139,17 @@ def _fused_lookup_kernel(*refs, num_segments: int, max_matches: int):
 
 
 @functools.partial(jax.jit, static_argnames=("max_matches", "interpret"))
-def fused_lookup_tiles(bucket_ids, q_hi, q_lo, key_planes, prev,
+def fused_lookup_tiles(bucket_ids, q_hi, q_lo, snapshot,
                        *, max_matches: int, interpret: bool | None = None):
-    """Fused probe + chain walk over a flat multi-segment table view.
+    """Fused probe + chain walk over a table's stored Snapshot.
 
     bucket_ids : [S, Q] int32  per-segment bucket ids (Q padded to tile)
     q_hi/q_lo  : [Q] int32     query key planes
-    key_planes : per-segment (hi, lo, ptrs) triples, each [nb_s, slots]
-                 int32 — ragged, a FlatView's blocks
-    prev       : [capacity] int32      flat backward-pointer array
+    snapshot   : core.snapshot.Snapshot — ragged per-segment (hi, lo, ptrs)
+                 planes (each [nb_s, slots] int32) plus the flat [capacity]
+                 int32 backward-pointer array; a registered pytree, so this
+                 jit caches on its structure (bucket_counts ride in the
+                 treedef) and traces its arrays as leaves
     returns    : (rows [Q, max_matches] int32 newest-first NULL-padded,
                   last [Q] int32 — next row id after the walk; >= 0 means
                   the chain was truncated at max_matches)
@@ -157,6 +159,8 @@ def fused_lookup_tiles(bucket_ids, q_hi, q_lo, key_planes, prev,
     (DESIGN.md §3) or compact() to bound S.
     """
     interpret = runtime.resolve_interpret(interpret)
+    key_planes = snapshot.key_planes
+    prev = snapshot.prev
     s, q = bucket_ids.shape
     assert q % QUERY_TILE == 0, q
     assert len(key_planes) == s

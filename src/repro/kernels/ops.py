@@ -3,7 +3,7 @@
 ``probe`` is a drop-in accelerated replacement for
 ``repro.core.hashindex.probe`` — same signature, same results (tests sweep
 both).  ``fused_lookup`` is the multi-segment hot path: probe + in-kernel
-chain walk over a table's FlatView (DESIGN.md §3).  The wrappers own
+chain walk over a table's stored Snapshot (DESIGN.md §3).  The wrappers own
 everything that does not belong in the vector kernel: bucket-id hashing
 (64-bit scalar math), int64 -> (hi, lo) plane splitting, tile padding, and
 EMPTY-key masking.
@@ -23,7 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import hashing
+from repro.core import hashing, snapshot
 from repro.core.hashindex import EMPTY_KEY, HashIndex
 from repro.core.pointers import NULL_PTR
 from repro.kernels import hash_probe, ref, runtime
@@ -53,47 +53,51 @@ def probe(index: HashIndex, query_keys, *, interpret: bool | None = None):
 
 
 # ---------------------------------------------------------------------------
-# Fused multi-segment lookup (probe -> chain walk) over a FlatView
+# Fused multi-segment lookup (probe -> chain walk) over a stored Snapshot
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit,
-                   static_argnames=("bucket_counts", "max_matches"))
-def _fused_ref_jit(qp, key_planes, prev, *, bucket_counts, max_matches):
-    bids = jnp.stack([hashing.bucket_hash(qp, nb) for nb in bucket_counts])
+
+@functools.partial(jax.jit, static_argnames=("max_matches",))
+def _fused_ref_jit(qp, snap, *, max_matches):
+    bids = jnp.stack([hashing.bucket_hash(qp, nb)
+                      for nb in snap.bucket_counts])
     qhi, qlo = hashing.split64(qp)
-    return ref.fused_lookup_ref(bids, qhi, qlo, key_planes, prev,
-                                max_matches)
+    return ref.fused_lookup_ref(bids, qhi, qlo, snap, max_matches)
 
 
-@functools.partial(jax.jit, static_argnames=("bucket_counts", "max_matches",
-                                             "interpret"))
-def _fused_kernel_jit(q, key_planes, prev, *, bucket_counts, max_matches,
-                      interpret):
+@functools.partial(jax.jit, static_argnames=("max_matches", "interpret"))
+def _fused_kernel_jit(q, snap, *, max_matches, interpret):
     """Kernel-branch prep (pad, hash, split) fused into one jitted program
     so a direct fused_lookup call dispatches once, not per prep op."""
     pad = (-q.shape[0]) % hash_probe.QUERY_TILE
     qp = jnp.pad(q, (0, pad), constant_values=int(EMPTY_KEY))
-    bids = jnp.stack([hashing.bucket_hash(qp, nb) for nb in bucket_counts])
+    bids = jnp.stack([hashing.bucket_hash(qp, nb)
+                      for nb in snap.bucket_counts])
     qhi, qlo = hashing.split64(qp)
     rows, last = hash_probe.fused_lookup_tiles(
-        bids, qhi, qlo, key_planes, prev, max_matches=max_matches,
-        interpret=interpret)
+        bids, qhi, qlo, snap, max_matches=max_matches, interpret=interpret)
     return rows[:q.shape[0]], last[:q.shape[0]]
 
 
-def fused_lookup(query_keys, key_planes, bucket_counts, prev, *,
-                 max_matches: int, interpret: bool | None = None,
+def fused_lookup(query_keys, snap, *, max_matches: int,
+                 interpret: bool | None = None,
                  use_kernel: bool | None = None):
-    """[Q] keys against per-segment planes -> ([Q, M] rows, truncated).
+    """[Q] keys against a table's Snapshot -> ([Q, M] rows, truncated).
 
-    query_keys    : [Q] int64
-    key_planes    : per-segment (hi, lo, ptrs) triples, each [nb_s, slots]
-                    int32 — a FlatView's ragged bucket planes
-    bucket_counts : tuple[int, ...] per-segment bucket counts (each
-                    segment's bucket ids are computed modulo its own count)
-    prev          : [capacity] int32 flat backward-pointer array
+    query_keys : [Q] int64
+    snap       : core.snapshot.Snapshot — ragged per-segment (hi, lo, ptrs)
+                 bucket planes, per-segment bucket counts (treedef meta;
+                 each segment's bucket ids are computed modulo its own
+                 count), and the flat [capacity] int32 backward-pointer
+                 array.  A registered pytree: under jit/vmap the arrays
+                 trace as leaves (zero in-graph view rebuilds) and the
+                 same code runs per-shard in the distributed layer.
     Returns rows [Q, max_matches] global row ids newest-first (NULL-padded)
     and truncated [Q] bool — identical contract to IndexedTable.lookup_ref.
+
+    The probe path never reads row data, so the snapshot's optional
+    ``data`` is stripped before entering the jitted cores: lookup compile
+    caches are independent of when a table materializes its flat data.
 
     ``use_kernel=True`` with ``interpret=True`` is a parity-test/debug
     combination: emulating the unrolled per-segment loop is slow to trace
@@ -101,18 +105,16 @@ def fused_lookup(query_keys, key_planes, bucket_counts, prev, *,
     picks the compiled kernel on TPU and the vectorized oracle elsewhere.
     """
     q = jnp.asarray(query_keys, jnp.int64)
+    snap = snapshot.strip_data(snap)
     if use_kernel is None:
         use_kernel = not runtime.resolve_interpret(interpret)
 
     if use_kernel:
         rows, last = _fused_kernel_jit(
-            q, tuple(key_planes), prev,
-            bucket_counts=tuple(bucket_counts), max_matches=max_matches,
+            q, snap, max_matches=max_matches,
             interpret=runtime.resolve_interpret(interpret))
     else:
-        rows, last = _fused_ref_jit(q, tuple(key_planes), prev,
-                                    bucket_counts=tuple(bucket_counts),
-                                    max_matches=max_matches)
+        rows, last = _fused_ref_jit(q, snap, max_matches=max_matches)
 
     # EMPTY query keys never match (EMPTY slots hold NULL ptrs) — explicit
     # mask for defense in depth, mirroring probe():
@@ -122,14 +124,12 @@ def fused_lookup(query_keys, key_planes, bucket_counts, prev, *,
     return rows, truncated
 
 
-def fused_probe(query_keys, key_planes, bucket_counts, prev, *,
-                interpret: bool | None = None,
+def fused_probe(query_keys, snap, *, interpret: bool | None = None,
                 use_kernel: bool | None = None):
-    """Head (latest) row id per key over stacked segment planes. [Q] int32."""
+    """Head (latest) row id per key over a Snapshot's planes. [Q] int32."""
     # A one-step fused lookup: rows[:, 0] is the head pointer.
-    rows, _ = fused_lookup(query_keys, key_planes, bucket_counts, prev,
-                           max_matches=1, interpret=interpret,
-                           use_kernel=use_kernel)
+    rows, _ = fused_lookup(query_keys, snap, max_matches=1,
+                           interpret=interpret, use_kernel=use_kernel)
     return rows[:, 0]
 
 

@@ -21,17 +21,18 @@ def probe_ref(bucket_ids, q_hi, q_lo, keys_hi, keys_lo, ptrs):
     return jnp.max(jnp.where(match, row_ptr, NULL), axis=1)
 
 
-def fused_probe_ref(bucket_ids, q_hi, q_lo, key_planes):
+def fused_probe_ref(bucket_ids, q_hi, q_lo, snapshot):
     """Oracle for the probe stage of hash_probe.fused_lookup_tiles.
 
-    bucket_ids [S, Q]; key_planes = per-segment (hi, lo, ptrs) triples,
-    each [nb_s, slots] (ragged).  One [Q, slots] gather + compare per
-    segment, then a first-non-NULL select newest -> oldest.  This IS the
-    vectorized flat lookup — on non-TPU backends ops.fused_lookup runs it
-    directly instead of emulating the Pallas kernel (DESIGN.md §3).
+    bucket_ids [S, Q]; ``snapshot`` is a core.snapshot.Snapshot whose
+    per-segment (hi, lo, ptrs) planes are each [nb_s, slots] (ragged).
+    One [Q, slots] gather + compare per segment, then a first-non-NULL
+    select newest -> oldest.  This IS the vectorized flat lookup — on
+    non-TPU backends ops.fused_lookup runs it directly instead of
+    emulating the Pallas kernel (DESIGN.md §3).
     """
     cands = []
-    for s, (hi, lo, ptr) in enumerate(key_planes):
+    for s, (hi, lo, ptr) in enumerate(snapshot.key_planes):
         row_hi = hi[bucket_ids[s]]                    # [Q, slots]
         row_lo = lo[bucket_ids[s]]
         row_ptr = ptr[bucket_ids[s]]
@@ -47,13 +48,14 @@ def fused_probe_ref(bucket_ids, q_hi, q_lo, key_planes):
     return jnp.where(hit.any(axis=0), head, NULL)
 
 
-def fused_lookup_ref(bucket_ids, q_hi, q_lo, key_planes, prev,
-                     max_matches: int):
-    """Oracle for hash_probe.fused_lookup_tiles: fused probe + chain walk.
+def fused_lookup_ref(bucket_ids, q_hi, q_lo, snapshot, max_matches: int):
+    """Oracle for hash_probe.fused_lookup_tiles: fused probe + chain walk
+    over a Snapshot (probe planes + flat ``prev``).
 
     Returns (rows [Q, max_matches] newest-first NULL-padded, last [Q] — the
     would-be next row id; >= 0 means truncated)."""
-    head = fused_probe_ref(bucket_ids, q_hi, q_lo, key_planes)
+    head = fused_probe_ref(bucket_ids, q_hi, q_lo, snapshot)
+    prev = snapshot.prev
 
     def step(cur, _):
         nxt = jnp.where(cur >= 0, prev[jnp.maximum(cur, 0)], NULL)

@@ -135,6 +135,20 @@ def test_fail_and_rebuild_shard(dt_and_cols, rng):
                                np.asarray(expect["v"]) * ve, rtol=1e-6)
 
 
+def test_failed_shard_answers_miss_not_key_zero(rng):
+    """A dead shard must answer every lookup with a miss: blanking must use
+    EMPTY/NULL sentinels, not zeros (0 is a legal key and a legal row id)."""
+    from repro.core import hashing
+    cols = {"k": np.arange(64, dtype=np.int64),
+            "v": np.ones(64, np.float32)}
+    dt = create_distributed(cols, SCH, 4, rows_per_batch=32)
+    owner0 = int(np.asarray(
+        hashing.partition_hash(jnp.asarray([0], jnp.int64), 4))[0])
+    broken = runtime.fail_shard(dt, owner0)
+    _, v, _ = lookup(broken, np.array([0], np.int64), max_matches=8)
+    assert int(np.asarray(v).sum()) == 0
+
+
 def test_version_vector_fencing():
     vv = runtime.VersionVector.fresh(4)
     assert vv.check_fresh(0, 0)

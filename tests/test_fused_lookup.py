@@ -1,9 +1,11 @@
 """Fused lookup pipeline vs segment-looped reference (DESIGN.md §3).
 
-The fused path (FlatView + one-pass probe/chain-walk/gather) is the default
-through joins.indexed_lookup / indexed_join; these sweeps pin it to the
-original segment-looped code bit for bit, and pin the Pallas kernel to the
-vectorized oracle that stands in for it off-TPU.
+The fused path (stored Snapshot + one-pass probe/chain-walk/gather) is the
+default through joins.indexed_lookup / indexed_join; these sweeps pin it to
+the original segment-looped code bit for bit, and pin the Pallas kernel to
+the vectorized oracle that stands in for it off-TPU.  Pytree/jit/vmap
+properties of the Snapshot live in test_snapshot.py; the distributed layer
+built on it in test_dist.py.
 """
 
 import numpy as np
@@ -118,10 +120,9 @@ def test_fused_kernel_matches_oracle_and_reference(rng):
     t = _table(rng, 200, 2, "row", key_range=40)
     fv = t.flat_view()
     q = _queries(rng, 40)
-    rk, tk = ops.fused_lookup(q, fv.key_planes, fv.bucket_counts, fv.prev,
-                              max_matches=5, use_kernel=True, interpret=True)
-    ro, to = ops.fused_lookup(q, fv.key_planes, fv.bucket_counts, fv.prev,
-                              max_matches=5, use_kernel=False)
+    rk, tk = ops.fused_lookup(q, fv, max_matches=5, use_kernel=True,
+                              interpret=True)
+    ro, to = ops.fused_lookup(q, fv, max_matches=5, use_kernel=False)
     rr, tr = t.lookup_ref(q, 5)
     np.testing.assert_array_equal(np.asarray(rk), np.asarray(ro))
     np.testing.assert_array_equal(np.asarray(tk), np.asarray(to))
@@ -129,34 +130,45 @@ def test_fused_kernel_matches_oracle_and_reference(rng):
     np.testing.assert_array_equal(np.asarray(tk), np.asarray(tr))
 
 
-def test_flatview_append_reuses_parent_blocks(rng):
-    """Regression: append extends the parent FlatView — it must reuse the
-    parent's per-segment blocks by reference, not rebuild them."""
+def test_snapshot_append_reuses_parent_blocks(rng):
+    """Regression: append extends the parent's stored Snapshot — it must
+    reuse the parent's per-segment blocks by reference, never rebuild."""
     t = _table(rng, 300, 2, "row")
-    fv1 = t.flat_view()
+    fv1 = t.snapshot
     t2 = append(t, {"k": np.array([1, 2], np.int64),
                     "v": np.array([0.5, 0.7], np.float32),
                     "tag": np.array([7, 8], np.int32)})
-    fv2 = getattr(t2, "_flatview", None)
-    assert fv2 is not None, "append must carry the parent's cached FlatView"
+    fv2 = t2.snapshot
     assert fv2 is t2.flat_view()
     assert len(fv2.blocks) == len(fv1.blocks) + 1
     for b1, b2 in zip(fv1.blocks, fv2.blocks):
         assert b2 is b1  # shared by reference, never recomputed
-    # parent's cached view is untouched (MVCC: versions coexist)
-    assert t.flat_view() is fv1
+    # parent's snapshot is untouched (MVCC: versions coexist)
+    assert t.snapshot is fv1
     assert len(fv1.blocks) == t.num_segments
 
 
-def test_flatview_lazy_without_append_carry(rng):
-    """A table built fresh has no cached view until first fused use."""
+def test_snapshot_eager_probe_side_lazy_data(rng):
+    """create_index stores the probe-side Snapshot eagerly; the flat-data
+    side stays lazy, and host reads must NOT mutate the pytree structure
+    (the lazy cache lives outside the tree; with_flat_data is the only way
+    the stored form gains the data leaf)."""
+    import jax
     cols = {"k": np.arange(50, dtype=np.int64),
             "v": np.ones(50, np.float32),
             "tag": np.zeros(50, np.int32)}
     t = create_index(cols, SCH, rows_per_batch=32)
-    assert getattr(t, "_flatview", None) is None
-    fv = t.flat_view()
-    assert getattr(t, "_flatview", None) is fv
+    assert t.snapshot is t.flat_view()
+    assert len(t.snapshot.blocks) == 1
+    assert t.snapshot.data is None              # probe path needs no rows
+    treedef_before = jax.tree_util.tree_structure(t)
+    t.gather_rows(jnp.asarray([0, 1, 2], jnp.int32))   # first fused decode
+    assert t.snapshot.data is None              # read did not mutate the tree
+    assert jax.tree_util.tree_structure(t) == treedef_before
+    assert getattr(t, "_flatdata", None) is not None   # host cache amortizes
+    td = t.with_flat_data()                     # explicit materialization
+    assert td is not t and td.snapshot.data is not None
+    assert td.with_flat_data() is td            # no-op once materialized
 
 
 def test_flatview_mixed_bucket_counts(rng):

@@ -78,16 +78,14 @@ def test_fused_lookup_kernel_sweep(rng, n_segments, n_query, max_matches):
     bids = jnp.stack([bucket_hash(qp, nb) for nb in fv.bucket_counts])
     qhi, qlo = split64(qp)
 
-    rk, lk = fused_lookup_tiles(bids, qhi, qlo, fv.key_planes, fv.prev,
+    rk, lk = fused_lookup_tiles(bids, qhi, qlo, fv,
                                 max_matches=max_matches, interpret=True)
-    ro, lo = ref_mod.fused_lookup_ref(bids, qhi, qlo, fv.key_planes,
-                                      fv.prev, max_matches)
+    ro, lo = ref_mod.fused_lookup_ref(bids, qhi, qlo, fv, max_matches)
     np.testing.assert_array_equal(np.asarray(rk), np.asarray(ro))
     np.testing.assert_array_equal(np.asarray(lk), np.asarray(lo))
 
     # ... and through the public dispatcher against the table reference
-    rows_k, trunc_k = ops.fused_lookup(q, fv.key_planes, fv.bucket_counts,
-                                       fv.prev, max_matches=max_matches,
+    rows_k, trunc_k = ops.fused_lookup(q, fv, max_matches=max_matches,
                                        use_kernel=True, interpret=True)
     rows_r, trunc_r = t.lookup_ref(q, max_matches)
     np.testing.assert_array_equal(np.asarray(rows_k), np.asarray(rows_r))

@@ -1,0 +1,203 @@
+"""Snapshot-as-stored-pytree: jit/vmap round trips, zero in-graph rebuilds,
+compile-cache stability (DESIGN.md §3).
+
+PR-1's FlatView was a host-side instance cache, so call sites that took the
+table as a jit *argument* unflattened a fresh pytree per trace and rebuilt
+the view in-graph every call.  The Snapshot is part of the table's stored
+pytree form; these tests pin the three properties that buys:
+
+1. a jitted lookup taking the table as a pytree argument performs ZERO
+   in-graph view rebuilds, across appends (construction-counter check);
+2. structurally equal tables (divergent same-shape appends) hit the same
+   compile-cache entry — no retrace;
+3. the same single-partition code runs unchanged over a stacked leading
+   shard axis under vmap (the repro.dist execution model).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Schema, append, create_index, joins
+from repro.core import snapshot as snap_mod
+
+SCH = Schema.of("k", k="int64", v="float32")
+
+
+def _cols(rng, n, key_range=50, tag=0):
+    return {"k": rng.integers(0, key_range, n).astype(np.int64),
+            "v": (rng.random(n) + tag).astype(np.float32)}
+
+
+def _delta(keys):
+    keys = np.asarray(keys, np.int64)
+    return {"k": keys, "v": np.ones(len(keys), np.float32)}
+
+
+@pytest.mark.parametrize("layout", ["row", "columnar"])
+def test_snapshot_pytree_roundtrip(rng, layout):
+    """Table (segments + snapshot) survives tree_flatten/unflatten with
+    fused results intact — the snapshot is data, not a host cache."""
+    t = create_index(_cols(rng, 300), SCH, rows_per_batch=64, layout=layout)
+    t = append(t, _delta([1, 2, 3])).with_flat_data()
+    q = np.concatenate([_cols(rng, 30)["k"], [10**9]]).astype(np.int64)
+
+    leaves, treedef = jax.tree_util.tree_flatten(t)
+    assert all(isinstance(a, jax.Array) for a in leaves)
+    t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert t2.snapshot.bucket_counts == t.snapshot.bucket_counts
+
+    c1, v1 = joins.indexed_lookup(t, q, max_matches=8)
+    c2, v2 = joins.indexed_lookup(t2, q, max_matches=8)
+    cr, vr = joins.indexed_lookup(t, q, max_matches=8, fused=False)
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(vr))
+    for name in c1:
+        np.testing.assert_array_equal(np.asarray(c2[name]),
+                                      np.asarray(cr[name]))
+
+
+@pytest.mark.parametrize("layout", ["row", "columnar"])
+def test_jit_table_arg_matches_ref(rng, layout):
+    """Full fused pipeline under jit with the table as a pytree argument,
+    against the segment-looped reference."""
+    t = create_index(_cols(rng, 400), SCH, rows_per_batch=64,
+                     layout=layout).with_flat_data()
+    t = append(t, _delta([5, 6, 7, 8]))
+    q = np.concatenate([_cols(rng, 40)["k"],
+                        [np.iinfo(np.int64).min, 10**9]]).astype(np.int64)
+
+    f = jax.jit(lambda tbl, qq: joins.indexed_lookup(tbl, qq,
+                                                     max_matches=6))
+    cols_j, valid_j = f(t, q)
+    cols_r, valid_r = joins.indexed_lookup(t, q, max_matches=6, fused=False)
+    np.testing.assert_array_equal(np.asarray(valid_j), np.asarray(valid_r))
+    for name in cols_j:
+        np.testing.assert_array_equal(np.asarray(cols_j[name]),
+                                      np.asarray(cols_r[name]))
+
+
+def test_jit_zero_ingraph_rebuilds_across_appends(rng):
+    """THE tracing-count regression (ISSUE 2 acceptance): a jitted lookup
+    taking the table as a pytree argument must perform zero in-graph
+    snapshot rebuilds — across MVCC appends.  Eager host-side construction
+    (create/append) bumps the counters; traces and jitted calls must not."""
+    t = create_index(_cols(rng, 300), SCH,
+                     rows_per_batch=64).with_flat_data()
+    versions = [t]
+    for i in range(3):
+        t = append(t, _delta([i, i + 10, i + 20]))
+        versions.append(t)
+    q = _cols(rng, 64)["k"]
+
+    f = jax.jit(lambda tbl, qq: joins.indexed_lookup(tbl, qq,
+                                                     max_matches=6))
+    for tv in versions:
+        blocks0 = snap_mod.BLOCK_BUILDS
+        data0 = snap_mod.DATA_BUILDS
+        cols_j, valid_j = f(tv, q)          # traces (new shapes) + runs
+        jax.block_until_ready(valid_j)
+        assert snap_mod.BLOCK_BUILDS == blocks0, \
+            "jitted lookup rebuilt probe blocks in-graph"
+        assert snap_mod.DATA_BUILDS == data0, \
+            "jitted lookup rebuilt flat data in-graph"
+        cols_r, valid_r = joins.indexed_lookup(tv, q, max_matches=6,
+                                               fused=False)
+        np.testing.assert_array_equal(np.asarray(valid_j),
+                                      np.asarray(valid_r))
+        for name in cols_j:
+            np.testing.assert_array_equal(np.asarray(cols_j[name]),
+                                          np.asarray(cols_r[name]))
+
+
+def test_compile_cache_structurally_equal_append_no_retrace(rng):
+    """Divergent same-shape appends produce structurally equal tables
+    (same treedef: same bucket counts, version, shapes) — the second call
+    must hit the first's compile-cache entry, not retrace."""
+    traces = {"n": 0}
+
+    @jax.jit
+    def f(tbl, qq):
+        traces["n"] += 1                    # bumps only while tracing
+        rows, _ = tbl.lookup(qq, 4)
+        return rows
+
+    t = create_index(_cols(rng, 300), SCH,
+                     rows_per_batch=64).with_flat_data()
+    q = _cols(rng, 32)["k"]
+
+    f(t, q)
+    assert traces["n"] == 1
+    f(t, q)
+    assert traces["n"] == 1                 # same table: cached
+
+    t2a = append(t, _delta([1, 2, 3, 4]))
+    t2b = append(t, _delta([30, 31, 32, 33]))  # divergent, same shapes
+    r_a = f(t2a, q)
+    assert traces["n"] == 2                 # new structure: one retrace
+    r_b = f(t2b, q)
+    assert traces["n"] == 2                 # structurally equal: cache hit
+    f(t2a, q)
+    assert traces["n"] == 2
+
+    np.testing.assert_array_equal(np.asarray(r_a),
+                                  np.asarray(t2a.lookup_ref(q, 4)[0]))
+    np.testing.assert_array_equal(np.asarray(r_b),
+                                  np.asarray(t2b.lookup_ref(q, 4)[0]))
+
+
+def test_lookup_cache_independent_of_flat_data(rng):
+    """Materializing flat data (gather path) must not retrace the lookup
+    cores: the probe path strips ``data`` before entering its jits."""
+    t = create_index(_cols(rng, 200), SCH, rows_per_batch=64)
+    from repro.kernels import ops
+    q = _cols(rng, 16)["k"]
+    r1, _ = ops.fused_lookup(q, t.snapshot, max_matches=4)
+    td = t.with_flat_data()
+    assert td.snapshot.data is not None
+    r2, _ = ops.fused_lookup(q, td.snapshot, max_matches=4)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    # the dispatcher's jitted core saw identical (data-stripped) pytrees
+    stripped = snap_mod.strip_data(td.snapshot)
+    assert stripped.data is None
+    assert jax.tree_util.tree_structure(stripped) == \
+        jax.tree_util.tree_structure(t.snapshot)
+
+
+def test_vmap_stacked_tables_match_per_table(rng):
+    """The dist execution model: stack two structurally equal tables along
+    a leading shard axis and vmap the unchanged lookup — per-shard results
+    must equal each table's own."""
+    t = create_index(_cols(rng, 300), SCH,
+                     rows_per_batch=64).with_flat_data()
+    ta = append(t, _delta([1, 2, 3]))
+    tb = append(t, _delta([40, 41, 42]))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), ta, tb)
+    q = _cols(rng, 48)["k"]
+
+    rows_s, trunc_s = jax.vmap(lambda tt: tt.lookup(q, 8))(stacked)
+    cols_s = jax.vmap(lambda tt: tt.gather_rows(
+        jnp.maximum(tt.lookup(q, 8)[0], 0)))(stacked)
+    for i, tv in enumerate((ta, tb)):
+        rr, tr = tv.lookup_ref(q, 8)
+        np.testing.assert_array_equal(np.asarray(rows_s[i]), np.asarray(rr))
+        np.testing.assert_array_equal(np.asarray(trunc_s[i]),
+                                      np.asarray(tr))
+        cr = tv.gather_rows_ref(jnp.maximum(rr, 0))
+        for name in cr:
+            np.testing.assert_array_equal(np.asarray(cols_s[name][i]),
+                                          np.asarray(cr[name]))
+
+
+def test_indexed_lookup_validation_errors(rng):
+    """Satellite: clear ValueError instead of opaque gather shape errors."""
+    t = create_index(_cols(rng, 100), SCH, rows_per_batch=64)
+    q = np.asarray([1, 2], np.int64)
+    with pytest.raises(ValueError, match="max_matches"):
+        joins.indexed_lookup(t, q, max_matches=0)
+    with pytest.raises(ValueError, match="max_matches"):
+        joins.indexed_lookup(t, q, max_matches=-3)
+    with pytest.raises(ValueError, match="int64"):
+        joins.indexed_lookup(t, q.astype(np.int32), max_matches=4)
+    with pytest.raises(ValueError, match="int64"):
+        joins.indexed_lookup(t, q.astype(np.float32), max_matches=4)
