@@ -13,8 +13,10 @@ import sys
 import time
 
 # Modules import lazily so one broken dependency cannot take down the whole
-# harness.  lookup_path and fault_tolerance additionally write the committed
-# artifacts BENCH_lookup.json / BENCH_dist.json at the repo root.
+# harness.  lookup_path, fault_tolerance, and scalability additionally write
+# the committed artifacts BENCH_lookup.json / BENCH_dist.json /
+# BENCH_scale.json at the repo root (scalability's mesh sweep forces an
+# 8-device host topology in a subprocess).
 MODULES = {
     "lookup_path": None,            # Fig 1 / §III-C hot path
     "join_scaling": None,           # Fig 7 + Table III
@@ -24,7 +26,7 @@ MODULES = {
     "memory_overhead": None,        # Fig 11
     "fault_tolerance": None,        # Fig 12
     "batch_size_sweep": None,       # Fig 5
-    "scalability": None,            # Fig 6
+    "scalability": None,            # Fig 6 (mesh sweep -> BENCH_scale.json)
     "tpcds_join": None,             # Fig 14
     "snb_queries": None,            # Fig 13
     "flights_queries": None,        # Fig 15

@@ -1,20 +1,43 @@
-"""Fig 6: horizontal (shards) and vertical (problem size) scalability of
-the distributed indexed join."""
+"""Fig 6: scalability of the distributed Indexed DataFrame.
+
+Three sweeps:
+
+* horizontal / vertical (vmap lanes, as before): fixed data over more
+  shards; fixed shards over more data.
+* **mesh sweep** (the Fig-6 shape): the shard_map backend on a real
+  multi-device host mesh (``XLA_FLAGS=
+  --xla_force_host_platform_device_count=8``), 1/2/4/8 devices, timing
+  the broadcast point lookup against ``lookup_routed`` at large Q.
+  Broadcast probes every query on every device (s×Q lanes); routing
+  probes each query once on its owner plus two all-to-alls (~2Q lanes at
+  the 2x-overprovisioned capacity) — the s× redundancy the ROADMAP
+  flags, measured.
+
+The mesh sweep needs the forced device count set *before* jax
+initializes, so it runs in a subprocess (``--mesh-worker``); the parent
+collects its JSON and lands everything in ``BENCH_scale.json`` at the
+repo root (the committed artifact) as well as the harness report.
+"""
+
+import json
+import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
 
 from repro.core import Schema
-from repro.dist import create_distributed, indexed_join_bcast
 from benchmarks.common import Report, powerlaw_keys, timeit
 
 SCH = Schema.of("k", k="int64", v="float32")
+MESH_DEVICES = (1, 2, 4, 8)
 
 
-def run(quick: bool = True):
-    rng = np.random.default_rng(7)
-    n = 30_000 if quick else 300_000
-    rep = Report("scalability")
+def _vmap_sweeps(rep, rng, n):
+    from repro.dist import create_distributed, indexed_join_bcast
+
+    sch = SCH
     cols = {"k": powerlaw_keys(rng, n, n // 8),
             "v": rng.random(n).astype(np.float32)}
     probe = rng.choice(cols["k"], 256).astype(np.int64)
@@ -23,7 +46,7 @@ def run(quick: bool = True):
     # horizontal: fixed data, more shards (vmap lanes on CPU)
     base = None
     for shards in (1, 2, 4, 8):
-        dt = create_distributed(cols, SCH, shards, rows_per_batch=2048)
+        dt = create_distributed(cols, sch, shards, rows_per_batch=2048)
         t = timeit(jfn, dt, probe, reps=3)["median_s"]
         base = base or t
         rep.add(f"horizontal shards={shards}", ms=t * 1e3,
@@ -34,11 +57,107 @@ def run(quick: bool = True):
         nn = n * mult
         cc = {"k": powerlaw_keys(rng, nn, nn // 8),
               "v": rng.random(nn).astype(np.float32)}
-        dt = create_distributed(cc, SCH, 4, rows_per_batch=2048)
+        dt = create_distributed(cc, sch, 4, rows_per_batch=2048)
         t = timeit(jfn, dt, probe, reps=3)["median_s"]
         rep.add(f"vertical n={nn}", ms=t * 1e3)
+
+
+def _mesh_worker(quick: bool):
+    """Runs inside the forced-8-device subprocess (XLA_FLAGS is set in
+    the child's env before python starts, so the module-level jax import
+    already sees 8 devices): shard_map backend, broadcast vs routed
+    point lookups per device count."""
+    from repro import dist
+    from repro.dist import mesh
+
+    assert len(jax.devices()) >= max(MESH_DEVICES), jax.devices()
+    sch = SCH
+    rng = np.random.default_rng(7)
+    n = 60_000 if quick else 400_000
+    total_q = 131_072 if quick else 262_144
+    max_matches = 8
+    cols = {"k": powerlaw_keys(rng, n, n // 8),
+            "v": rng.random(n).astype(np.float32)}
+    # point-lookup workload: the key universe queried uniformly (each
+    # distinct entity equally likely) — per-(src,dest) exchange lanes stay
+    # near their expected load, so the 2x capacity never drops and the
+    # broadcast/routed comparison is exact-vs-exact
+    uniq = np.unique(cols["k"])
+    q_flat = rng.choice(uniq, total_q).astype(np.int64)
+
+    rows = []
+    for d in MESH_DEVICES:
+        rt = mesh.mesh_runtime(d)
+        dt = dist.create_distributed(cols, sch, d, rows_per_batch=2048,
+                                     rt=rt)
+        per = total_q // d
+        q_sharded = q_flat[:per * d].reshape(d, per)
+        # 2x-overprovisioned exchange lanes: expected per-(src,dest) load
+        # is per/d; drops are counted and reported (retry contract)
+        cap = max(64, -(-2 * per // d))
+
+        jb = jax.jit(lambda t_, p_, _rt=rt: dist.lookup(
+            t_, p_, max_matches=max_matches, rt=_rt))
+        jr = jax.jit(lambda t_, p_, _rt=rt, _c=cap: dist.lookup_routed(
+            t_, p_, max_matches=max_matches, capacity=_c, rt=_rt))
+
+        tb = timeit(jb, dt, q_flat, reps=5)["median_s"]
+        tr = timeit(jr, dt, q_sharded, reps=5)["median_s"]
+        dropped = int(np.asarray(jr(dt, q_sharded)[3]).sum())
+        rows.append({"label": f"mesh devices={d}",
+                     "devices": d, "total_queries": total_q,
+                     "bcast_ms": tb * 1e3, "routed_ms": tr * 1e3,
+                     "routed_speedup": tb / tr,
+                     "routed_capacity": cap, "routed_dropped": dropped,
+                     "planner": dist.choose_lookup(dt, total_q)})
+    print("MESH_SWEEP_JSON " + json.dumps(rows), flush=True)
+
+
+def _mesh_sweep(rep, quick: bool):
+    """Spawn the forced-device subprocess and fold its rows in."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count="
+                          f"{max(MESH_DEVICES)}").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cmd = [sys.executable, "-m", "benchmarks.scalability", "--mesh-worker"]
+    if not quick:
+        cmd.append("--full")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=root, timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"mesh worker failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("MESH_SWEEP_JSON ")][-1]
+    rows = json.loads(line[len("MESH_SWEEP_JSON "):])
+    for r in rows:
+        rep.add(r["label"], bcast_ms=r["bcast_ms"],
+                routed_ms=r["routed_ms"],
+                routed_speedup=r["routed_speedup"],
+                routed_dropped=r["routed_dropped"])
+    return rows
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(7)
+    n = 30_000 if quick else 300_000
+    rep = Report("scalability")
+    _vmap_sweeps(rep, rng, n)
+    mesh_rows = _mesh_sweep(rep, quick)
+
+    out_path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                            "BENCH_scale.json"))
+    with open(out_path, "w") as f:
+        json.dump({"benchmark": "scalability", "quick": quick,
+                   "backend": jax.default_backend(),
+                   "mesh_sweep": mesh_rows,
+                   "rows": rep.to_dict()["rows"]}, f, indent=2)
     return rep.to_dict()
 
 
 if __name__ == "__main__":
-    run(quick=True)
+    if "--mesh-worker" in sys.argv:
+        _mesh_worker(quick="--full" not in sys.argv)
+    else:
+        run(quick="--full" not in sys.argv)

@@ -1,15 +1,23 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests, example smoke runs, and the two quick benchmarks
-# that back the committed artifacts (BENCH_lookup.json / BENCH_dist.json).
+# CI gate: tier-1 tests under BOTH device topologies, example smoke runs,
+# and the quick benchmarks that back the committed artifacts
+# (BENCH_lookup.json / BENCH_dist.json / BENCH_scale.json).
 #
-#   bash scripts/ci.sh            # full gate (~20 min on CPU)
+#   bash scripts/ci.sh            # full gate (~30 min on CPU)
 #   bash scripts/ci.sh --fast     # tests + examples only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-echo "== tier-1 pytest =="
+echo "== tier-1 pytest (single device) =="
 python -m pytest -q
+
+# Second pass on a forced 8-device host mesh: the shard_map backend's
+# parity suite (tests/test_mesh_parity.py) runs its full in-process
+# matrix here instead of skipping to the subprocess fallback.
+echo "== tier-1 pytest (forced 8-device host mesh) =="
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+  python -m pytest -q
 
 echo "== example smoke =="
 python scripts/smoke_examples.py
@@ -18,6 +26,7 @@ if [[ "${1:-}" != "--fast" ]]; then
   echo "== quick benchmarks =="
   python -m benchmarks.run --only lookup_path --out /tmp/ci_bench_lookup.json
   python -m benchmarks.run --only fault_tolerance --out /tmp/ci_bench_dist.json
+  python -m benchmarks.run --only scalability --out /tmp/ci_bench_scale.json
 fi
 
 echo "CI gate OK"

@@ -51,6 +51,24 @@ def partition_hash(keys, num_shards: int):
     return (h % np.uint64(num_shards)).astype(jnp.int32)
 
 
+def partition_hash_host(keys, num_shards: int) -> np.ndarray:
+    """Pure-numpy ``partition_hash`` — bit-identical to the device version.
+
+    The ingest router (dist/dtable._route_host) and any external
+    coordinator must place rows on exactly the shard the device-side
+    query routing will probe; a single disagreeing bit silently loses
+    rows.  This mirror keeps the host path off the device (no transfer
+    per routed batch) and tests/test_mesh_parity.py sweeps the agreement
+    over adversarial keys.
+    """
+    x = np.asarray(keys).astype(np.uint64) ^ _GOLDEN
+    with np.errstate(over="ignore"):
+        x = (x ^ (x >> np.uint64(30))) * _MIX1
+        x = (x ^ (x >> np.uint64(27))) * _MIX2
+        x = x ^ (x >> np.uint64(31))
+    return (x % np.uint64(num_shards)).astype(np.int32)
+
+
 def split64(x):
     """int64 array -> (hi, lo) int32 planes.
 

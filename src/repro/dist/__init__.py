@@ -1,28 +1,38 @@
 """repro.dist — the distributed Indexed DataFrame (paper §III-C/D).
 
 Layout:
+  mesh.py        the execution-backend seam: ``Runtime`` (vmap emulation
+                 vs shard_map over a real device mesh) + ``axis_map``,
+                 the one place the shard axis is mapped
   shuffle.py     capacity-bounded all-to-all over partition_hash (route
-                 local outboxes + the src<->dest transpose)
+                 local outboxes; src<->dest transpose oracle + the
+                 ``lax.all_to_all`` collective body)
   dtable.py      DistributedTable: shard-stacked IndexedTables (segments +
-                 Snapshots as ONE pytree), create/append/lookup/joins —
-                 the single-partition code vmapped over the shard axis
+                 Snapshots as ONE pytree), create/append/lookup/
+                 lookup_routed/joins — the single-partition code
+                 axis-mapped over the shard axis
   runtime.py     Lineage append replay, fail/rebuild shard, VersionVector
                  fencing, StragglerPolicy (paper Fig 12)
   checkpoint.py  save/restore pytree leaves + elastic reshard
 
-CPU CI runs every shard axis under jax.vmap; on a real mesh the same
-functions run under shard_map with the leading axis sharded over devices
-(the shuffle's transpose becomes one lax.all_to_all).
+Every op takes an optional ``rt`` (``mesh.Runtime``): the default vmap
+backend emulates the shard axis on one device; ``mesh.mesh_runtime(s)``
+runs the identical per-shard functions under ``shard_map`` on an
+s-device mesh, where the shuffle's transpose is a genuine
+``lax.all_to_all`` and the owner-select a cross-device ``lax.psum``.
+The two backends are bit-identical (tests/test_mesh_parity.py).
 """
 
-from repro.dist import checkpoint, runtime, shuffle
+from repro.dist import checkpoint, mesh, runtime, shuffle
 from repro.dist.dtable import (DistributedTable, append_distributed,
-                               choose_join, create_distributed,
-                               indexed_join_bcast, indexed_join_shuffle,
-                               lookup)
+                               choose_join, choose_lookup,
+                               create_distributed, indexed_join_bcast,
+                               indexed_join_shuffle, lookup, lookup_routed)
+from repro.dist.mesh import Runtime, mesh_runtime, vmap_runtime
 
 __all__ = [
-    "DistributedTable", "append_distributed", "checkpoint", "choose_join",
-    "create_distributed", "indexed_join_bcast", "indexed_join_shuffle",
-    "lookup", "runtime", "shuffle",
+    "DistributedTable", "Runtime", "append_distributed", "checkpoint",
+    "choose_join", "choose_lookup", "create_distributed",
+    "indexed_join_bcast", "indexed_join_shuffle", "lookup", "lookup_routed",
+    "mesh", "mesh_runtime", "runtime", "shuffle", "vmap_runtime",
 ]

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist import dtable as _dtable
+from repro.dist import mesh as _mesh
 
 _LEAVES = "leaves.npz"
 _META = "meta.json"
@@ -83,29 +84,34 @@ def restore_dtable(path: str,
     return dataclasses.replace(dt, table=table, version=meta["version"])
 
 
-def reshard_dtable(dt: _dtable.DistributedTable,
-                   num_shards: int) -> _dtable.DistributedTable:
+def reshard_dtable(dt: _dtable.DistributedTable, num_shards: int, *,
+                   rt: "_mesh.Runtime | None" = None,
+                   rt_out: "_mesh.Runtime | None" = None
+                   ) -> _dtable.DistributedTable:
     """Elastic scale up/down: collect valid rows, re-route, re-index.
 
     Preserves the dtable's global MVCC version; the resharded table is a
     single-segment compaction (per-key newest-first order survives because
     collection is order-preserving within each shard and a key's rows
-    never span shards).
+    never span shards).  ``rt`` maps the collection over ``dt``'s shard
+    axis; ``rt_out`` builds the new topology (they differ whenever the
+    shard count changes — a shard_map runtime is pinned to its mesh size).
     """
-    cols = _collect_cols(dt)
+    cols = _collect_cols(dt, rt=rt)
     fresh = _dtable.create_distributed(
         cols, dt.schema, num_shards, rows_per_batch=dt.rows_per_batch,
-        layout=dt.layout, slots=dt.slots)
+        layout=dt.layout, slots=dt.slots, rt=rt_out)
     return dataclasses.replace(fresh, version=dt.version)
 
 
-def _collect_cols(dt: _dtable.DistributedTable) -> dict:
+def _collect_cols(dt: _dtable.DistributedTable,
+                  rt: "_mesh.Runtime | None" = None) -> dict:
     """All valid rows as host columns (shard-major, append order within)."""
     out = {}
     mask = None
     for name in dt.schema.names:
-        vals, valid = jax.vmap(
-            lambda t, _n=name: t.scan_column(_n))(dt.table)
+        vals, valid = _mesh.axis_map(
+            lambda t, _n=name: t.scan_column(_n), rt)(dt.table)
         if mask is None:
             mask = np.asarray(valid).reshape(-1)
         out[name] = np.asarray(vals).reshape(-1)[mask]

@@ -41,7 +41,7 @@ from repro.core.hashindex import EMPTY_KEY
 from repro.core.pointers import NULL_PTR, PTR_DTYPE
 from repro.core.schema import Schema
 from repro.core.table import IndexedTable, make_segment_arrays, pad_to_batches
-from repro.dist import shuffle
+from repro.dist import mesh, shuffle
 
 
 @partial(jax.tree_util.register_dataclass, data_fields=["table"],
@@ -97,7 +97,9 @@ def _route_host(cols, schema: Schema, num_shards: int, rows_per_batch: int,
     n = keys.shape[0]
     v = (np.ones(n, bool) if valid is None
          else np.asarray(valid, bool).copy())
-    dest = np.asarray(hashing.partition_hash(jnp.asarray(keys), num_shards))
+    # Host mirror of the device hash (bit-identical by test): rows land on
+    # exactly the shard that query-time routing will probe.
+    dest = hashing.partition_hash_host(keys, num_shards)
     counts = np.bincount(dest[v], minlength=num_shards)
     cap = pad_to_batches(max(int(counts.max()), 1), rows_per_batch)
     out = {c.name: np.zeros((num_shards, cap), np.dtype(c.dtype))
@@ -115,19 +117,20 @@ def _route_host(cols, schema: Schema, num_shards: int, rows_per_batch: int,
 
 def _build_stacked_segment(shard_cols, shard_valid, heads, schema: Schema, *,
                            row_base: int, rows_per_batch: int, layout: str,
-                           slots: int, max_retries: int = 6):
-    """One vmapped segment build across shards, retrying until no shard's
-    bucket array overflows (all shards share one bucket count — the
-    stacked pytree needs uniform shapes)."""
+                           slots: int, rt: mesh.Runtime | None = None,
+                           max_retries: int = 6):
+    """One axis-mapped segment build across shards, retrying until no
+    shard's bucket array overflows (all shards share one bucket count —
+    the stacked pytree needs uniform shapes)."""
     cap = int(shard_valid.shape[1])
     nb = hix.suggest_num_buckets(cap, slots)
     for _ in range(max_retries):
-        seg, overflow = jax.vmap(
+        seg, overflow = mesh.axis_map(
             lambda c, v, h, _nb=nb: make_segment_arrays(
                 c, v, h, schema, row_base=row_base,
                 rows_per_batch=rows_per_batch, layout=layout,
-                num_buckets=_nb, slots=slots))(shard_cols, shard_valid,
-                                               heads)
+                num_buckets=_nb, slots=slots), rt)(shard_cols, shard_valid,
+                                                   heads)
         if int(jnp.max(overflow)) == 0:
             return seg
         nb *= 2
@@ -136,48 +139,52 @@ def _build_stacked_segment(shard_cols, shard_valid, heads, schema: Schema, *,
 
 def create_distributed(cols: dict, schema: Schema, num_shards: int, *,
                        rows_per_batch: int = 4096, layout: str = "row",
-                       slots: int = hix.DEFAULT_SLOTS,
-                       valid=None) -> DistributedTable:
+                       slots: int = hix.DEFAULT_SLOTS, valid=None,
+                       rt: mesh.Runtime | None = None) -> DistributedTable:
     """Paper Listing 1 ``createIndex`` at cluster scope: hash-partition the
-    dataframe, then build every shard's index in one vmapped pass.
+    dataframe, then build every shard's index in one axis-mapped pass
+    (vmap lanes or shard_map devices, per ``rt`` — dist/mesh.py).
 
     Shard snapshots are built **with flat data**: distributed queries take
     the dtable as a jit argument, so everything the fused pipeline needs
     (probe planes, prev, row data) must live in the stored pytree.
     """
+    rt = mesh.resolve(rt).check(num_shards)
     sc, sv, cap = _route_host(cols, schema, num_shards, rows_per_batch,
                               valid)
     heads = jnp.full((num_shards, cap), NULL_PTR, PTR_DTYPE)
     seg = _build_stacked_segment(sc, sv, heads, schema, row_base=0,
                                  rows_per_batch=rows_per_batch,
-                                 layout=layout, slots=slots)
-    snap = jax.vmap(lambda s: snap_mod.snapshot_from_segments(
-        (s,), layout, schema=schema, with_data=True))(seg)
+                                 layout=layout, slots=slots, rt=rt)
+    snap = mesh.axis_map(lambda s: snap_mod.snapshot_from_segments(
+        (s,), layout, schema=schema, with_data=True), rt)(seg)
     table = IndexedTable(segments=(seg,), snapshot=snap, schema=schema,
                          rows_per_batch=rows_per_batch, layout=layout,
                          version=0, slots=slots)
     return DistributedTable(table=table, num_shards=num_shards, version=0)
 
 
-def append_distributed(dt: DistributedTable, cols: dict,
-                       valid=None) -> DistributedTable:
+def append_distributed(dt: DistributedTable, cols: dict, valid=None,
+                       rt: mesh.Runtime | None = None) -> DistributedTable:
     """Functional distributed append -> new version (paper §III-D MVCC).
 
     Routes the delta to owning shards, probes each shard's parent for head
-    links, builds one delta segment per shard (vmapped), and extends each
-    shard's snapshot incrementally.  The parent dtable is untouched —
+    links, builds one delta segment per shard (axis-mapped), and extends
+    each shard's snapshot incrementally.  The parent dtable is untouched —
     divergent appends coexist, sharing every parent buffer by reference.
     """
+    rt = mesh.resolve(rt).check(dt.num_shards)
     schema, rpb = dt.schema, dt.rows_per_batch
     sc, sv, cap = _route_host(cols, schema, dt.num_shards, rpb, valid)
     keys = jnp.where(sv, jnp.asarray(sc[schema.key], jnp.int64), EMPTY_KEY)
-    heads = jax.vmap(lambda t, k: t.probe_latest_ref(k))(dt.table, keys)
+    heads = mesh.axis_map(lambda t, k: t.probe_latest_ref(k), rt)(dt.table,
+                                                                  keys)
     seg = _build_stacked_segment(sc, sv, heads, schema,
                                  row_base=dt.table.capacity,
                                  rows_per_batch=rpb, layout=dt.layout,
-                                 slots=dt.slots)
-    snap = jax.vmap(lambda sn, sg: snap_mod.extend_snapshot(
-        sn, sg, schema=schema))(dt.table.snapshot, seg)
+                                 slots=dt.slots, rt=rt)
+    snap = mesh.axis_map(lambda sn, sg: snap_mod.extend_snapshot(
+        sn, sg, schema=schema), rt)(dt.table.snapshot, seg)
     child = dataclasses.replace(dt.table,
                                 segments=dt.table.segments + (seg,),
                                 snapshot=snap,
@@ -187,34 +194,134 @@ def append_distributed(dt: DistributedTable, cols: dict,
 
 
 # ---------------------------------------------------------------------------
-# Distributed queries (vmapped single-partition ops + owner select)
+# Distributed queries (axis-mapped single-partition ops + collective select)
 # ---------------------------------------------------------------------------
 
-def lookup(dt: DistributedTable, keys, *, max_matches: int, names=None):
+def lookup(dt: DistributedTable, keys, *, max_matches: int, names=None,
+           rt: mesh.Runtime | None = None):
     """Distributed point lookup -> (cols [Q, M], valid [Q, M], owner [Q]).
 
-    Keys are routed by ``partition_hash``; every shard answers the full
-    query batch through its own Snapshot (the broadcast probe of
-    ``indexed_join_bcast``) and the owner shard's answer is selected per
-    query.  Rows for a key live only on its owner, so the select is exact.
+    The broadcast path: every shard answers the full query batch through
+    its own Snapshot (one axis-mapped per-shard function, identical under
+    both backends); the owner shard's answer is then selected per query by
+    indexing the stacked answers at ``[owner, iq]`` OUTSIDE the mapped
+    region.  Under vmap that is one local gather (bit-exact always);
+    under shard_map the stacked output is a device-sharded global array
+    and GSPMD lowers the cross-shard gather to collectives.  Rows for a
+    key live only on its owner, so the select is exact — with ONE
+    platform caveat: XLA lowers cross-device float combines (psum,
+    sharded gather, all_gather alike) as zero-padded sums, so a stored
+    float ``-0.0`` can come back ``+0.0`` from the shard_map broadcast
+    path (numerically equal; valid masks unaffected — DESIGN.md §10).
+    ``lookup_routed`` moves answers as word-packed ints over
+    ``all_to_all`` and IS bit-exact for every payload under both
+    backends — and is the better path at large Q anyway; compute here is
+    s× redundant (``choose_lookup`` picks).
     """
+    rt = mesh.resolve(rt).check(dt.num_shards)
     q = jnp.asarray(keys, jnp.int64)
     owner = hashing.partition_hash(q, dt.num_shards)
 
-    def shard(t):
-        rids, _ = t.lookup(q, max_matches)
+    def shard(t, qq):
+        rids, _ = t.lookup(qq, max_matches)
         valid = rids != NULL_PTR
-        cols = t.gather_rows(jnp.maximum(rids, 0), names=names)
+        # NULL rids decode to exact zeros — miss lanes carry no garbage
+        cols = t.gather_rows(jnp.where(valid, rids, NULL_PTR), names=names)
         return cols, valid
 
-    cols_s, valid_s = jax.vmap(shard)(dt.table)       # [s, Q, M] leaves
+    cols_s, valid_s = mesh.axis_map(shard, rt, in_axes=(0, None))(
+        dt.table, q)
     iq = jnp.arange(q.shape[0])
-    cols = {k: v[owner, iq] for k, v in cols_s.items()}
-    return cols, valid_s[owner, iq], owner
+    return ({k: v[owner, iq] for k, v in cols_s.items()},
+            valid_s[owner, iq], owner)
+
+
+def lookup_routed(dt: DistributedTable, keys, valid=None, *,
+                  max_matches: int, capacity: int | None = None, names=None,
+                  rt: mesh.Runtime | None = None):
+    """Shuffle-routed point lookup: probe each query ONCE, on its owner.
+
+    keys arrive sharded [s, n] (each shard's local query batch).  Queries
+    ride the capacity-bounded exchange to their owning shard
+    (``route_local`` + ``lax.all_to_all``, exactly like
+    ``indexed_join_shuffle``'s probe side), the owner probes its Snapshot
+    over the inbox, and the answers ride the inverse all-to-all home —
+    chunk ``d`` of a source's outbox comes back as chunk ``d`` of its
+    answer inbox, so the return trip needs no extra addressing beyond the
+    locally-kept lane ids.
+
+    Returns ``(cols [s, n, M], valid [s, n, M], answered [s, n],
+    dropped [s])``.  ``answered[i, j]`` is False when query (i, j) was
+    invalid on input OR overflowed its exchange lane; overflow is also
+    counted in ``dropped[i]`` — the retry contract (resubmit with a
+    bigger ``capacity``; the default ``n`` can never drop).  A dropped
+    query is *reported*, never a silent miss; inbox padding probes the
+    EMPTY sentinel, never key 0.
+
+    Cost: each shard probes s*capacity inbox lanes instead of the full
+    broadcast batch — with capacity ~ 2n/s that is ~2Q total probes
+    versus broadcast's sQ (the s× redundancy the ROADMAP flags).
+    """
+    rt = mesh.resolve(rt).check(dt.num_shards)
+    s = dt.num_shards
+    q = jnp.asarray(keys, jnp.int64)
+    assert q.ndim == 2 and q.shape[0] == s, (q.shape, s)
+    n = q.shape[1]
+    cap = capacity if capacity is not None else n
+    qv = (jnp.ones((s, n), bool) if valid is None
+          else jnp.asarray(valid, bool))
+
+    def shard(t, k, v):
+        lane = jnp.arange(n, dtype=jnp.int32)
+        ok, op, ov, dropped = shuffle.route_local(k, {"lane": lane}, v, s,
+                                                  cap)
+        # forward exchange, ONE collective: validity rides the key plane —
+        # empty outbox slots carry the EMPTY sentinel, which the probe
+        # side already treats as can-never-match (EMPTY_KEY is reserved;
+        # a user query for it is a guaranteed miss on any path).  The
+        # outbox lane ids stay local for the answer scatter.
+        in_k = shuffle.all_to_all_axis(jnp.where(ov, ok, EMPTY_KEY),
+                                       rt.axis)               # [s*cap]
+        in_v = in_k != EMPTY_KEY
+        rids, _ = t.lookup(in_k, max_matches)
+        hit = (rids != NULL_PTR) & in_v[:, None]
+        cols = t.gather_rows(jnp.where(hit, rids, NULL_PTR), names=names)
+        # return exchange, ONE collective: the all-to-all is its own
+        # inverse here — chunk d of the word-packed answer matrix is this
+        # shard's reply to source d, arriving back in outbox lane order.
+        # The words stay packed through the per-query scatter (scatter
+        # cost on CPU is per-INDEX, so one [s*cap -> n] row scatter beats
+        # one per answer leaf) and unpack at per-query size; unanswered
+        # lanes keep all-zero words, which unpack to exactly the
+        # zeros/False fill the contract promises.
+        packed, spec = shuffle.pack_words((cols, hit))
+        home = shuffle.all_to_all_axis(
+            packed.reshape(s, cap, packed.shape[1]), rt.axis)
+        slot = jnp.where(ov, op["lane"], jnp.int32(n)).reshape(-1)
+        per_query = (jnp.zeros((n, home.shape[1]), home.dtype)
+                     .at[slot].set(home, mode="drop"))
+        out_cols, out_valid = shuffle.unpack_words(per_query, spec)
+        answered = (jnp.zeros((n,), bool)
+                    .at[slot].set(ov.reshape(-1), mode="drop"))
+        return out_cols, out_valid, answered, dropped
+
+    return mesh.axis_map(shard, rt)(dt.table, q, qv)
+
+
+def choose_lookup(dt, total_queries: int, *,
+                  routed_threshold: int = 4096) -> str:
+    """Planner rule for point lookups: broadcast probes every query on
+    every shard (s×Q lanes — fine while Q is small and the exchange
+    latency dominates); routing probes each query once plus two
+    all-to-alls (~2Q lanes at capacity ~2n/s).  Route at volume."""
+    s = getattr(dt, "num_shards", 1)
+    return ("routed" if s > 1 and total_queries >= routed_threshold
+            else "bcast")
 
 
 def indexed_join_bcast(dt: DistributedTable, probe_cols: dict,
-                       probe_key: str, max_matches: int, *, names=None):
+                       probe_key: str, max_matches: int, *, names=None,
+                       rt: mesh.Runtime | None = None):
     """Broadcast equi-join: ship the (small) probe side to every shard.
 
     Returns (build_cols [Q, M], probe_cols broadcast [Q, M], valid [Q, M])
@@ -222,7 +329,7 @@ def indexed_join_bcast(dt: DistributedTable, probe_cols: dict,
     """
     q = jnp.asarray(probe_cols[probe_key], jnp.int64)
     build_cols, valid, _ = lookup(dt, q, max_matches=max_matches,
-                                  names=names)
+                                  names=names, rt=rt)
     m = valid.shape[1]
     probe_b = {k: jnp.broadcast_to(jnp.asarray(v)[:, None],
                                    (q.shape[0], m))
@@ -232,33 +339,37 @@ def indexed_join_bcast(dt: DistributedTable, probe_cols: dict,
 
 def indexed_join_shuffle(dt: DistributedTable, probe_cols: dict,
                          probe_key: str, probe_valid, max_matches: int, *,
-                         capacity: int | None = None, names=None):
+                         capacity: int | None = None, names=None,
+                         rt: mesh.Runtime | None = None):
     """Shuffle equi-join: the (large) probe side arrives sharded [s, n];
-    probe rows are shuffled to the shard owning their key
-    (``dist.shuffle``), then joined locally — results stay sharded.
+    probe rows ride the all-to-all to the shard owning their key
+    (``shuffle.shuffle_global_axis``), then join locally — results stay
+    sharded on their owner.
 
     Returns (build_cols [s, s*cap, M], probe_cols [s, s*cap, M],
     valid [s, s*cap, M], dropped [s]).  ``capacity`` bounds each
     (src, dest) exchange lane; the default ``n`` can never drop.
     """
+    rt = mesh.resolve(rt).check(dt.num_shards)
     s = dt.num_shards
     keys = jnp.asarray(probe_cols[probe_key], jnp.int64)
     assert keys.shape[0] == s, (keys.shape, s)
     cap = capacity if capacity is not None else keys.shape[1]
     payload = {k: jnp.asarray(v) for k, v in probe_cols.items()}
-    rk, rp, rv, dropped = shuffle.shuffle_global(
-        keys, payload, jnp.asarray(probe_valid, bool), s, cap)
 
-    def local(t, k, v):
-        rids, _ = t.lookup(k, max_matches)
-        valid = (rids != NULL_PTR) & v[:, None]
-        cols = t.gather_rows(jnp.maximum(rids, 0), names=names)
-        return cols, valid
+    def local(t, k, p, v):
+        rk, rp, rv, dropped = shuffle.shuffle_global_axis(
+            k, p, v, s, cap, rt.axis)
+        rids, _ = t.lookup(jnp.where(rv, rk, EMPTY_KEY), max_matches)
+        valid = (rids != NULL_PTR) & rv[:, None]
+        cols = t.gather_rows(jnp.where(valid, rids, NULL_PTR), names=names)
+        probe_b = {kk: jnp.broadcast_to(vv[..., None],
+                                        vv.shape + (max_matches,))
+                   for kk, vv in rp.items()}
+        return cols, probe_b, valid, dropped
 
-    build_cols, valid = jax.vmap(local)(dt.table, rk, rv)
-    probe_b = {k: jnp.broadcast_to(v[..., None], v.shape + (max_matches,))
-               for k, v in rp.items()}
-    return build_cols, probe_b, valid, dropped
+    return mesh.axis_map(local, rt)(dt.table, keys, payload,
+                                    jnp.asarray(probe_valid, bool))
 
 
 def choose_join(dt, probe_rows: int, *,

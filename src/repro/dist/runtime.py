@@ -33,6 +33,7 @@ from repro.core.hashindex import EMPTY_KEY
 from repro.core.pointers import NULL_PTR
 from repro.core.schema import Schema
 from repro.dist import dtable as _dtable
+from repro.dist import mesh as _mesh
 
 
 class Lineage:
@@ -58,13 +59,18 @@ class Lineage:
         self.deltas.append({k: np.array(v, copy=True)
                             for k, v in delta_cols.items()})
 
-    def replay(self, num_shards: int) -> _dtable.DistributedTable:
+    def replay(self, num_shards: int,
+               rt: "_mesh.Runtime | None" = None
+               ) -> _dtable.DistributedTable:
+        """Re-run the construction pipeline — on whichever execution
+        backend the live system uses (lineage is backend-agnostic: the
+        two are bit-identical, tests/test_mesh_parity.py)."""
         dt = _dtable.create_distributed(
             self.base, self.schema, num_shards,
             rows_per_batch=self.rows_per_batch, layout=self.layout,
-            slots=self.slots)
+            slots=self.slots, rt=rt)
         for delta in self.deltas:
-            dt = _dtable.append_distributed(dt, delta)
+            dt = _dtable.append_distributed(dt, delta, rt=rt)
         return dt
 
 
@@ -110,7 +116,9 @@ def fail_shard(dt: _dtable.DistributedTable,
 
 
 def rebuild_shard(dt: _dtable.DistributedTable, shard: int,
-                  lineage: Lineage) -> _dtable.DistributedTable:
+                  lineage: Lineage,
+                  rt: "_mesh.Runtime | None" = None
+                  ) -> _dtable.DistributedTable:
     """Lineage recovery (paper Fig 12): rebuild one shard and splice it in.
 
     CI-scale replays the whole pipeline and takes the shard's slice —
@@ -118,7 +126,7 @@ def rebuild_shard(dt: _dtable.DistributedTable, shard: int,
     only the lost partition's rows.  Raises if the lineage's version
     disagrees with the live dtable (missed ``record_append``).
     """
-    fresh = lineage.replay(dt.num_shards)
+    fresh = lineage.replay(dt.num_shards, rt=rt)
     if fresh.version != dt.version:
         raise ValueError(
             f"lineage replays to version {fresh.version} but the dtable is "

@@ -31,6 +31,15 @@ from repro.core import hashing
 from repro.core.hashindex import _segment_rank
 
 
+# Below this shard count the per-destination rank comes from a one-hot
+# cumsum (O(n*s) adds, no sort); above it from a stable argsort
+# (O(n log^2 n) — XLA's CPU sort is ~1us/element, which dominated the
+# routed-lookup profile at CI sizes).  Both produce the same rank — a
+# stable sort preserves input order within a destination, and so does the
+# running count — so the outboxes are bit-identical either way.
+RANK_ONEHOT_MAX_SHARDS = 64
+
+
 def route_local(keys, rows, valid, num_shards: int, capacity: int):
     """Route [n] rows into ``num_shards`` capacity-bounded outboxes.
 
@@ -39,17 +48,27 @@ def route_local(keys, rows, valid, num_shards: int, capacity: int):
     valid    : [n] bool — invalid lanes are never routed
     Returns ``(keys [s, cap], rows [s, cap, ...], valid [s, cap],
     dropped)`` where ``dropped`` counts valid rows that overflowed their
-    destination's capacity (0 means the exchange was exact).
+    destination's capacity (0 means the exchange was exact).  Capacity
+    keeps the FIRST ``capacity`` rows per destination in input order.
     """
     keys = jnp.asarray(keys, jnp.int64)
     valid = jnp.asarray(valid, bool)
-    # invalid lanes sort to a virtual shard num_shards and are dropped
+    # invalid lanes route to a virtual shard num_shards and are dropped
     dest = jnp.where(valid, hashing.partition_hash(keys, num_shards),
                      jnp.int32(num_shards))
-    order = jnp.argsort(dest, stable=True)
-    d_s = dest[order]
-    v_s = valid[order]
-    rank = _segment_rank(d_s)                 # slot within the destination
+    if num_shards <= RANK_ONEHOT_MAX_SHARDS:
+        order = None                          # rank in input order, no sort
+        oh = dest[:, None] == jnp.arange(num_shards, dtype=jnp.int32)
+        counts = jnp.cumsum(oh.astype(jnp.int32), axis=0)
+        rank = jnp.take_along_axis(
+            counts, jnp.minimum(dest, num_shards - 1)[:, None], axis=1
+        )[:, 0] - 1
+        d_s, v_s = dest, valid
+    else:
+        order = jnp.argsort(dest, stable=True)
+        d_s = dest[order]
+        v_s = valid[order]
+        rank = _segment_rank(d_s)             # slot within the destination
     routed = v_s & (d_s < num_shards)
     ok = routed & (rank < capacity)
     dropped = jnp.sum(routed & (rank >= capacity))
@@ -59,7 +78,8 @@ def route_local(keys, rows, valid, num_shards: int, capacity: int):
     def scatter(a):
         a = jnp.asarray(a)
         out = jnp.zeros((num_shards * capacity,) + a.shape[1:], a.dtype)
-        out = out.at[flat].set(a[order], mode="drop")
+        out = out.at[flat].set(a if order is None else a[order],
+                               mode="drop")
         return out.reshape((num_shards, capacity) + a.shape[1:])
 
     out_keys = scatter(keys)
@@ -77,8 +97,11 @@ def shuffle_global(keys, rows, valid, num_shards: int, capacity: int):
     Returns ``(keys [s, s*cap], rows [s, s*cap, ...], valid [s, s*cap],
     dropped [s])`` — destination-major; ``dropped[i]`` is source shard i's
     overflow count.  ``capacity`` bounds each (src, dest) lane; capacity =
-    n can never drop.  The src<->dest transpose is the all-to-all (one
-    ``lax.all_to_all`` under shard_map on a real mesh).
+    n can never drop.  The src<->dest transpose here is the single-device
+    *oracle* for the exchange; the mesh-native path (``shuffle_global_axis``
+    under ``dist.mesh.axis_map``) moves the same outboxes with one
+    ``lax.all_to_all`` over the shard axis, and a dedicated test asserts
+    the two produce identical inboxes.
     """
     route = jax.vmap(
         lambda k, r, v: route_local(k, r, v, num_shards, capacity))
@@ -90,3 +113,99 @@ def shuffle_global(keys, rows, valid, num_shards: int, capacity: int):
 
     return (all_to_all(lk), jax.tree.map(all_to_all, lr), all_to_all(lv),
             dropped)
+
+
+def pack_words(tree):
+    """Pytree of [n, ...] leaves -> ([n, W] int32 words, static spec).
+
+    One exchange beats many: every ``lax.all_to_all`` pays a launch +
+    synchronization cost per call (painful on emulated CPU meshes,
+    non-trivial on real interconnects), so the exchange payload is packed
+    into a single int32 word matrix — 8-byte dtypes bitcast to two word
+    planes, 4-byte dtypes to one, bools widened — sent in ONE collective,
+    and unpacked bit-exactly on the other side.  ``spec`` is static
+    (treedef + per-leaf dtype/shape/width): it never rides the wire.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    cols, spec = [], []
+    for a in leaves:
+        a = jnp.asarray(a)
+        n, tail = a.shape[0], a.shape[1:]
+        flat = a.reshape(n, -1)
+        if a.dtype == jnp.bool_:
+            w = flat.astype(jnp.int32)
+        elif a.dtype.itemsize == 8:
+            w = jax.lax.bitcast_convert_type(flat, jnp.int32).reshape(n, -1)
+        elif a.dtype.itemsize == 4:
+            w = jax.lax.bitcast_convert_type(flat, jnp.int32)
+        elif a.dtype.itemsize == 2:
+            # bitcast, not astype: float16/bfloat16 values must round-trip
+            # bit-exactly (astype would silently truncate 3.7 -> 3)
+            w = (jax.lax.bitcast_convert_type(flat, jnp.int16)
+                 .astype(jnp.int32))
+        elif jnp.issubdtype(a.dtype, jnp.integer):   # 1-byte ints
+            w = flat.astype(jnp.int32)
+        else:
+            raise TypeError(f"pack_words: unsupported payload dtype "
+                            f"{a.dtype}")
+        cols.append(w)
+        spec.append((a.dtype, tail, w.shape[1]))
+    return jnp.concatenate(cols, axis=1), (treedef, tuple(spec))
+
+
+def unpack_words(packed, spec):
+    """Inverse of ``pack_words``: [n, W] int32 -> the original pytree."""
+    treedef, leaf_specs = spec
+    n = packed.shape[0]
+    leaves, off = [], 0
+    for dtype, tail, width in leaf_specs:
+        w = packed[:, off:off + width]
+        off += width
+        if dtype == jnp.bool_:
+            a = w != 0
+        elif dtype.itemsize == 8:
+            a = jax.lax.bitcast_convert_type(w.reshape(n, -1, 2), dtype)
+        elif dtype.itemsize == 4:
+            a = jax.lax.bitcast_convert_type(w, dtype)
+        elif dtype.itemsize == 2:
+            a = jax.lax.bitcast_convert_type(w.astype(jnp.int16), dtype)
+        else:
+            a = w.astype(dtype)
+        leaves.append(a.reshape((n,) + tail))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def all_to_all_axis(x, axis_name: str):
+    """Per-shard outbox [s, cap, ...] -> per-shard inbox [s*cap, ...].
+
+    One ``lax.all_to_all`` over the named shard axis: chunk ``d`` of this
+    shard's outbox is delivered to shard ``d``; the received chunks stack
+    src-major, matching ``shuffle_global``'s ``[dest, src*cap]`` layout
+    exactly.  Runs under either backend (vmap has an all_to_all batching
+    rule; shard_map lowers it to the real collective).
+    """
+    x = jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
+    return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+
+def shuffle_global_axis(keys, rows, valid, num_shards: int, capacity: int,
+                        axis_name: str):
+    """Per-shard body of the exchange, for use under ``mesh.axis_map``.
+
+    keys/valid : [n] (this shard's slice); rows: [n, ...] pytree.
+    Returns ``(keys [s*cap], rows [s*cap, ...], valid [s*cap], dropped)``
+    — this shard's inbox, src-major, plus its own overflow count.  Mapped
+    over the shard axis this computes exactly ``shuffle_global``; the
+    transpose is now a genuine ``lax.all_to_all``, and the whole payload
+    (keys + every row leaf + validity) rides ONE collective, word-packed.
+    """
+    lk, lr, lv, dropped = route_local(keys, rows, valid, num_shards,
+                                      capacity)
+    flat = jax.tree.map(
+        lambda a: a.reshape((num_shards * capacity,) + a.shape[2:]),
+        (lk, lr, lv))
+    packed, spec = pack_words(flat)
+    inbox = all_to_all_axis(
+        packed.reshape(num_shards, capacity, packed.shape[1]), axis_name)
+    ik, ir, iv = unpack_words(inbox, spec)
+    return ik, ir, iv, dropped

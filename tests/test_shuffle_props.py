@@ -1,0 +1,234 @@
+"""Property-based shuffle tests (ISSUE 3 satellite).
+
+The exchange's whole correctness story is three invariants, asserted here
+over randomized shard counts, capacities, and pytree payload shapes
+(hypothesis, or the deterministic ``repro.testing`` shim in hermetic
+containers — conftest installs it):
+
+1. **Conservation** — every valid row is delivered exactly once or
+   counted in ``dropped``; nothing is silently lost, nothing duplicated.
+2. **Destination correctness** — a delivered row sits in the outbox/inbox
+   of exactly ``partition_hash(key)``.
+3. **capacity = n never drops** — the exact-exchange configuration the
+   join/lookup defaults rely on.
+
+Payloads are pytrees: every leaf must ride the same permutation as the
+keys (a misaligned leaf silently joins the wrong rows).  The transpose
+oracle vs ``lax.all_to_all`` equivalence is asserted here on the vmap
+backend (single-device safe); tests/test_mesh_parity.py repeats it under
+shard_map on a real mesh.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+pytest.importorskip("repro.dist")
+
+from repro.core import hashing
+from repro.dist import mesh
+from repro.dist import shuffle as shf
+
+
+def _payload(keys, lanes):
+    """A pytree payload whose every leaf is derived from (key, lane), so
+    alignment after routing is checkable leaf by leaf.  ``half`` guards
+    the packed exchange's sub-4-byte handling (bitcast, never a value
+    cast)."""
+    return {"lane": lanes.astype(np.int32),
+            "wide": np.stack([keys.astype(np.float64),
+                              lanes.astype(np.float64)], axis=-1),
+            "half": (np.abs(keys) % 97).astype(np.float16),
+            "nested": {"neg": (-keys).astype(np.int64)}}
+
+
+def _check_outbox(keys, valid, lk, lp, lv, dropped, num_shards, capacity):
+    """Invariants 1-3 for one source's outboxes [s, cap]."""
+    keys = np.asarray(keys)
+    valid = np.asarray(valid)
+    lk, lv = np.asarray(lk), np.asarray(lv)
+    lanes = np.asarray(lp["lane"])
+    dest = hashing.partition_hash_host(keys, num_shards)
+
+    delivered = int(lv.sum())
+    assert delivered + int(dropped) == int(valid.sum())
+
+    for d in range(num_shards):
+        got_lanes = np.sort(lanes[d][lv[d]])
+        want = np.flatnonzero(valid & (dest == d))
+        if capacity >= want.size:
+            np.testing.assert_array_equal(got_lanes, want)
+        else:
+            # capacity-bounded: a subset, each source lane at most once
+            assert got_lanes.size == capacity
+            assert np.isin(got_lanes, want).all()
+            assert np.unique(got_lanes).size == got_lanes.size
+        # destination correctness + payload alignment for every leaf
+        np.testing.assert_array_equal(lk[d][lv[d]],
+                                      keys[lanes[d][lv[d]]])
+        np.testing.assert_array_equal(
+            np.asarray(lp["nested"]["neg"])[d][lv[d]],
+            -keys[lanes[d][lv[d]]])
+        np.testing.assert_array_equal(
+            np.asarray(lp["half"])[d][lv[d]],
+            (np.abs(keys) % 97).astype(np.float16)[lanes[d][lv[d]]])
+        np.testing.assert_array_equal(
+            np.asarray(lp["wide"])[d][lv[d]],
+            np.stack([keys[lanes[d][lv[d]]].astype(np.float64),
+                      lanes[d][lv[d]].astype(np.float64)], axis=-1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=24),
+       st.lists(st.integers(min_value=-2**63, max_value=2**63 - 1),
+                min_size=1, max_size=48),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_route_local_properties(num_shards, capacity, key_list, seed):
+    keys = np.asarray(key_list, np.int64)
+    n = keys.shape[0]
+    rng = np.random.default_rng(seed)
+    valid = rng.random(n) < 0.85
+    lanes = np.arange(n)
+    lk, lp, lv, dropped = shf.route_local(
+        jnp.asarray(keys), _payload(keys, lanes), jnp.asarray(valid),
+        num_shards, capacity)
+    _check_outbox(keys, valid, lk, lp, lv, int(dropped), num_shards,
+                  capacity)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=48),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_route_local_capacity_n_never_drops(n, seed):
+    rng = np.random.default_rng(seed)
+    for num_shards in (1, 3, 8):
+        keys = rng.integers(-2**62, 2**62, n).astype(np.int64)
+        valid = rng.random(n) < 0.9
+        _, _, lv, dropped = shf.route_local(
+            jnp.asarray(keys), _payload(keys, np.arange(n)),
+            jnp.asarray(valid), num_shards, n)
+        assert int(dropped) == 0
+        assert int(np.asarray(lv).sum()) == int(valid.sum())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=16),
+       st.integers(min_value=1, max_value=24),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_shuffle_global_properties(num_shards, n, capacity, seed):
+    """The full exchange: per-source conservation, destination-correct
+    inboxes, payload alignment — and the all_to_all path bit-identical to
+    the transpose oracle on the same inputs."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(-2**62, 2**62, (num_shards, n)).astype(np.int64)
+    valid = rng.random((num_shards, n)) < 0.85
+    lanes = np.broadcast_to(np.arange(n), (num_shards, n))
+    payload = _payload(keys.reshape(-1), lanes.reshape(-1))
+    payload = jax.tree.map(
+        lambda a: a.reshape((num_shards, n) + a.shape[1:]), payload)
+
+    rk, rp, rv, dropped = shf.shuffle_global(
+        jnp.asarray(keys), payload, jnp.asarray(valid), num_shards,
+        capacity)
+    rk, rv = np.asarray(rk), np.asarray(rv)
+    dropped = np.asarray(dropped)
+
+    # conservation per source shard
+    src_of_lane = np.repeat(np.arange(num_shards), capacity)
+    for i in range(num_shards):
+        from_i = int(rv[:, src_of_lane == i].sum())
+        assert from_i + int(dropped[i]) == int(valid[i].sum())
+    if capacity >= n:
+        assert int(dropped.sum()) == 0
+
+    # destination correctness + alignment: inbox d holds only keys owned
+    # by d, and every delivered leaf matches its source (src, lane) row
+    neg = np.asarray(rp["nested"]["neg"])
+    lane_ids = np.asarray(rp["lane"])
+    for d in range(num_shards):
+        m = rv[d]
+        if not m.any():
+            continue
+        np.testing.assert_array_equal(
+            hashing.partition_hash_host(rk[d][m], num_shards), d)
+        src = src_of_lane[m]
+        np.testing.assert_array_equal(rk[d][m],
+                                      keys[src, lane_ids[d][m]])
+        np.testing.assert_array_equal(neg[d][m], -rk[d][m])
+
+    # oracle equivalence: the mesh-native all_to_all body, vmap backend
+    rt = mesh.vmap_runtime()
+    got = mesh.axis_map(
+        lambda k, r, v: shf.shuffle_global_axis(k, r, v, num_shards,
+                                                capacity, rt.axis), rt)(
+        jnp.asarray(keys), payload, jnp.asarray(valid))
+    for a, b in zip(jax.tree_util.tree_leaves((rk, rp, rv, dropped)),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_words_roundtrip_is_bit_exact(rng):
+    """Every supported dtype survives pack -> unpack bit-for-bit,
+    including -0.0, NaN payloads, and 2-byte floats (which must bitcast,
+    never value-cast)."""
+    n = 64
+    f32 = rng.standard_normal(n).astype(np.float32)
+    f32[:3] = [-0.0, np.nan, np.inf]
+    f16 = rng.standard_normal((n, 2)).astype(np.float16)
+    f16[0, 0] = -0.0
+    tree = {"i64": rng.integers(-2**62, 2**62, n),
+            "f32": f32, "f16": f16,
+            "bf16": jnp.asarray(f32, jnp.bfloat16),
+            "i16": rng.integers(-2**15, 2**15, (n, 3)).astype(np.int16),
+            "u8": rng.integers(0, 255, n).astype(np.uint8),
+            "b": rng.random(n) < 0.5}
+    packed, spec = shf.pack_words(tree)
+    assert packed.dtype == jnp.int32
+    out = shf.unpack_words(packed, spec)
+    for k in tree:
+        a, b = jnp.asarray(tree[k]), out[k]
+        assert a.dtype == b.dtype and a.shape == b.shape, k
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            itype = {2: jnp.int16, 4: jnp.int32}[a.dtype.itemsize]
+            a = jax.lax.bitcast_convert_type(a, itype)
+            b = jax.lax.bitcast_convert_type(b, itype)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), k)
+    if hasattr(jnp, "float8_e4m3fn"):
+        with pytest.raises(TypeError, match="unsupported"):
+            shf.pack_words({"e": jnp.zeros(4, jnp.float8_e4m3fn)})
+
+
+def test_rank_paths_bit_identical(rng, monkeypatch):
+    """route_local has two per-destination rank computations (one-hot
+    cumsum below RANK_ONEHOT_MAX_SHARDS, stable argsort above) — same
+    outboxes bit for bit, on the same inputs."""
+    n = 200
+    keys = rng.integers(-2**62, 2**62, n).astype(np.int64)
+    valid = rng.random(n) < 0.8
+    payload = _payload(keys, np.arange(n))
+    for num_shards, capacity in ((1, 7), (4, 11), (8, 200), (96, 2)):
+        monkeypatch.setattr(shf, "RANK_ONEHOT_MAX_SHARDS", 128)  # cumsum
+        a = shf.route_local(jnp.asarray(keys), payload, jnp.asarray(valid),
+                            num_shards, capacity)
+        monkeypatch.setattr(shf, "RANK_ONEHOT_MAX_SHARDS", 0)    # argsort
+        b = shf.route_local(jnp.asarray(keys), payload, jnp.asarray(valid),
+                            num_shards, capacity)
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_all_to_all_axis_matches_transpose(rng):
+    """The raw collective: outbox [s, cap, ...] per shard -> src-major
+    inbox, for every shard count a CI host can emulate."""
+    for s in (1, 2, 4, 8):
+        x = rng.integers(0, 10**9, (s, s, 5, 3)).astype(np.int64)
+        ref = jnp.swapaxes(jnp.asarray(x), 0, 1).reshape(s, s * 5, 3)
+        got = jax.vmap(lambda b: shf.all_to_all_axis(b, "shards"),
+                       axis_name="shards")(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
