@@ -16,14 +16,16 @@ import time
 # harness.  lookup_path, fault_tolerance, and scalability additionally write
 # the committed artifacts BENCH_lookup.json / BENCH_dist.json /
 # BENCH_scale.json at the repo root (scalability's mesh sweep forces an
-# 8-device host topology in a subprocess).
+# 8-device host topology in a subprocess); append_read_latency and
+# write_throughput share BENCH_append.json (Fig 9 + Fig 10, the arena
+# write path before/after — DESIGN.md §4).
 MODULES = {
     "lookup_path": None,            # Fig 1 / §III-C hot path
     "join_scaling": None,           # Fig 7 + Table III
     "operators": None,              # Fig 8
-    "append_read_latency": None,    # Fig 9
-    "write_throughput": None,       # Fig 10
-    "memory_overhead": None,        # Fig 11
+    "append_read_latency": None,    # Fig 9 (-> BENCH_append.json)
+    "write_throughput": None,       # Fig 10 (-> BENCH_append.json)
+    "memory_overhead": None,        # Fig 11 (logical vs reserved)
     "fault_tolerance": None,        # Fig 12
     "batch_size_sweep": None,       # Fig 5
     "scalability": None,            # Fig 6 (mesh sweep -> BENCH_scale.json)

@@ -1,12 +1,26 @@
 """Fig 10: append/createIndex write throughput vs rows-per-write.
 
-Both APIs share the writing mechanism (hash-route + segment build), so the
-numbers coincide — the paper makes the same observation."""
+Measured across write paths (DESIGN.md §4):
+
+* ``arena``          — the default: jit-compiled in-place ingest into the
+                       reserved tail, zero pytree shape change.
+* ``arena_donated``  — the same ingest with parent buffers donated to XLA
+                       (true in-place aliasing; measured as a chained
+                       stream, since donation consumes the parent).
+* ``segment``        — the PR-3 baseline: one exactly-sized delta segment
+                       per append (host-coordinated build + snapshot
+                       extension).
+* ``create``         — full createIndex over the delta alone.
+
+Batch sizes mirror Fig 5's sweep.  Results merge into
+``BENCH_append.json`` at the repo root (shared with Fig 9).
+"""
 
 import numpy as np
 
 from repro.core import Schema, append, create_index
 from benchmarks.common import Report, timeit
+from benchmarks.append_read_latency import merge_artifact
 
 SCH = Schema.of("k", k="int64", v="float32")
 
@@ -15,22 +29,52 @@ def run(quick: bool = True):
     rng = np.random.default_rng(3)
     rep = Report("write_throughput")
     base_n = 20_000 if quick else 200_000
+    sizes = (500, 2_000, 10_000) if quick else (1_000, 10_000, 100_000)
     cols = {"k": rng.integers(0, base_n, base_n).astype(np.int64),
             "v": rng.random(base_n).astype(np.float32)}
-    t0 = create_index(cols, SCH, rows_per_batch=4096)
+    bench_rows = []
 
-    for rows in (1_000, 10_000, 100_000) if not quick else (500, 2_000,
-                                                            10_000):
+    for rows in sizes:
         delta = {"k": rng.integers(0, base_n, rows).astype(np.int64),
                  "v": rng.random(rows).astype(np.float32)}
-        t_app = timeit(lambda: append(t0, delta), reps=3)
+        # reserve the whole measured stream: every append stays in-class
+        stream_rows = rows * 16
+        t0 = create_index(cols, SCH, rows_per_batch=4096,
+                          reserve=base_n + stream_rows)
+        t_seg0 = create_index(cols, SCH, rows_per_batch=4096, reserve=0)
+
+        t_arena = timeit(lambda: append(t0, delta), reps=5)
+        # donated stream: chained (donation consumes the parent), capped
+        # well inside the reserved class
+        state = {"t": create_index(cols, SCH, rows_per_batch=4096,
+                                   reserve=base_n + stream_rows)}
+
+        def donated_step():
+            state["t"] = append(state["t"], delta, donate=True)
+
+        t_donate = timeit(donated_step, reps=5)
+        t_segment = timeit(lambda: append(t_seg0, delta, mode="segment"),
+                           reps=3)
         t_create = timeit(lambda: create_index(delta, SCH,
-                                               rows_per_batch=4096), reps=3)
-        rep.add(f"rows={rows}",
-                append_rows_per_s=rows / t_app["median_s"],
-                create_rows_per_s=rows / t_create["median_s"],
-                append_ms=t_app["median_s"] * 1e3,
-                create_ms=t_create["median_s"] * 1e3)
+                                               rows_per_batch=4096),
+                          reps=3)
+
+        row = dict(rows=rows,
+                   arena_rows_per_s=rows / t_arena["median_s"],
+                   arena_donated_rows_per_s=rows / t_donate["median_s"],
+                   segment_rows_per_s=rows / t_segment["median_s"],
+                   create_rows_per_s=rows / t_create["median_s"],
+                   arena_ms=t_arena["median_s"] * 1e3,
+                   arena_donated_ms=t_donate["median_s"] * 1e3,
+                   segment_ms=t_segment["median_s"] * 1e3,
+                   create_ms=t_create["median_s"] * 1e3,
+                   arena_vs_segment=(t_segment["median_s"]
+                                     / t_arena["median_s"]))
+        bench_rows.append(row)
+        rep.add(f"rows={rows}", **row)
+
+    merge_artifact("fig10_write_throughput",
+                   {"quick": quick, "rows": bench_rows})
     return rep.to_dict()
 
 

@@ -9,6 +9,16 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+# Fast tracing-count gate FIRST (seconds): fails if appends within a
+# capacity class retrace any fused read entry point (ISSUE 4 acceptance;
+# DESIGN.md §4).  Run under both topologies so the shard_map backend's
+# gate executes even on single-device CI.
+echo "== trace gate (single device) =="
+python scripts/trace_gate.py
+echo "== trace gate (forced 8-device host mesh) =="
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+  python scripts/trace_gate.py
+
 echo "== tier-1 pytest (single device) =="
 python -m pytest -q
 

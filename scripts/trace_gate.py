@@ -1,0 +1,119 @@
+"""CI tracing-count gate (ISSUE 4 / DESIGN.md §4).
+
+Fails (exit 1) if appends within a capacity class retrace ANY fused read
+entry point:
+
+* single table — ``fused_lookup`` (via ``IndexedTable.lookup``) and
+  ``indexed_join`` call sites, 12 successive arena appends;
+* distributed — the jitted ``dist.lookup`` site over 12
+  ``append_distributed`` rounds, on the vmap backend always and on the
+  shard_map backend when the process has >= 4 devices (scripts/ci.sh
+  runs this gate under both topologies, so the forced-8 pass exercises
+  shard_map even on single-device CI).
+
+Fast by construction: tiny tables, one compile per site, zero retraces —
+the whole gate is a few seconds of XLA work.
+
+    PYTHONPATH=src python scripts/trace_gate.py
+"""
+
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Schema, append, create_index, joins
+
+SCH = Schema.of("k", k="int64", v="float32")
+APPENDS = 12
+
+
+def fail(msg: str):
+    print(f"TRACE GATE FAIL: {msg}")
+    sys.exit(1)
+
+
+def gate_single_table():
+    rng = np.random.default_rng(0)
+    cols = {"k": rng.integers(0, 64, 400).astype(np.int64),
+            "v": rng.random(400).astype(np.float32)}
+    t = create_index(cols, SCH, rows_per_batch=64).with_flat_data()
+    q = rng.integers(0, 64, 32).astype(np.int64)
+    pc = {"pk": q, "tag": np.arange(32, dtype=np.int32)}
+    counts = {"lookup": 0, "join": 0}
+
+    @jax.jit
+    def f_lookup(tbl, qq):
+        counts["lookup"] += 1
+        return tbl.lookup(qq, 4)[0]
+
+    @jax.jit
+    def f_join(tbl, p):
+        counts["join"] += 1
+        return joins.indexed_join(tbl, p, "pk", max_matches=4)
+
+    jax.block_until_ready(f_lookup(t, q))
+    jax.block_until_ready(f_join(t, pc)[2])
+    for i in range(APPENDS):
+        t = append(t, {"k": rng.integers(0, 64, 16).astype(np.int64),
+                       "v": rng.random(16).astype(np.float32)})
+        jax.block_until_ready(f_lookup(t, q))
+        jax.block_until_ready(f_join(t, pc)[2])
+    if counts["lookup"] != 1:
+        fail(f"fused_lookup call site retraced: {counts['lookup']} traces "
+             f"across {APPENDS} same-class appends (expected 1)")
+    if counts["join"] != 1:
+        fail(f"indexed_join call site retraced: {counts['join']} traces "
+             f"across {APPENDS} same-class appends (expected 1)")
+    print(f"  single-table: 1 compile per site across {APPENDS} appends")
+
+
+def gate_distributed(rt, label):
+    from repro import dist
+    rng = np.random.default_rng(1)
+    cols = {"k": rng.integers(0, 200, 800).astype(np.int64),
+            "v": rng.random(800).astype(np.float32)}
+    shards = 4
+    dt = dist.create_distributed(cols, SCH, shards, rows_per_batch=64,
+                                 rt=rt)
+    q = jnp.asarray(rng.choice(cols["k"], 32).astype(np.int64))
+    counts = {"lookup": 0}
+
+    @jax.jit
+    def f(d, qq):
+        counts["lookup"] += 1
+        return dist.lookup(d, qq, max_matches=4, rt=rt)[1]
+
+    jax.block_until_ready(f(dt, q))
+    for i in range(APPENDS):
+        dt = dist.append_distributed(
+            dt, {"k": rng.integers(0, 200, 8).astype(np.int64),
+                 "v": rng.random(8).astype(np.float32)}, rt=rt)
+        jax.block_until_ready(f(dt, q))
+    if counts["lookup"] != 1:
+        fail(f"dist.lookup ({label}) retraced: {counts['lookup']} traces "
+             f"across {APPENDS} same-class appends (expected 1)")
+    print(f"  dist ({label}): 1 compile across {APPENDS} appends")
+
+
+def main():
+    print(f"trace gate: {len(jax.devices())} device(s), "
+          f"backend={jax.default_backend()}")
+    gate_single_table()
+    try:
+        from repro.dist import mesh
+    except ImportError:
+        print("  dist layer unavailable; single-table gate only")
+        return
+    gate_distributed(mesh.vmap_runtime(), "vmap")
+    if len(jax.devices()) >= 4:
+        gate_distributed(mesh.mesh_runtime(4), "shard_map")
+    else:
+        print("  shard_map gate skipped (<4 devices; ci.sh's forced-8 "
+              "pass covers it)")
+    print("TRACE GATE OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -128,6 +128,44 @@ def _build_arrays(keys, row_ids, valid, num_buckets: int, slots: int):
             prev_rows, prev_vals, overflow)
 
 
+def arena_insert_plan(bucket_keys, head_keys, is_head):
+    """Slot placement for inserting per-key head pointers into a *live*
+    bucket table (the arena append path, DESIGN.md §4).
+
+    The bulk build (`_build_arrays`) packs each bucket's occupied slots
+    left-to-right, and arena inserts preserve that invariant, so placement
+    is branch-free: a head whose key already sits in the table reuses its
+    slot (the pointer is overwritten with the newer row); a new key takes
+    ``occupancy + rank`` where ``rank`` orders the batch's new keys within
+    their bucket.  Returns ``(flat_slot [d] int32, overflow scalar)`` —
+    ``flat_slot`` indexes the flattened ``[nb * slots]`` planes and is set
+    to ``nb * slots`` (out of range, scatter-dropped) for non-head lanes
+    and overflowing inserts.  Overflow is *counted, never silent* — the
+    same build-time-only failure contract as the bulk build; the host
+    wrapper reacts by promoting the arena (more buckets), so probes stay
+    exact for every inserted key.
+    """
+    nb, slots = bucket_keys.shape
+    b = hashing.bucket_hash(head_keys, nb)
+    row_keys = bucket_keys[b]                               # [d, slots]
+    match = ((row_keys == head_keys[:, None]) & is_head[:, None]
+             & (head_keys != EMPTY_KEY)[:, None])
+    exists = match.any(axis=1)
+    slot_exist = jnp.argmax(match, axis=1).astype(jnp.int32)
+    occ = jnp.sum(bucket_keys != EMPTY_KEY, axis=1).astype(jnp.int32)
+    new_head = is_head & ~exists
+    b_or_inf = jnp.where(new_head, b, jnp.int32(nb))
+    order = jnp.argsort(b_or_inf, stable=True)
+    rank = (jnp.zeros(b.shape, jnp.int32)
+            .at[order].set(_segment_rank(b_or_inf[order])))
+    slot_new = occ[b] + rank
+    overflow = jnp.sum(new_head & (slot_new >= slots))
+    slot = jnp.where(exists, slot_exist, slot_new)
+    ok = is_head & (slot < slots)
+    flat = jnp.where(ok, b * slots + slot, jnp.int32(nb * slots))
+    return flat, overflow
+
+
 def suggest_num_buckets(n_keys: int, slots: int = DEFAULT_SLOTS,
                         load: float = 0.25) -> int:
     """Power-of-two bucket count targeting ``load`` mean occupancy/slot."""

@@ -16,6 +16,15 @@ gather pipeline therefore runs over a flat multi-segment view:
   until a version actually decodes rows: the probe path never touches row
   data, so append-heavy workloads don't pay an O(capacity) copy per
   version.
+* ``fill [scalar] int32`` — the first *unwritten* global row id
+  (DESIGN.md §4): segments are capacity-reserved arenas, so lanes in
+  ``[fill, capacity)`` of the tail are reserved-but-unwritten slack.  The
+  fused probe/chain-walk/gather paths mask every emitted row id by
+  ``fill`` — with buffer donation a reserved lane may alias retired
+  memory, and masking guarantees it can never decode.  ``fill`` is a
+  data leaf (not treedef meta): arena appends bump it on-device with
+  zero pytree shape change, which is what keeps every jitted read site
+  compile-cached across appends.
 
 A Snapshot is a **registered pytree** and lives on the table as a stored
 field (``IndexedTable.snapshot``), not a host-side cache: jitted functions
@@ -81,7 +90,7 @@ class FlatBlock:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["blocks", "prev", "data"],
+         data_fields=["blocks", "prev", "data", "fill"],
          meta_fields=["bucket_counts", "layout"])
 @dataclasses.dataclass(frozen=True)
 class Snapshot:
@@ -90,6 +99,7 @@ class Snapshot:
     blocks: tuple[FlatBlock, ...]
     prev: jax.Array                 # [capacity] int32, global row order
     data: object                    # None | [cap, W] int32 | dict[name->[cap]]
+    fill: jax.Array                 # scalar int32 — first unwritten row id
     bucket_counts: tuple[int, ...]  # per-segment bucket counts (ragged)
     layout: str
 
@@ -144,6 +154,20 @@ def flat_data_from_segments(segments, schema, layout):
             for c in schema.columns}
 
 
+def fill_after(seg) -> jax.Array:
+    """First unwritten row id given a tail segment: one past its last
+    valid lane (its ``row_base`` when the segment is all-padding).  Arena
+    tails keep valid lanes left-packed, so this is exactly
+    ``row_base + valid_count``; for legacy interleaved-padding segments it
+    is the safe upper bound (interior padding stays addressable and
+    decodes zeros, same as before)."""
+    v = seg.valid
+    cap = v.shape[-1]
+    last = cap - jnp.argmax(v[::-1]).astype(jnp.int32)
+    return jnp.asarray(seg.row_base, jnp.int32) + jnp.where(
+        jnp.any(v), last.astype(jnp.int32), jnp.int32(0))
+
+
 def snapshot_from_segments(segments, layout, *, schema=None,
                            with_data: bool = False) -> Snapshot:
     """Build a Snapshot from scratch (create_index / compact path)."""
@@ -153,6 +177,7 @@ def snapshot_from_segments(segments, layout, *, schema=None,
     data = (flat_data_from_segments(segments, schema, layout)
             if with_data else None)
     return Snapshot(blocks=blocks, prev=prev, data=data,
+                    fill=fill_after(segments[-1]),
                     bucket_counts=tuple(b.num_buckets for b in blocks),
                     layout=layout)
 
@@ -178,6 +203,7 @@ def extend_snapshot(snap: Snapshot, seg, *, schema) -> Snapshot:
                     [snap.data[c.name], seg.data[c.name].reshape(-1)])
                 for c in schema.columns}
     return Snapshot(blocks=snap.blocks + (block,), prev=prev, data=data,
+                    fill=fill_after(seg),
                     bucket_counts=snap.bucket_counts + (block.num_buckets,),
                     layout=snap.layout)
 

@@ -5,14 +5,22 @@ per key, (2) row batches holding the tabular data, (3) backward pointers
 chaining equal-key rows.  Paper §III-E: appends snapshot the index so
 divergent children share the parent's state and store only deltas.
 
-TPU adaptation (DESIGN.md §2): a partition is an ordered tuple of immutable
-**segments**.  ``create_index`` builds segment 0; every ``append`` creates a
-new segment holding only the delta — data batches, a delta hash index over
-the appended keys, and backward pointers whose *oldest* appended row chains
-into the parent's latest row for that key.  Parent segments are shared by
-reference (JAX arrays are immutable buffers), which is exactly the paper's
-persistent-data-structure scheme with zero-copy snapshots — Listing 2's
-divergent appends work with no copy-on-write.
+TPU adaptation (DESIGN.md §2/§4): a partition is an ordered tuple of
+**capacity-reserved arena segments**.  ``create_index`` builds segment 0
+over-allocated to a power-of-two capacity class; ``append`` within the
+reserved capacity is a jit-compiled fused on-device ingest — hash the
+delta, write its bucket/chain planes, link parent heads, bump the
+``fill`` scalar — with ZERO pytree shape change, so jitted read sites
+compile once per class instead of once per version.  Capacity exhaustion
+seals the tail and opens the next class (one recompile, geometric
+amortization); past a segment-count threshold the table compacts.  The
+pre-arena path — one exactly-sized delta segment per append, parent
+segments shared by reference (the paper's persistent-data-structure
+scheme; Listing 2's divergent appends with no copy-on-write) — survives
+as ``append(..., mode="segment")`` and anchors the equivalence property
+tests.  Non-donated arena appends are equally functional (the parent is
+never touched); ``donate=True`` trades the parent for true in-place
+buffer aliasing.
 
 Row storage is batch-granular: a segment's data is ``[num_batches,
 rows_per_batch, width_words] int32`` (row layout) or per-column typed arrays
@@ -45,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashindex as hix
+from repro.core import hashing
 from repro.core import snapshot as snap_mod
 from repro.core.hashindex import EMPTY_KEY, HashIndex
 from repro.core.pointers import NULL_PTR, PTR_DTYPE
@@ -55,9 +64,15 @@ from repro.core.snapshot import (FlatBlock, Snapshot, extend_snapshot,
 # snapshot), so this does not cycle; importing here (not inside methods)
 # keeps module constants from being created inside an active jit trace.
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 # Back-compat alias: PR-1 exported the probe-side view as ``FlatView``.
 FlatView = Snapshot
+
+# Logical (occupied-entry) index accounting, shared with the Fig-11
+# benchmark so the formula lives in exactly one place:
+INDEX_ENTRY_BYTES = 12   # int64 key + int32 ptr per occupied bucket slot
+ROW_PTR_BYTES = 5        # int32 prev + bool valid per live row
 
 # ---------------------------------------------------------------------------
 # Segment
@@ -81,20 +96,36 @@ class Segment:
     def capacity(self) -> int:
         return self.prev.shape[-1]
 
-    def data_nbytes(self) -> int:
+    def _row_bytes(self) -> int:
+        """Bytes per row — shard-stack-agnostic (shape-tail based, so a
+        dist layer's [num_shards, ...] leading axis doesn't inflate it)."""
+        if self.layout == "row":
+            return self.data.shape[-1] * 4
+        return sum(a.dtype.itemsize for a in self.data.values())
+
+    def data_nbytes(self, *, logical: bool = False):
+        """Row-storage bytes.  ``logical=False`` (default) counts the full
+        reserved planes; ``logical=True`` counts only valid rows — arenas
+        over-allocate (DESIGN.md §4), and the paper's Fig-11 overhead claim
+        is about logical bytes, not arena slack."""
+        if logical:
+            return jnp.sum(self.valid) * self._row_bytes()
         if self.layout == "row":
             return self.data.size * 4
         return sum(int(np.prod(a.shape)) * a.dtype.itemsize
                    for a in self.data.values())
 
-    def index_nbytes(self) -> int:
+    def index_nbytes(self, *, logical: bool = False):
+        if logical:
+            occupied = jnp.sum(self.index.bucket_keys != EMPTY_KEY)
+            return (occupied * INDEX_ENTRY_BYTES
+                    + jnp.sum(self.valid) * ROW_PTR_BYTES)
         return self.index.nbytes + self.prev.size * 4 + self.valid.size
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["segments", "snapshot"],
-         meta_fields=["schema", "rows_per_batch", "layout", "version",
-                      "slots"])
+         data_fields=["segments", "snapshot", "version"],
+         meta_fields=["schema", "rows_per_batch", "layout", "slots"])
 @dataclasses.dataclass(frozen=True)
 class IndexedTable:
     """A fully functional (immutable) indexed partition with MVCC versions.
@@ -102,14 +133,20 @@ class IndexedTable:
     ``snapshot`` is the stored read-optimized form (DESIGN.md §3): both the
     segments and the snapshot are pytree data, so the table round-trips
     through jit/vmap with the fused-path arrays as leaves.
+
+    ``version`` is a *data leaf* (scalar int32), not treedef metadata
+    (DESIGN.md §4): the arena append path bumps it on-device with zero
+    pytree shape change, so successive versions stay structurally equal
+    and every jitted read site taking the table as an argument keeps its
+    compile-cache entry across appends.
     """
 
     segments: tuple[Segment, ...]
     snapshot: Snapshot
+    version: jax.Array    # scalar int32 — paper §III-D MVCC version
     schema: Schema
     rows_per_batch: int
     layout: str           # "row" | "columnar"
-    version: int          # paper §III-D: bumped per append; stale detection
     slots: int
 
     # -- shape facts ----------------------------------------------------------
@@ -121,16 +158,29 @@ class IndexedTable:
     def num_segments(self) -> int:
         return len(self.segments)
 
+    @property
+    def fill(self) -> jax.Array:
+        """First unwritten global row id (scalar int32 leaf)."""
+        return self.snapshot.fill
+
+    def spare_capacity(self) -> int:
+        """Reserved-but-unwritten rows left in the arena tail (host int —
+        reads the ``fill`` scalar; appends are host-coordinated anyway)."""
+        tail = self.segments[-1]
+        return tail.row_base + tail.capacity - int(self.snapshot.fill)
+
     def num_rows(self):
         """Valid (non-padding) rows; array under trace, int when concrete."""
         return sum(jnp.sum(s.valid) for s in self.segments)
 
-    def data_nbytes(self) -> int:
-        return sum(s.data_nbytes() for s in self.segments)
+    def data_nbytes(self, *, logical: bool = False):
+        """Reserved row-storage bytes; ``logical=True`` counts valid rows
+        only (Fig 11 must not be distorted by arena slack, DESIGN.md §4)."""
+        return sum(s.data_nbytes(logical=logical) for s in self.segments)
 
-    def index_nbytes(self) -> int:
+    def index_nbytes(self, *, logical: bool = False):
         """Index memory overhead — the paper's Fig-11 measurement."""
-        return sum(s.index_nbytes() for s in self.segments)
+        return sum(s.index_nbytes(logical=logical) for s in self.segments)
 
     # -- snapshot access (fused-path representation, DESIGN.md §3) -------------
 
@@ -206,7 +256,7 @@ class IndexedTable:
         prev = self.snapshot.prev
         cap = self.snapshot.capacity
         rids = jnp.asarray(rids, PTR_DTYPE)
-        in_range = (rids >= 0) & (rids < cap)
+        in_range = (rids >= 0) & (rids < self.snapshot.fill)
         got = prev[jnp.clip(rids, 0, cap - 1)]
         return jnp.where(in_range, got, NULL_PTR)
 
@@ -247,7 +297,9 @@ class IndexedTable:
             return self.gather_rows_ref(rids, names=names)
         data = self._flat_data()
         rids = jnp.asarray(rids, PTR_DTYPE)
-        in_range = (rids >= 0) & (rids < self.capacity)
+        # fill-masked: reserved-but-unwritten arena lanes never decode
+        # (with donation they may alias retired buffers — DESIGN.md §4)
+        in_range = (rids >= 0) & (rids < self.snapshot.fill)
         safe = jnp.clip(rids, 0, self.capacity - 1)
         if self.layout == "row":
             flat = jnp.where(in_range[..., None], data[safe], 0)
@@ -304,17 +356,48 @@ class IndexedTable:
 # Segment construction (vmap-friendly core + host wrappers)
 # ---------------------------------------------------------------------------
 
+ARENA_GROWTH = 2
+DEFAULT_COMPACT_THRESHOLD = 8
+
+
 def pad_to_batches(n: int, rows_per_batch: int) -> int:
     nb = max(1, -(-n // rows_per_batch))
     return nb * rows_per_batch
 
 
+def capacity_class(n_rows: int, rows_per_batch: int,
+                   growth: int = ARENA_GROWTH) -> int:
+    """Reserved arena capacity for ``n_rows``: the smallest power-of-two
+    number of row batches covering ``growth * n_rows`` (DESIGN.md §4).
+    Power-of-two classes mean a growing table visits O(log n) distinct
+    plane shapes — one read-site recompile per class, geometrically
+    amortized — and ``growth`` leaves headroom so appends land in the
+    zero-shape-change in-place ingest instead of promoting immediately."""
+    need = max(1, int(n_rows)) * growth
+    nb = max(1, -(-need // rows_per_batch))
+    return (1 << (nb - 1).bit_length()) * rows_per_batch
+
+
 def prepare_cols(cols: dict, schema: Schema, rows_per_batch: int,
-                 valid=None):
-    """Pad columns to a batch multiple; returns (padded cols, valid, cap)."""
+                 valid=None, *, min_capacity: int = 0):
+    """Left-pack valid rows, pad columns to a batch multiple (at least
+    ``min_capacity`` rows); returns (padded cols, valid, cap).
+
+    Packing keeps the arena invariant — written lanes are exactly
+    ``[0, valid_count)`` — and is a stable permutation, so per-key MVCC
+    chain order (append order) is preserved.
+    """
     n = int(next(iter(cols.values())).shape[0])
-    cap = pad_to_batches(n, rows_per_batch)
+    cap = max(pad_to_batches(n, rows_per_batch),
+              pad_to_batches(min_capacity, rows_per_batch)
+              if min_capacity else 0)
     pad = cap - n
+    if valid is not None:
+        valid = jnp.asarray(valid, bool)
+        order = jnp.argsort(~valid, stable=True)   # valid first, order kept
+        cols = {c.name: jnp.asarray(cols[c.name], c.jnp_dtype)[order]
+                for c in schema.columns}
+        valid = valid[order]
     out = {}
     for c in schema.columns:
         a = jnp.asarray(cols[c.name], c.jnp_dtype)
@@ -384,14 +467,27 @@ def _build_segment_retrying(cols, valid, parent_heads, schema, *, row_base,
 
 def create_index(cols: dict, schema: Schema, *, rows_per_batch: int = 4096,
                  layout: str = "row", slots: int = hix.DEFAULT_SLOTS,
-                 valid=None) -> IndexedTable:
+                 valid=None, reserve: int | None = None) -> IndexedTable:
     """Paper Listing 1 ``createIndex``: build the index over a dataframe.
 
     In the distributed layer this is preceded by the hash-partition shuffle;
     here we build one partition.  The probe-side Snapshot is built eagerly
     as part of the table's stored form (DESIGN.md §3); flat data stays lazy.
+
+    Segment 0 is a **capacity-reserved arena** (DESIGN.md §4): its data /
+    index / pointer planes are over-allocated to the power-of-two capacity
+    class of the input, fill tracked by the snapshot's ``valid_count``
+    scalar (``fill``), so appends within the reserved capacity run as an
+    in-place on-device ingest with zero pytree shape change.  ``reserve``
+    overrides the class policy: an explicit minimum row capacity, or ``0``
+    for no over-allocation (the pre-arena PR-3 write path, kept for the
+    segment-chain reference and benchmarks' before/after comparison).
     """
-    cols_p, valid_p, cap = prepare_cols(cols, schema, rows_per_batch, valid)
+    n = int(next(iter(cols.values())).shape[0])
+    reserved = (capacity_class(n, rows_per_batch) if reserve is None
+                else pad_to_batches(max(n, int(reserve), 1), rows_per_batch))
+    cols_p, valid_p, cap = prepare_cols(cols, schema, rows_per_batch, valid,
+                                        min_capacity=reserved)
     heads = jnp.full((cap,), NULL_PTR, PTR_DTYPE)
     seg = _build_segment_retrying(cols_p, valid_p, heads, schema, row_base=0,
                                   rows_per_batch=rows_per_batch,
@@ -399,40 +495,368 @@ def create_index(cols: dict, schema: Schema, *, rows_per_batch: int = 4096,
     snap = snapshot_from_segments((seg,), layout, schema=schema)
     return IndexedTable(segments=(seg,), snapshot=snap, schema=schema,
                         rows_per_batch=rows_per_batch, layout=layout,
-                        version=0, slots=slots)
+                        version=jnp.asarray(0, jnp.int32), slots=slots)
 
 
-def append(table: IndexedTable, cols: dict, valid=None) -> IndexedTable:
-    """Paper Listing 1 ``appendRows``: functional append -> new version.
+# ---------------------------------------------------------------------------
+# Arena append: fused on-device in-place ingest (DESIGN.md §4)
+# ---------------------------------------------------------------------------
 
-    O(|delta|) work; the parent's segments are shared by reference (the
-    cTrie-snapshot analog).  Divergent appends on one parent (paper
-    Listing 2) both succeed and coexist.  The child's snapshot extends the
-    parent's incrementally: only the delta's block is computed, parent
-    blocks are shared, and flat data is carried only if materialized.
+def _delta_order(keys, valid):
+    """Lexsort delta lanes by (key, arrival): the chain/head scaffold.
+
+    Returns ``(order, same, is_head)`` — ``same[i]`` marks a sorted lane
+    whose predecessor holds the same key (its backward pointer stays
+    intra-delta), ``is_head`` the newest valid lane per key (the lane that
+    lands in the bucket planes).
     """
-    cols_p, valid_p, cap = prepare_cols(cols, table.schema,
-                                        table.rows_per_batch, valid)
-    keys = jnp.where(valid_p,
-                     jnp.asarray(cols_p[table.schema.key], jnp.int64),
+    d = keys.shape[0]
+    order = jnp.lexsort((jnp.arange(d, dtype=PTR_DTYPE), keys))
+    k_s, v_s = keys[order], valid[order]
+    same = jnp.concatenate(
+        [jnp.zeros((1,), bool), (k_s[1:] == k_s[:-1]) & v_s[1:] & v_s[:-1]])
+    is_head = jnp.concatenate(
+        [k_s[1:] != k_s[:-1], jnp.ones((1,), bool)]) & v_s
+    return order, same, is_head
+
+
+def _ingest_arrays(state, parent_blocks, cols_p, valid_p, *, schema, layout,
+                   rb, bucket_counts, slots):
+    """One fused on-device pass over the tail's DEDUPLICATED mutable state.
+
+    ``state`` holds each overwritten buffer exactly once (the donation/
+    aliasing rules of DESIGN.md §4): the tail's bucket-pointer plane is the
+    snapshot block's ``ptrs`` (always one buffer), and a single-segment
+    tail's ``prev`` IS the snapshot's flat ``prev`` (``tprev=None`` then).
+    Keeping the signature deduplicated is what makes the donated variant
+    legal — XLA rejects the same buffer donated twice, which is exactly
+    what jit-of-the-whole-table would do.
+
+    state = dict(bk      [nb, slots] int64  tail bucket keys,
+                 bhi/blo [nb, slots] int32  tail block key planes,
+                 bptr    [nb, slots] int32  tail head ptrs (index AND block),
+                 sprev   [total]     int32  snapshot flat prev,
+                 tprev   [cap_t] | None     tail-local prev (None iff rb==0),
+                 tvalid  [cap_t] bool,
+                 tdata   tail row storage,
+                 sdata   flat data | None (None also when single-segment:
+                         derived from tdata by reshape at reassembly),
+                 fill / version scalars)
+    Returns (new state, overflow).
+    """
+    sch = schema
+    nb_t, _ = state["bk"].shape
+    cap_t = state["tvalid"].shape[0]
+    fill_g = state["fill"]
+    drop = jnp.int32(2**31 - 1)                     # scatter target: dropped
+
+    keys = jnp.where(valid_p, jnp.asarray(cols_p[sch.key], jnp.int64),
                      EMPTY_KEY)
-    # Head-link probe: always the eager segment-looped reference.  The
-    # fused path's jitted core would retrace per append (shapes grow every
-    # version); a one-shot probe over |delta| keys amortizes nothing.
+    # packed row ids: valid delta lanes land at [fill, fill + nv)
+    pos = jnp.cumsum(valid_p.astype(PTR_DTYPE)) - 1
+    rid_g = jnp.where(valid_p, fill_g.astype(PTR_DTYPE) + pos, drop)
+    rid_l = jnp.where(valid_p, rid_g - PTR_DTYPE(rb), drop)
+    nv = jnp.sum(valid_p).astype(jnp.int32)
+
+    # -- backward chains (sorted order) -------------------------------------
+    order, same, is_head = _delta_order(keys, valid_p)
+    k_s, v_s = keys[order], valid_p[order]
+    gid_s = jnp.where(v_s, rid_g[order], drop)
+    pred = jnp.concatenate([jnp.full((1,), NULL_PTR, PTR_DTYPE),
+                            gid_s[:-1]])
+    # parent head per key: fused probe of the WHOLE pre-insert snapshot
+    # (newest -> oldest across all segments), inside this same jit
+    probe_snap = Snapshot(
+        blocks=parent_blocks + (FlatBlock(state["bhi"], state["blo"],
+                                          state["bptr"], nb_t),),
+        prev=state["sprev"], data=None, fill=fill_g,
+        bucket_counts=bucket_counts, layout=layout)
+    bids = jnp.stack([hashing.bucket_hash(k_s, nb) for nb in bucket_counts])
+    qhi, qlo = hashing.split64(k_s)
+    parent_head = kref.fused_probe_ref(bids, qhi, qlo, probe_snap)
+    prev_vals = jnp.where(v_s, jnp.where(same, pred, parent_head), NULL_PTR)
+
+    out = dict(state)
+    out["sprev"] = state["sprev"].at[jnp.where(v_s, gid_s, drop)
+                                     ].set(prev_vals, mode="drop")
+    if state["tprev"] is not None:
+        out["tprev"] = state["tprev"].at[
+            jnp.where(v_s, gid_s - PTR_DTYPE(rb), drop)
+        ].set(prev_vals, mode="drop")
+
+    # -- row data (original delta order; invalid lanes scatter-drop) --------
+    out["tvalid"] = state["tvalid"].at[rid_l].set(True, mode="drop")
+    if layout == "row":
+        words = sch.encode_rows({c.name: jnp.asarray(cols_p[c.name],
+                                                     c.jnp_dtype)
+                                 for c in sch.columns})
+        out["tdata"] = (state["tdata"].reshape(cap_t, sch.width_words)
+                        .at[rid_l].set(words, mode="drop")
+                        .reshape(state["tdata"].shape))
+        if state["sdata"] is not None:
+            out["sdata"] = state["sdata"].at[rid_g].set(words, mode="drop")
+    else:
+        out["tdata"] = {
+            c.name: (state["tdata"][c.name].reshape(cap_t)
+                     .at[rid_l].set(jnp.asarray(cols_p[c.name], c.jnp_dtype),
+                                    mode="drop")
+                     .reshape(state["tdata"][c.name].shape))
+            for c in sch.columns}
+        if state["sdata"] is not None:
+            out["sdata"] = {
+                c.name: (state["sdata"][c.name]
+                         .at[rid_g].set(jnp.asarray(cols_p[c.name],
+                                                    c.jnp_dtype),
+                                        mode="drop"))
+                for c in sch.columns}
+
+    # -- bucket/head insert on the tail planes (index + snapshot block) -----
+    hk = jnp.where(is_head, k_s, EMPTY_KEY)
+    flat_slot, overflow = hix.arena_insert_plan(state["bk"], hk, is_head)
+    head_ptr = jnp.where(v_s, gid_s, NULL_PTR)
+    hhi, hlo = hashing.split64(hk)
+    out["bk"] = (state["bk"].reshape(-1)
+                 .at[flat_slot].set(hk, mode="drop").reshape(nb_t, slots))
+    out["bhi"] = (state["bhi"].reshape(-1)
+                  .at[flat_slot].set(hhi, mode="drop").reshape(nb_t, slots))
+    out["blo"] = (state["blo"].reshape(-1)
+                  .at[flat_slot].set(hlo, mode="drop").reshape(nb_t, slots))
+    out["bptr"] = (state["bptr"].reshape(-1)
+                   .at[flat_slot].set(head_ptr, mode="drop")
+                   .reshape(nb_t, slots))
+
+    out["fill"] = fill_g + nv
+    out["version"] = state["version"] + 1
+    return out, overflow
+
+
+def _dedup_state(table: IndexedTable) -> dict:
+    """The tail's mutable buffers, each exactly once (DESIGN.md §4)."""
+    tail = table.segments[-1]
+    snap = table.snapshot
+    single = len(table.segments) == 1
+    return dict(bk=tail.index.bucket_keys,
+                bhi=snap.blocks[-1].key_hi,
+                blo=snap.blocks[-1].key_lo,
+                bptr=snap.blocks[-1].ptrs,
+                sprev=snap.prev,
+                tprev=None if single else tail.prev,
+                tvalid=tail.valid,
+                tdata=tail.data,
+                sdata=None if single else snap.data,
+                fill=snap.fill,
+                version=table.version)
+
+
+def _reassemble(table: IndexedTable, out: dict) -> IndexedTable:
+    """Rebuild the child table from an ingest's output state, restoring
+    the aliasing-by-construction invariants: the tail index and snapshot
+    block share ONE ptrs plane; a single-segment tail shares its prev (and
+    derives flat data by reshape) with the snapshot."""
+    tail = table.segments[-1]
+    snap = table.snapshot
+    sch = table.schema
+    single = len(table.segments) == 1
+    nb_t = tail.index.num_buckets
+    slots = tail.index.slots
+    tail_new = dataclasses.replace(
+        tail, data=out["tdata"], valid=out["tvalid"],
+        prev=out["sprev"] if single else out["tprev"],
+        index=HashIndex(out["bk"], out["bptr"], nb_t, slots))
+    if snap.data is None:
+        sdata = None
+    elif single:
+        # leading-axis-agnostic reshape: works on [nb, rpb, ...] segment
+        # data AND its shard-stacked [s, nb, rpb, ...] form (the dist
+        # layer reassembles the stacked table outside the mapped region)
+        if table.layout == "row":
+            td = out["tdata"]
+            sdata = td.reshape(td.shape[:-3] + (-1, sch.width_words))
+        else:
+            sdata = {c.name: out["tdata"][c.name].reshape(
+                         out["tdata"][c.name].shape[:-2] + (-1,))
+                     for c in sch.columns}
+    else:
+        sdata = out["sdata"]
+    blk_new = FlatBlock(key_hi=out["bhi"], key_lo=out["blo"],
+                        ptrs=out["bptr"], num_buckets=nb_t)
+    snap_new = dataclasses.replace(
+        snap, blocks=snap.blocks[:-1] + (blk_new,), prev=out["sprev"],
+        data=sdata, fill=out["fill"])
+    return dataclasses.replace(
+        table, segments=table.segments[:-1] + (tail_new,),
+        snapshot=snap_new, version=out["version"])
+
+
+def _arena_ingest_core(table: IndexedTable, cols_p: dict, valid_p):
+    """Delta -> the parent's arena tail, zero pytree shape change.
+
+    Hashes the delta, writes its bucket/chain planes, links parent heads,
+    writes row data, and bumps ``fill``/``version`` — the child is
+    structurally equal to the parent, so every jitted read site stays
+    compile-cached (DESIGN.md §4).  Pure and collective-free: the
+    distributed layer maps it per shard through ``mesh.axis_map``
+    unchanged.  Returns ``(child, overflow)``; non-zero overflow means a
+    *new* key found its bucket full — the host wrapper discards the child
+    and promotes instead (counted, never silent).
+    """
+    out, overflow = _ingest_arrays(
+        _dedup_state(table), table.snapshot.blocks[:-1], cols_p, valid_p,
+        schema=table.schema, layout=table.layout,
+        rb=table.segments[-1].row_base,
+        bucket_counts=table.snapshot.bucket_counts,
+        slots=table.slots)
+    return _reassemble(table, out), overflow
+
+
+_arena_ingest = jax.jit(_arena_ingest_core)
+
+
+@partial(jax.jit, static_argnames=("schema", "layout", "rb",
+                                   "bucket_counts", "slots"),
+         donate_argnums=(0,))
+def _ingest_arrays_donated(state, parent_blocks, cols_p, valid_p, *,
+                           schema, layout, rb, bucket_counts, slots):
+    """Donated ingest: every buffer in ``state`` is handed to XLA for
+    in-place aliasing — true zero-copy appends.  The parent table is
+    CONSUMED (its arrays become invalid); MVCC divergence (paper
+    Listing 2) needs the non-donated path.  Legal only because ``state``
+    is deduplicated — see ``_ingest_arrays``."""
+    return _ingest_arrays(state, parent_blocks, cols_p, valid_p,
+                          schema=schema, layout=layout, rb=rb,
+                          bucket_counts=bucket_counts, slots=slots)
+
+
+@jax.jit
+def _arena_fits(bucket_keys, keys, valid):
+    """Would this delta's new keys overflow the tail's buckets?  Run
+    BEFORE a donated ingest — donation consumes the parent, so the
+    overflow -> promote fallback must be decided on the intact table."""
+    order, _, is_head = _delta_order(keys, valid)
+    hk = jnp.where(is_head, keys[order], EMPTY_KEY)
+    _, overflow = hix.arena_insert_plan(bucket_keys, hk, is_head)
+    return overflow
+
+
+def _append_promote(table: IndexedTable, cols_p: dict, valid_p, nv: int
+                    ) -> IndexedTable:
+    """Capacity exhaustion (or bucket overflow): seal the tail and open a
+    fresh arena segment at the next capacity class — at least double the
+    sealed tail, and large enough for the delta's own class.  One read-site
+    recompile per class (new pytree structure), geometrically amortized."""
+    rpb = table.rows_per_batch
+    tail_cap = table.segments[-1].capacity
+    # prepare_cols left-packed the valid rows, so a sparse valid-mask
+    # delta can be trimmed to its valid-row class before padding (the
+    # class covers nv, not the raw lane count — without the trim a
+    # mostly-invalid delta would need a capacity beyond its class)
+    keep = pad_to_batches(max(nv, 1), rpb)
+    if keep < valid_p.shape[0]:
+        cols_p = {k: v[:keep] for k, v in cols_p.items()}
+        valid_p = valid_p[:keep]
+    new_cap = max(2 * tail_cap, capacity_class(max(nv, 1), rpb),
+                  valid_p.shape[0])
+    pad = new_cap - valid_p.shape[0]
+    cols_r = {k: jnp.pad(v, [(0, pad)] + [(0, 0)] * (v.ndim - 1))
+              for k, v in cols_p.items()}
+    valid_r = jnp.pad(valid_p, (0, pad))
+    keys = jnp.where(valid_r, jnp.asarray(cols_r[table.schema.key],
+                                          jnp.int64), EMPTY_KEY)
     heads = table.probe_latest_ref(keys)
-    seg = _build_segment_retrying(cols_p, valid_p, heads, table.schema,
+    seg = _build_segment_retrying(cols_r, valid_r, heads, table.schema,
                                   row_base=table.capacity,
-                                  rows_per_batch=table.rows_per_batch,
-                                  layout=table.layout, slots=table.slots)
+                                  rows_per_batch=rpb, layout=table.layout,
+                                  slots=table.slots)
     snap = extend_snapshot(table.snapshot, seg, schema=table.schema)
     return dataclasses.replace(table, segments=table.segments + (seg,),
                                snapshot=snap, version=table.version + 1)
 
 
-def compact(table: IndexedTable) -> IndexedTable:
-    """Merge all segments into one (bounds probe fan-out after many appends;
-    the paper's cTrie amortizes the same way via trie-node sharing)."""
-    if table.num_segments == 1:
+def append(table: IndexedTable, cols: dict, valid=None, *,
+           mode: str = "arena", donate: bool = False,
+           compact_threshold: int | None = None) -> IndexedTable:
+    """Paper Listing 1 ``appendRows``: functional append -> new version.
+
+    ``mode="arena"`` (default, DESIGN.md §4): within the tail's reserved
+    capacity the delta lands via the jit-compiled in-place ingest — zero
+    pytree shape change, so structurally-equal appends hit the compile
+    cache at every read site.  On capacity exhaustion (or bucket
+    overflow) the tail is sealed and a next-class arena opens (one
+    recompile per class); when the segment count then exceeds
+    ``compact_threshold`` (default ``DEFAULT_COMPACT_THRESHOLD``) the
+    table is compacted so MVCC probe fan-out stays bounded.
+    ``donate=True`` additionally donates the parent's buffers to XLA for
+    in-place aliasing — the parent table becomes unusable (skip it when
+    divergent appends on one parent are needed, paper Listing 2).
+
+    ``mode="segment"`` is the pre-arena path — one exactly-sized delta
+    segment per append, parent buffers shared by reference — kept as the
+    semantic reference for the equivalence property tests and the
+    before/after benchmarks.
+    """
+    if mode not in ("arena", "segment"):
+        raise ValueError(f"append mode must be 'arena' or 'segment', "
+                         f"got {mode!r}")
+    cols_p, valid_p, cap = prepare_cols(cols, table.schema,
+                                        table.rows_per_batch, valid)
+    if mode == "segment":
+        keys = jnp.where(valid_p,
+                         jnp.asarray(cols_p[table.schema.key], jnp.int64),
+                         EMPTY_KEY)
+        # Head-link probe: the eager segment-looped reference — the fused
+        # core's jit would retrace per append on this growing-shape path.
+        heads = table.probe_latest_ref(keys)
+        seg = _build_segment_retrying(cols_p, valid_p, heads, table.schema,
+                                      row_base=table.capacity,
+                                      rows_per_batch=table.rows_per_batch,
+                                      layout=table.layout,
+                                      slots=table.slots)
+        snap = extend_snapshot(table.snapshot, seg, schema=table.schema)
+        child = dataclasses.replace(table,
+                                    segments=table.segments + (seg,),
+                                    snapshot=snap,
+                                    version=table.version + 1)
+        if compact_threshold is not None \
+                and child.num_segments > compact_threshold:
+            child = compact(child, _bump_version=False)
+        return child
+
+    nv = int(jnp.sum(valid_p))
+    if nv <= table.spare_capacity():
+        if donate:
+            keys = jnp.where(valid_p,
+                             jnp.asarray(cols_p[table.schema.key],
+                                         jnp.int64), EMPTY_KEY)
+            ovf = int(_arena_fits(table.segments[-1].index.bucket_keys,
+                                  keys, valid_p))
+            if ovf == 0:
+                out, _ = _ingest_arrays_donated(
+                    _dedup_state(table), table.snapshot.blocks[:-1],
+                    cols_p, valid_p, schema=table.schema,
+                    layout=table.layout,
+                    rb=table.segments[-1].row_base,
+                    bucket_counts=table.snapshot.bucket_counts,
+                    slots=table.slots)
+                return _reassemble(table, out)
+        else:
+            child, ovf = _arena_ingest(table, cols_p, valid_p)
+            if int(ovf) == 0:
+                return child
+    child = _append_promote(table, cols_p, valid_p, nv)
+    threshold = (DEFAULT_COMPACT_THRESHOLD if compact_threshold is None
+                 else compact_threshold)
+    if child.num_segments > threshold:
+        child = compact(child, _bump_version=False)
+    return child
+
+
+def compact(table: IndexedTable, *, reserve: int | None = None,
+            _bump_version: bool = True) -> IndexedTable:
+    """Merge all segments into one fresh arena (bounds probe fan-out after
+    promotions; the paper's cTrie amortizes the same way via trie-node
+    sharing).  The result is reserved at the capacity class of the live
+    row count, so post-compaction appends re-enter the in-place path."""
+    if table.num_segments == 1 and reserve is None:
         return table
     # Host-level: gather valid rows in global (append) order.
     valid_all = np.concatenate([np.asarray(s.valid) for s in table.segments])
@@ -442,5 +866,8 @@ def compact(table: IndexedTable) -> IndexedTable:
     cols = table.gather_rows(rids)
     fresh = create_index(cols, table.schema,
                          rows_per_batch=table.rows_per_batch,
-                         layout=table.layout, slots=table.slots)
-    return dataclasses.replace(fresh, version=table.version + 1)
+                         layout=table.layout, slots=table.slots,
+                         reserve=reserve)
+    version = table.version + 1 if _bump_version else table.version
+    return dataclasses.replace(fresh, version=jnp.asarray(version,
+                                                          jnp.int32))

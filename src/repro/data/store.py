@@ -77,7 +77,7 @@ class ExampleStore:
                                       rows_per_batch=cap)
         else:
             self.table = append(self.table, cols)
-        return self.table.version
+        return int(self.table.version)
 
     # -- reads ---------------------------------------------------------------
     @property
@@ -90,7 +90,7 @@ class ExampleStore:
 
     @property
     def version(self) -> int:
-        return 0 if self.table is None else self.table.version
+        return 0 if self.table is None else int(self.table.version)
 
     def gather_tokens(self, slots) -> jnp.ndarray:
         """[B] slots -> [B, seq_len] tokens (one gather per touched buffer)."""
@@ -114,7 +114,13 @@ class ExampleStore:
                                   max_matches=max_matches)
 
     def index_overhead_bytes(self) -> int:
-        return self.table.index_nbytes() if self.table is not None else 0
+        """Logical index bytes (occupied entries + live-row pointers) —
+        the Fig-11 overhead figure; arena slack is capacity planning, not
+        index overhead (DESIGN.md §4), and is reported separately by
+        ``self.table.index_nbytes()``."""
+        if self.table is None:
+            return 0
+        return int(self.table.index_nbytes(logical=True))
 
     def data_bytes(self) -> int:
         return sum(int(b.size) * 4 for b in self.buffers)

@@ -25,14 +25,16 @@ The two backends are bit-identical (tests/test_mesh_parity.py).
 
 from repro.dist import checkpoint, mesh, runtime, shuffle
 from repro.dist.dtable import (DistributedTable, append_distributed,
-                               choose_join, choose_lookup,
-                               create_distributed, indexed_join_bcast,
-                               indexed_join_shuffle, lookup, lookup_routed)
+                               choose_join, choose_lookup, collect_cols,
+                               compact_distributed, create_distributed,
+                               indexed_join_bcast, indexed_join_shuffle,
+                               lookup, lookup_routed)
 from repro.dist.mesh import Runtime, mesh_runtime, vmap_runtime
 
 __all__ = [
     "DistributedTable", "Runtime", "append_distributed", "checkpoint",
-    "choose_join", "choose_lookup", "create_distributed",
-    "indexed_join_bcast", "indexed_join_shuffle", "lookup", "lookup_routed",
-    "mesh", "mesh_runtime", "runtime", "shuffle", "vmap_runtime",
+    "choose_join", "choose_lookup", "collect_cols", "compact_distributed",
+    "create_distributed", "indexed_join_bcast", "indexed_join_shuffle",
+    "lookup", "lookup_routed", "mesh", "mesh_runtime", "runtime", "shuffle",
+    "vmap_runtime",
 ]

@@ -33,13 +33,20 @@ _META = "meta.json"
 
 
 def save_dtable(path: str, dt: _dtable.DistributedTable):
-    """Persist a dtable: flattened pytree leaves + structural metadata."""
+    """Persist a dtable: flattened pytree leaves + structural metadata.
+
+    MVCC versions and arena fill counters are data *leaves* (DESIGN.md
+    §4), so they ride in ``leaves.npz`` like everything else; the meta
+    copies below are informational (and back-compat for old readers).
+    """
     os.makedirs(path, exist_ok=True)
     leaves = jax.tree_util.tree_leaves(dt)
     np.savez(os.path.join(path, _LEAVES),
              **{f"leaf_{i}": np.asarray(a) for i, a in enumerate(leaves)})
-    meta = {"num_shards": dt.num_shards, "version": dt.version,
-            "table_version": dt.table.version, "num_leaves": len(leaves)}
+    meta = {"num_shards": dt.num_shards,
+            "version": int(np.asarray(dt.version)),
+            "table_version": int(np.asarray(dt.table.version).ravel()[0]),
+            "num_leaves": len(leaves)}
     with open(os.path.join(path, _META), "w") as f:
         json.dump(meta, f)
 
@@ -72,16 +79,11 @@ def restore_dtable(path: str,
             raise ValueError(
                 f"leaf {i}: checkpoint shape {tuple(s.shape)} != template "
                 f"shape {tuple(np.shape(l))}")
-    dt = jax.tree_util.tree_unflatten(
+    # MVCC versions are data leaves (DESIGN.md §4), so unflatten restores
+    # the checkpoint's own versions — no meta surgery needed (a version-0
+    # empty-clone template cannot demote version-3 data).
+    return jax.tree_util.tree_unflatten(
         treedef, [jnp.asarray(a) for a in saved])
-    # MVCC versions are treedef *metadata*, so unflatten stamped the
-    # template's; restore the checkpoint's own (a version-0 empty-clone
-    # template must not demote version-3 data — lineage replay and
-    # VersionVector fencing key on it).
-    table = dataclasses.replace(dt.table,
-                                version=meta.get("table_version",
-                                                 dt.table.version))
-    return dataclasses.replace(dt, table=table, version=meta["version"])
 
 
 def reshard_dtable(dt: _dtable.DistributedTable, num_shards: int, *,
@@ -104,15 +106,6 @@ def reshard_dtable(dt: _dtable.DistributedTable, num_shards: int, *,
     return dataclasses.replace(fresh, version=dt.version)
 
 
-def _collect_cols(dt: _dtable.DistributedTable,
-                  rt: "_mesh.Runtime | None" = None) -> dict:
-    """All valid rows as host columns (shard-major, append order within)."""
-    out = {}
-    mask = None
-    for name in dt.schema.names:
-        vals, valid = _mesh.axis_map(
-            lambda t, _n=name: t.scan_column(_n), rt)(dt.table)
-        if mask is None:
-            mask = np.asarray(valid).reshape(-1)
-        out[name] = np.asarray(vals).reshape(-1)[mask]
-    return out
+# Row collection lives with the dtable now (compact_distributed shares it);
+# kept under the old name for external callers.
+_collect_cols = _dtable.collect_cols

@@ -20,14 +20,22 @@ builds all shards in one vmapped ``make_segment_arrays`` call (the
 overflow-doubling retry stays a host loop, doubling until *every* shard
 fits — bucket counts must agree across shards for the stacked pytree).
 
-MVCC (paper §III-D/E): ``append_distributed`` is the functional append —
-per-shard delta segments, snapshot extension, and a global version bump;
-parent and child dtables coexist and share every parent buffer.
+MVCC (paper §III-D/E): ``append_distributed`` is the functional append.
+Shard planes are **capacity-reserved arenas** (DESIGN.md §4): within
+reserved capacity the delta lands through the same fused in-place ingest
+as the single-table path, axis-mapped per shard — zero pytree shape
+change, so jitted distributed queries stay compile-cached across appends
+under BOTH backends (vmap and shard_map).  Versions (global and
+per-shard) are data leaves for the same reason.  Capacity exhaustion on
+ANY shard promotes every shard to the next class together (the stacked
+pytree needs uniform shapes), and ``compact_distributed`` bounds segment
+fan-out.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 
 import jax
@@ -37,22 +45,29 @@ import numpy as np
 from repro.core import hashindex as hix
 from repro.core import hashing
 from repro.core import snapshot as snap_mod
+from repro.core import table as table_mod
 from repro.core.hashindex import EMPTY_KEY
 from repro.core.pointers import NULL_PTR, PTR_DTYPE
 from repro.core.schema import Schema
-from repro.core.table import IndexedTable, make_segment_arrays, pad_to_batches
+from repro.core.table import (IndexedTable, capacity_class,
+                              make_segment_arrays, pad_to_batches)
 from repro.dist import mesh, shuffle
 
 
-@partial(jax.tree_util.register_dataclass, data_fields=["table"],
-         meta_fields=["num_shards", "version"])
+@partial(jax.tree_util.register_dataclass, data_fields=["table", "version"],
+         meta_fields=["num_shards"])
 @dataclasses.dataclass(frozen=True)
 class DistributedTable:
-    """Shard-stacked Indexed DataFrame: one pytree, leading shard axis."""
+    """Shard-stacked Indexed DataFrame: one pytree, leading shard axis.
+
+    ``version`` is a scalar int32 *data leaf* (DESIGN.md §4): arena
+    appends bump it on-device, so successive dtable versions stay
+    structurally equal and jitted distributed queries keep their compile
+    cache across appends."""
 
     table: IndexedTable   # every array leaf is [num_shards, ...]
+    version: jax.Array    # global MVCC version (paper §III-D), scalar int32
     num_shards: int
-    version: int          # global MVCC version (paper §III-D)
 
     @property
     def schema(self) -> Schema:
@@ -140,6 +155,7 @@ def _build_stacked_segment(shard_cols, shard_valid, heads, schema: Schema, *,
 def create_distributed(cols: dict, schema: Schema, num_shards: int, *,
                        rows_per_batch: int = 4096, layout: str = "row",
                        slots: int = hix.DEFAULT_SLOTS, valid=None,
+                       reserve: int | None = None,
                        rt: mesh.Runtime | None = None) -> DistributedTable:
     """Paper Listing 1 ``createIndex`` at cluster scope: hash-partition the
     dataframe, then build every shard's index in one axis-mapped pass
@@ -148,11 +164,24 @@ def create_distributed(cols: dict, schema: Schema, num_shards: int, *,
     Shard snapshots are built **with flat data**: distributed queries take
     the dtable as a jit argument, so everything the fused pipeline needs
     (probe planes, prev, row data) must live in the stored pytree.
+
+    Every shard's planes are reserved to one common capacity class
+    (DESIGN.md §4) — derived from the worst shard's row count, or from
+    ``reserve`` (per-shard minimum rows; ``0`` = no over-allocation, the
+    pre-arena layout) — so appends within the class run the in-place
+    ingest with zero pytree shape change on every shard at once.
     """
     rt = mesh.resolve(rt).check(num_shards)
     sc, sv, cap = _route_host(cols, schema, num_shards, rows_per_batch,
                               valid)
-    heads = jnp.full((num_shards, cap), NULL_PTR, PTR_DTYPE)
+    reserved = (capacity_class(cap, rows_per_batch) if reserve is None
+                else pad_to_batches(max(cap, int(reserve), 1),
+                                    rows_per_batch))
+    pad = reserved - cap
+    if pad:
+        sc = {k: jnp.pad(v, ((0, 0), (0, pad))) for k, v in sc.items()}
+        sv = jnp.pad(sv, ((0, 0), (0, pad)))
+    heads = jnp.full((num_shards, reserved), NULL_PTR, PTR_DTYPE)
     seg = _build_stacked_segment(sc, sv, heads, schema, row_base=0,
                                  rows_per_batch=rows_per_batch,
                                  layout=layout, slots=slots, rt=rt)
@@ -160,22 +189,94 @@ def create_distributed(cols: dict, schema: Schema, num_shards: int, *,
         (s,), layout, schema=schema, with_data=True), rt)(seg)
     table = IndexedTable(segments=(seg,), snapshot=snap, schema=schema,
                          rows_per_batch=rows_per_batch, layout=layout,
-                         version=0, slots=slots)
-    return DistributedTable(table=table, num_shards=num_shards, version=0)
+                         version=jnp.zeros((num_shards,), jnp.int32),
+                         slots=slots)
+    return DistributedTable(table=table, num_shards=num_shards,
+                            version=jnp.asarray(0, jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _dist_ingest_fn(rt: mesh.Runtime, donate: bool, schema: Schema,
+                    layout: str, rb: int, bucket_counts: tuple, slots: int):
+    """Jitted, axis-mapped arena ingest for one runtime + table structure
+    (cached so repeated appends hit one compile-cache entry).  Works over
+    the DEDUPLICATED tail state — required for the donated variant (XLA
+    rejects the same buffer donated twice) and shared by the non-donated
+    one for a single compile path."""
+
+    def per_shard(state, parent_blocks, cols, valid):
+        return table_mod._ingest_arrays(
+            state, parent_blocks, cols, valid, schema=schema, layout=layout,
+            rb=rb, bucket_counts=bucket_counts, slots=slots)
+
+    mapped = mesh.axis_map(per_shard, rt)
+    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
+
+
+def _dist_arena_ingest(dt: DistributedTable, sc, sv,
+                       rt: mesh.Runtime, donate: bool):
+    """Axis-mapped arena ingest over the stacked table; returns
+    ``(child_table, overflow [s])``."""
+    t = dt.table
+    fn = _dist_ingest_fn(rt, donate, t.schema, t.layout,
+                         t.segments[-1].row_base,
+                         t.snapshot.bucket_counts, t.slots)
+    out, ovf = fn(table_mod._dedup_state(t), t.snapshot.blocks[:-1], sc, sv)
+    return table_mod._reassemble(t, out), ovf
 
 
 def append_distributed(dt: DistributedTable, cols: dict, valid=None,
-                       rt: mesh.Runtime | None = None) -> DistributedTable:
+                       rt: mesh.Runtime | None = None, *,
+                       donate: bool = False,
+                       compact_threshold: int | None = None
+                       ) -> DistributedTable:
     """Functional distributed append -> new version (paper §III-D MVCC).
 
-    Routes the delta to owning shards, probes each shard's parent for head
-    links, builds one delta segment per shard (axis-mapped), and extends
-    each shard's snapshot incrementally.  The parent dtable is untouched —
-    divergent appends coexist, sharing every parent buffer by reference.
+    Routes the delta to owning shards, then lands it through the fused
+    arena ingest (DESIGN.md §4), axis-mapped per shard: each shard probes
+    its parent for head links, writes its bucket/chain planes, and bumps
+    its ``fill`` — zero pytree shape change, so jitted distributed
+    queries stay compile-cached across appends under both backends.  The
+    parent dtable is untouched unless ``donate=True`` (in-place buffer
+    aliasing; the parent becomes unusable).
+
+    If ANY shard would exceed its reserved capacity (or overflow its
+    buckets), every shard promotes together to the next capacity class —
+    one recompile per class — and past ``compact_threshold`` segments the
+    dtable is compacted (``compact_distributed``) to bound probe fan-out.
     """
     rt = mesh.resolve(rt).check(dt.num_shards)
     schema, rpb = dt.schema, dt.rows_per_batch
     sc, sv, cap = _route_host(cols, schema, dt.num_shards, rpb, valid)
+    # per-shard fit: routed rows are left-packed, so counts are sv sums
+    counts = np.asarray(sv).sum(axis=1)
+    tail = dt.table.segments[-1]
+    spare = tail.row_base + tail.capacity - np.asarray(dt.table.snapshot.fill)
+    fits = bool((counts <= spare).all())
+
+    if fits and donate:
+        keys = jnp.where(sv, jnp.asarray(sc[schema.key], jnp.int64),
+                         EMPTY_KEY)
+        ovf = mesh.axis_map(table_mod._arena_fits, rt)(
+            tail.index.bucket_keys, keys, sv)
+        if int(jnp.max(ovf)) == 0:
+            child, _ = _dist_arena_ingest(dt, sc, sv, rt, True)
+            return DistributedTable(table=child, num_shards=dt.num_shards,
+                                    version=dt.version + 1)
+    elif fits:
+        child, ovf = _dist_arena_ingest(dt, sc, sv, rt, False)
+        if int(jnp.max(ovf)) == 0:
+            return DistributedTable(table=child, num_shards=dt.num_shards,
+                                    version=dt.version + 1)
+
+    # promotion: seal every shard's tail, open a next-class arena on all
+    # shards together (uniform shapes across the stacked pytree)
+    new_cap = max(2 * tail.capacity,
+                  capacity_class(max(int(counts.max()), 1), rpb))
+    pad = new_cap - cap
+    if pad:
+        sc = {k: jnp.pad(v, ((0, 0), (0, pad))) for k, v in sc.items()}
+        sv = jnp.pad(sv, ((0, 0), (0, pad)))
     keys = jnp.where(sv, jnp.asarray(sc[schema.key], jnp.int64), EMPTY_KEY)
     heads = mesh.axis_map(lambda t, k: t.probe_latest_ref(k), rt)(dt.table,
                                                                   keys)
@@ -185,12 +286,60 @@ def append_distributed(dt: DistributedTable, cols: dict, valid=None,
                                  slots=dt.slots, rt=rt)
     snap = mesh.axis_map(lambda sn, sg: snap_mod.extend_snapshot(
         sn, sg, schema=schema), rt)(dt.table.snapshot, seg)
-    child = dataclasses.replace(dt.table,
+    table = dataclasses.replace(dt.table,
                                 segments=dt.table.segments + (seg,),
                                 snapshot=snap,
                                 version=dt.table.version + 1)
-    return DistributedTable(table=child, num_shards=dt.num_shards,
-                            version=dt.version + 1)
+    child = DistributedTable(table=table, num_shards=dt.num_shards,
+                             version=dt.version + 1)
+    threshold = (table_mod.DEFAULT_COMPACT_THRESHOLD
+                 if compact_threshold is None else compact_threshold)
+    if child.table.num_segments > threshold:
+        child = compact_distributed(child, rt=rt, _bump_version=False)
+    return child
+
+
+def collect_cols(dt: DistributedTable,
+                 rt: mesh.Runtime | None = None) -> dict:
+    """All valid rows as host columns (shard-major, append order within —
+    per-key MVCC chains keep their newest-first order because a key's rows
+    never span shards)."""
+    out = {}
+    mask = None
+    for name in dt.schema.names:
+        vals, valid = mesh.axis_map(
+            lambda t, _n=name: t.scan_column(_n), rt)(dt.table)
+        if mask is None:
+            mask = np.asarray(valid).reshape(-1)
+        out[name] = np.asarray(vals).reshape(-1)[mask]
+    return out
+
+
+def compact_distributed(dt: DistributedTable, *,
+                        rt: mesh.Runtime | None = None,
+                        rt_out: "mesh.Runtime | None" = None,
+                        reserve: int | None = None,
+                        _bump_version: bool = True) -> DistributedTable:
+    """Merge every shard's segments into one fresh arena (DESIGN.md §4).
+
+    Collection is order-preserving per shard and routing is deterministic
+    (``partition_hash``), so each row lands back on its own shard and
+    per-key chains stay newest-first — lookups are bit-identical before
+    and after.  The result is reserved at the capacity class of the live
+    row count, so post-compaction appends re-enter the in-place path.
+    """
+    cols = collect_cols(dt, rt=rt)
+    fresh = create_distributed(
+        cols, dt.schema, dt.num_shards, rows_per_batch=dt.rows_per_batch,
+        layout=dt.layout, slots=dt.slots, reserve=reserve,
+        rt=rt_out if rt_out is not None else rt)
+    old_tv = int(np.asarray(dt.table.version).ravel()[0])
+    bump = 1 if _bump_version else 0
+    table = dataclasses.replace(
+        fresh.table, version=jnp.full((dt.num_shards,), old_tv + bump,
+                                      jnp.int32))
+    return DistributedTable(table=table, num_shards=dt.num_shards,
+                            version=dt.version + bump)
 
 
 # ---------------------------------------------------------------------------

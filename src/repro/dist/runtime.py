@@ -109,6 +109,9 @@ def fail_shard(dt: _dtable.DistributedTable,
                                          ptrs=kill(b.ptrs, NULL_PTR))
                      for b in t.snapshot.blocks),
         prev=kill(t.snapshot.prev, NULL_PTR),
+        # arena fill -> 0: the dead shard's fused reads mask everything
+        # out (defense in depth on top of the EMPTY/NULL sentinels)
+        fill=kill(t.snapshot.fill, 0),
         data=(None if t.snapshot.data is None
               else jax.tree.map(lambda a: kill(a, 0), t.snapshot.data)))
     table = dataclasses.replace(t, segments=segments, snapshot=snap)
@@ -127,11 +130,12 @@ def rebuild_shard(dt: _dtable.DistributedTable, shard: int,
     disagrees with the live dtable (missed ``record_append``).
     """
     fresh = lineage.replay(dt.num_shards, rt=rt)
-    if fresh.version != dt.version:
+    if int(np.asarray(fresh.version)) != int(np.asarray(dt.version)):
         raise ValueError(
-            f"lineage replays to version {fresh.version} but the dtable is "
-            f"at version {dt.version}; every append_distributed must be "
-            f"paired with Lineage.record_append")
+            f"lineage replays to version {int(np.asarray(fresh.version))} "
+            f"but the dtable is at version {int(np.asarray(dt.version))}; "
+            f"every append_distributed must be paired with "
+            f"Lineage.record_append")
 
     def splice(broken, rebuilt):
         return broken.at[shard].set(rebuilt[shard])

@@ -90,8 +90,8 @@ def _fused_lookup_kernel(*refs, num_segments: int, max_matches: int):
     """One grid step: QUERY_TILE queries against ALL segment index planes.
 
     refs layout: bids, qhi, qlo, then (hi, lo, ptr) per segment (ragged —
-    each segment keeps its own bucket count), then prev, then the two
-    outputs (rows, last).
+    each segment keeps its own bucket count), then prev, then the fill
+    scalar, then the two outputs (rows, last).
 
     Per query j (DESIGN.md §3):
       1. probe the per-segment bucket planes newest -> oldest; the first
@@ -102,19 +102,26 @@ def _fused_lookup_kernel(*refs, num_segments: int, max_matches: int):
          emitting ``max_matches`` row ids newest-first;
       3. record the would-be next pointer so the wrapper can flag truncation.
 
-    Both loops stay branch-free scalar code: the segment loop is unrolled
-    (num_segments is static and small), the chain walk is a fori over
-    ``max_matches`` of one dynamic scalar load from VMEM-resident ``prev``.
+    The head and EVERY chain hop are fill-masked in-kernel (DESIGN.md §4):
+    a pointer into the arena's reserved-but-unwritten lanes truncates the
+    chain right there, exactly like the oracle's per-step mask — masking
+    only the kernel's outputs would let garbage that bounces back below
+    ``fill`` survive.  Both loops stay branch-free scalar code: the
+    segment loop is unrolled (num_segments is static and small), the
+    chain walk is a fori over ``max_matches`` of one dynamic scalar load
+    from VMEM-resident ``prev``.
     """
     bids_ref, qhi_ref, qlo_ref = refs[:3]
     plane_refs = refs[3:3 + 3 * num_segments]
     prev_ref = refs[3 + 3 * num_segments]
+    fill_ref = refs[3 + 3 * num_segments + 1]
     rows_ref, last_ref = refs[-2:]
     null = jnp.array(-1, jnp.int32)
 
     def body(j, _):
         qhi = qhi_ref[j]
         qlo = qlo_ref[j]
+        fill = fill_ref[0]
         head = null
         for s in range(num_segments - 1, -1, -1):     # newest -> oldest
             khi_ref, klo_ref, ptr_ref = plane_refs[3 * s:3 * s + 3]
@@ -125,10 +132,12 @@ def _fused_lookup_kernel(*refs, num_segments: int, max_matches: int):
             match = (row_hi == qhi) & (row_lo == qlo)
             cand = jnp.max(jnp.where(match, row_ptr, null))
             head = jnp.where(head == null, cand, head)
+        head = jnp.where(head < fill, head, null)     # fill-masked head
 
         def walk(m, cur):
             rows_ref[j, m] = cur
             nxt = prev_ref[jnp.maximum(cur, 0)]
+            nxt = jnp.where(nxt < fill, nxt, null)    # fill-masked hop
             return jnp.where(cur >= 0, nxt, null)
 
         last = jax.lax.fori_loop(0, max_matches, walk, head)
@@ -175,16 +184,18 @@ def fused_lookup_tiles(bucket_ids, q_hi, q_lo, snapshot,
         plane_specs += [pl.BlockSpec((nb, slots), lambda i: (0, 0))] * 3
         plane_args += [hi, lo, ptr]
     pspec = pl.BlockSpec((cap,), lambda i: (0,))
+    fspec = pl.BlockSpec((1,), lambda i: (0,))
+    fill = snapshot.fill.astype(jnp.int32).reshape(1)
 
     kernel = functools.partial(_fused_lookup_kernel, num_segments=s,
                                max_matches=max_matches)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[bspec, qspec, qspec, *plane_specs, pspec],
+        in_specs=[bspec, qspec, qspec, *plane_specs, pspec, fspec],
         out_specs=(pl.BlockSpec((QUERY_TILE, max_matches), lambda i: (i, 0)),
                    qspec),
         out_shape=(jax.ShapeDtypeStruct((q, max_matches), jnp.int32),
                    jax.ShapeDtypeStruct((q,), jnp.int32)),
         interpret=interpret,
-    )(bucket_ids, q_hi, q_lo, *plane_args, prev)
+    )(bucket_ids, q_hi, q_lo, *plane_args, prev, fill)

@@ -45,7 +45,12 @@ def fused_probe_ref(bucket_ids, q_hi, q_lo, snapshot):
     hit = cands != NULL
     first = jnp.argmax(hit, axis=0)                   # [Q]
     head = jnp.take_along_axis(cands, first[None], axis=0)[0]
-    return jnp.where(hit.any(axis=0), head, NULL)
+    head = jnp.where(hit.any(axis=0), head, NULL)
+    # fill-masked: an arena tail's reserved-but-unwritten lanes (row ids
+    # >= fill) can never be answered — by construction no bucket entry
+    # points there, but with buffer donation a reserved lane may alias
+    # retired memory, so the mask is the hard guarantee (DESIGN.md §4).
+    return jnp.where(head < snapshot.fill, head, NULL)
 
 
 def fused_lookup_ref(bucket_ids, q_hi, q_lo, snapshot, max_matches: int):
@@ -56,9 +61,11 @@ def fused_lookup_ref(bucket_ids, q_hi, q_lo, snapshot, max_matches: int):
     would-be next row id; >= 0 means truncated)."""
     head = fused_probe_ref(bucket_ids, q_hi, q_lo, snapshot)
     prev = snapshot.prev
+    fill = snapshot.fill
 
     def step(cur, _):
         nxt = jnp.where(cur >= 0, prev[jnp.maximum(cur, 0)], NULL)
+        nxt = jnp.where(nxt < fill, nxt, NULL)    # fill-masked chain walk
         return nxt, cur
 
     last, rows = jax.lax.scan(step, head, None, length=max_matches)

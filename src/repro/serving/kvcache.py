@@ -126,7 +126,7 @@ class PrefixCache:
                                       rows_per_batch=self.rows_per_batch)
         else:
             self.table = append(self.table, cols)
-        return self.table.version
+        return int(self.table.version)
 
     # -- reads -----------------------------------------------------------
     def lookup_prefix(self, tokens: np.ndarray, page: int):

@@ -1,0 +1,144 @@
+"""Property tests (hypothesis / repro.testing shim): the arena write path
+is observationally equivalent to the segment-chain reference.
+
+For random delta sequences, three builds of the same logical table —
+
+  * arena appends (in-place ingest + promotion, DESIGN.md §4),
+  * segment-chain appends (the pre-arena reference path),
+  * either of the above followed by ``compact()``
+
+— must answer every lookup with bit-identical decoded columns and valid
+masks (row ids are representation-dependent: arenas reserve capacity, so
+global row addresses differ; decoded VALUES are the contract).  The same
+holds for the donated arena ingest, and for the distributed table against
+the single-table oracle.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Schema, append, compact, create_index, joins
+
+SCH = Schema.of("k", k="int64", v="float32")
+
+KEYS = st.lists(st.integers(min_value=0, max_value=11), min_size=1,
+                max_size=60)
+
+
+def _cols_from(keys, base):
+    keys = np.asarray(keys, np.int64)
+    return {"k": keys,
+            "v": (np.arange(len(keys), dtype=np.float32) * 0.5
+                  + np.float32(base))}
+
+
+def _lookup_all(t, max_matches=192):
+    q = np.arange(12, dtype=np.int64)
+    cols, valid = joins.indexed_lookup(t, q, max_matches=max_matches)
+    v = np.asarray(valid)
+    return {"valid": v,
+            "v": np.asarray(cols["v"]) * v,
+            "k": np.asarray(cols["k"]) * v}
+
+
+def _assert_same_answers(a, b):
+    np.testing.assert_array_equal(a["valid"], b["valid"])
+    np.testing.assert_array_equal(a["v"], b["v"])       # bit-identical
+    np.testing.assert_array_equal(a["k"], b["k"])
+
+
+@settings(max_examples=20, deadline=None)
+@given(KEYS, st.lists(KEYS, min_size=1, max_size=5))
+def test_property_arena_equals_segment_chain_equals_compacted(base_keys,
+                                                              deltas):
+    base = _cols_from(base_keys, 0)
+    ta = create_index(base, SCH, rows_per_batch=16)
+    ts = create_index(base, SCH, rows_per_batch=16, reserve=0)
+    for i, dk in enumerate(deltas):
+        d = _cols_from(dk, 1000 * (i + 1))
+        ta = append(ta, d, mode="arena")
+        ts = append(ts, d, mode="segment")
+    ans_a, ans_s = _lookup_all(ta), _lookup_all(ts)
+    _assert_same_answers(ans_a, ans_s)
+    _assert_same_answers(ans_a, _lookup_all(compact(ta)))
+    _assert_same_answers(ans_s, _lookup_all(compact(ts)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(KEYS, st.lists(KEYS, min_size=1, max_size=4))
+def test_property_donated_ingest_equals_functional(base_keys, deltas):
+    base = _cols_from(base_keys, 0)
+    ta = create_index(base, SCH, rows_per_batch=16)
+    td = create_index(base, SCH, rows_per_batch=16)
+    for i, dk in enumerate(deltas):
+        d = _cols_from(dk, 1000 * (i + 1))
+        ta = append(ta, d)
+        td = append(td, d, donate=True)
+    _assert_same_answers(_lookup_all(ta), _lookup_all(td))
+    # representations agree leaf-for-leaf, not just answer-for-answer
+    for la, ld in zip(jax.tree_util.tree_leaves(ta),
+                      jax.tree_util.tree_leaves(td)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(ld))
+
+
+@settings(max_examples=8, deadline=None)
+@given(KEYS, st.lists(KEYS, min_size=1, max_size=3))
+def test_property_partial_valid_deltas(base_keys, deltas):
+    """Deltas with invalid lanes: the arena packs valid rows; answers
+    match the reference built from only the valid rows."""
+    rng = np.random.default_rng(len(base_keys))
+    base = _cols_from(base_keys, 0)
+    ta = create_index(base, SCH, rows_per_batch=16)
+    kept = [base]
+    for i, dk in enumerate(deltas):
+        d = _cols_from(dk, 1000 * (i + 1))
+        valid = rng.random(len(dk)) < 0.6
+        ta = append(ta, d, valid=valid)
+        kept.append({k: v[valid] for k, v in d.items()})
+    ks = np.concatenate([c["k"] for c in kept])
+    vs = np.concatenate([c["v"] for c in kept])
+    got, valid = joins.indexed_lookup(ta, np.arange(12, dtype=np.int64),
+                                      max_matches=192)
+    for key in range(12):
+        hits = np.nonzero(ks == key)[0][::-1]
+        n = int(valid[key].sum())
+        assert n == len(hits)
+        np.testing.assert_array_equal(np.asarray(got["v"][key][:n]),
+                                      vs[hits])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=40), min_size=8,
+                max_size=60),
+       st.lists(st.lists(st.integers(min_value=0, max_value=40),
+                         min_size=1, max_size=16),
+                min_size=1, max_size=3))
+def test_property_distributed_matches_single_table(base_keys, deltas):
+    """Arena appends distribute: the dtable answers the same multiset of
+    rows as the single-table oracle after every delta, and compacting the
+    dtable changes nothing."""
+    dist = pytest.importorskip("repro.dist")
+    base = _cols_from(base_keys, 0)
+    dt = dist.create_distributed(base, SCH, 4, rows_per_batch=16)
+    t = create_index(base, SCH, rows_per_batch=16)
+    for i, dk in enumerate(deltas):
+        d = _cols_from(dk, 1000 * (i + 1))
+        dt = dist.append_distributed(dt, d)
+        t = append(t, d)
+    q = np.arange(41, dtype=np.int64)
+    gd, vd, _ = dist.lookup(dt, q, max_matches=128)
+    gs, vs = joins.indexed_lookup(t, q, max_matches=128)
+    np.testing.assert_array_equal(np.asarray(vd).sum(1),
+                                  np.asarray(vs).sum(1))
+    for i in range(len(q)):
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(gd["v"][i])[np.asarray(vd[i])]),
+            np.sort(np.asarray(gs["v"][i])[np.asarray(vs[i])]))
+    dc = dist.compact_distributed(dt)
+    gc, vc, _ = dist.lookup(dc, q, max_matches=128)
+    np.testing.assert_array_equal(np.asarray(vd), np.asarray(vc))
+    np.testing.assert_array_equal(np.asarray(gd["v"]) * np.asarray(vd),
+                                  np.asarray(gc["v"]) * np.asarray(vc))

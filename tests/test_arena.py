@@ -1,0 +1,376 @@
+"""Capacity-reserved arena write path (ISSUE 4 / DESIGN.md §4).
+
+The acceptance contract this file pins:
+
+1. ≥10 successive same-class appends cause ZERO retraces of the fused
+   read entry points (``fused_lookup`` / ``indexed_join`` call sites) —
+   under the single table AND under both dist backends (the shard_map
+   side lives in test_mesh_parity.py, which needs a multi-device mesh).
+2. Exactly one compile per capacity class: promotion (capacity
+   exhaustion) retraces a read site once, then the next class's appends
+   are free again.
+3. The donated ingest consumes the parent and produces bit-identical
+   lookups to the non-donated path.
+4. Fill-masking: reserved-but-unwritten lanes can never be decoded, even
+   when presented as forged row ids.
+5. Threshold compaction bounds segment fan-out under repeated promotion.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Schema, append, compact, create_index, joins
+from repro.core.pointers import NULL_PTR
+from repro.core.table import DEFAULT_COMPACT_THRESHOLD, capacity_class
+
+SCH = Schema.of("k", k="int64", v="float32")
+
+
+def _cols(rng, n, key_range=60, tag=0.0):
+    return {"k": rng.integers(0, key_range, n).astype(np.int64),
+            "v": (rng.random(n) + tag).astype(np.float32)}
+
+
+# --- capacity classes ------------------------------------------------------
+
+def test_capacity_class_policy():
+    assert capacity_class(1, 64) == 64             # one batch covers 2*1
+    assert capacity_class(100, 64) == 256          # 2*100 -> 4 batches
+    assert capacity_class(64, 64) == 128
+    assert capacity_class(4096, 4096) == 8192
+    # classes are powers of two in batches: promotion is geometric
+    for n in (1, 7, 100, 5000):
+        c = capacity_class(n, 64)
+        assert c % 64 == 0 and ((c // 64) & (c // 64 - 1)) == 0
+        assert c >= 2 * n
+
+
+def test_create_reserves_capacity_and_tracks_fill(rng):
+    t = create_index(_cols(rng, 300), SCH, rows_per_batch=64)
+    assert t.capacity == capacity_class(300, 64)
+    assert int(t.fill) == 300
+    assert t.spare_capacity() == t.capacity - 300
+    # reserve=0 reproduces the pre-arena exact-fit layout
+    t0 = create_index(_cols(rng, 300), SCH, rows_per_batch=64, reserve=0)
+    assert t0.capacity == 320 and t0.spare_capacity() == 20
+
+
+# --- the acceptance tracing counts ----------------------------------------
+
+def test_ten_appends_zero_retraces_fused_read_sites(rng):
+    """THE tentpole pin: ≥10 successive same-class appends retrace
+    NEITHER the fused_lookup nor the indexed_join call site."""
+    lookup_traces = {"n": 0}
+    join_traces = {"n": 0}
+
+    @jax.jit
+    def f_lookup(tbl, qq):
+        lookup_traces["n"] += 1
+        rows, _ = tbl.lookup(qq, 4)
+        return rows
+
+    @jax.jit
+    def f_join(tbl, pc):
+        join_traces["n"] += 1
+        return joins.indexed_join(tbl, pc, "pk", max_matches=4)
+
+    t = create_index(_cols(rng, 300), SCH,
+                     rows_per_batch=64).with_flat_data()
+    q = _cols(rng, 32)["k"]
+    pc = {"pk": q, "tag": np.arange(32, dtype=np.int32)}
+    f_lookup(t, q)
+    f_join(t, pc)
+    versions = [t]
+    for i in range(10):
+        t = append(t, _cols(rng, 17, tag=float(i)))
+        versions.append(t)
+        r = f_lookup(t, q)
+        f_join(t, pc)
+        np.testing.assert_array_equal(np.asarray(r),
+                                      np.asarray(t.lookup_ref(q, 4)[0]))
+    assert lookup_traces["n"] == 1
+    assert join_traces["n"] == 1
+    # MVCC: every intermediate version still answers (and still cached)
+    for tv in versions:
+        f_lookup(tv, q)
+    assert lookup_traces["n"] == 1
+
+
+def test_one_compile_per_capacity_class(rng):
+    """Promotion to the next class retraces a read site exactly once;
+    appends inside the new class are free again."""
+    traces = {"n": 0}
+
+    @jax.jit
+    def f(tbl, qq):
+        traces["n"] += 1
+        rows, _ = tbl.lookup(qq, 4)
+        return rows
+
+    t = create_index(_cols(rng, 100), SCH, rows_per_batch=64)
+    q = _cols(rng, 32)["k"]
+    f(t, q)
+    assert traces["n"] == 1
+
+    spare = t.spare_capacity()
+    t = append(t, _cols(rng, spare + 1))    # exhausts the class -> promote
+    assert t.num_segments == 2
+    f(t, q)
+    assert traces["n"] == 2                 # exactly one new compile
+    for i in range(10):                     # ...amortized over the class
+        t = append(t, _cols(rng, 9))
+        f(t, q)
+    assert traces["n"] == 2
+
+
+def test_vmap_dist_backend_zero_retraces(rng):
+    """The dist acceptance half on the default (vmap) backend: ≥10
+    appends, zero retraces of the jitted distributed lookup."""
+    dist = pytest.importorskip("repro.dist")
+    cols = _cols(rng, 600, key_range=200)
+    dt = dist.create_distributed(cols, SCH, 4, rows_per_batch=64)
+    traces = {"n": 0}
+
+    @jax.jit
+    def f(d, qq):
+        traces["n"] += 1
+        _, valid, _ = dist.lookup(d, qq, max_matches=4)
+        return valid
+
+    q = jnp.asarray(_cols(rng, 24, key_range=200)["k"])
+    f(dt, q)
+    for i in range(10):
+        dt = dist.append_distributed(dt, _cols(rng, 11, key_range=200))
+        f(dt, q)
+    assert traces["n"] == 1
+    assert int(dt.version) == 10
+
+
+# --- donation --------------------------------------------------------------
+
+def test_donated_append_bit_identical_and_consumes_parent(rng):
+    t1 = create_index(_cols(rng, 300), SCH, rows_per_batch=64)
+    t2 = create_index(_cols(np.random.default_rng(0), 300), SCH,
+                      rows_per_batch=64)
+    # same delta through both paths -> bit-identical children
+    rng_d = np.random.default_rng(1)
+    delta = _cols(rng_d, 23)
+    a = append(t1, delta)
+    b = append(t2, delta, donate=True)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # the donated parent is consumed (its buffers were aliased away)
+    with pytest.raises(RuntimeError):
+        jax.block_until_ready(t2.lookup(jnp.asarray([1], jnp.int64), 2)[0])
+    # the non-donated parent is alive and unchanged
+    jax.block_until_ready(t1.lookup(jnp.asarray([1], jnp.int64), 2)[0])
+
+
+def test_donated_append_chain(rng):
+    """A write-hot stream: chained donated appends stay correct."""
+    all_cols = [_cols(rng, 200)]
+    t = create_index(all_cols[0], SCH, rows_per_batch=64)
+    for i in range(12):
+        d = _cols(rng, 13, tag=float(i))
+        all_cols.append(d)
+        t = append(t, d, donate=True)
+    ks = np.concatenate([c["k"] for c in all_cols])
+    vs = np.concatenate([c["v"] for c in all_cols])
+    got, valid = joins.indexed_lookup(t, np.arange(60, dtype=np.int64),
+                                      max_matches=128)
+    for key in range(60):
+        hits = np.nonzero(ks == key)[0][::-1]
+        n = int(valid[key].sum())
+        assert n == len(hits)
+        np.testing.assert_allclose(np.asarray(got["v"][key][:n]), vs[hits])
+
+
+# --- fill masking ----------------------------------------------------------
+
+def test_fill_masks_reserved_lanes(rng):
+    """Forged row ids pointing into reserved-but-unwritten lanes decode
+    to zeros/misses on every path (the donated-aliasing defense)."""
+    t = create_index(_cols(rng, 100), SCH, rows_per_batch=64)
+    fill, cap = int(t.fill), t.capacity
+    assert fill < cap
+    forged = jnp.asarray([fill, cap - 1, fill - 1, 0], jnp.int32)
+    got = t.gather_rows(forged)
+    # the reserved lanes decode to exact zeros; written lanes decode rows
+    assert float(jnp.abs(got["v"][0])) == 0.0
+    assert float(jnp.abs(got["v"][1])) == 0.0
+    assert int(got["k"][0]) == 0 and int(got["k"][1]) == 0
+    np.testing.assert_array_equal(np.asarray(t.gather_prev(forged[:2])),
+                                  [NULL_PTR, NULL_PTR])
+    # lookup can never emit a row id >= fill
+    rows, _ = t.lookup(jnp.asarray(_cols(rng, 50)["k"], jnp.int64), 8)
+    assert int(jnp.max(rows)) < fill
+
+
+def test_fill_mask_inside_kernel_walk(rng):
+    """The donation-alias nightmare, forged by hand: a head pointer into
+    reserved space and a reserved prev lane that bounces back to a written
+    row.  The kernel must truncate at the reserved hop exactly like the
+    oracle — masking only the kernel outputs would let the bounced-back
+    (in-range!) garbage survive."""
+    import dataclasses as dc
+    from repro.kernels import ops
+    t = create_index(_cols(rng, 100), SCH, rows_per_batch=64)
+    fill = int(t.fill)
+    snap = t.snapshot
+    blk = snap.blocks[-1]
+    bkeys = np.asarray(t.segments[0].index.bucket_keys)
+    bptrs = np.asarray(blk.ptrs).copy()
+    i, j = map(int, np.argwhere(bptrs >= 0)[0])
+    victim_key = int(bkeys[i, j])
+    victim_ptr = int(bptrs[i, j])
+    prev = np.asarray(snap.prev).copy()
+    # case A: the victim's chain hops into reserved space, which points
+    # back at row 0 (a perfectly in-range id)
+    prev[victim_ptr] = fill + 1
+    prev[fill + 1] = 0
+    snap_a = dc.replace(snap, prev=jnp.asarray(prev))
+    q = jnp.asarray([victim_key], jnp.int64)
+    for use_kernel in (False, True):
+        rows, _ = ops.fused_lookup(q, snap_a, max_matches=4,
+                                   use_kernel=use_kernel, interpret=True)
+        rows = np.asarray(rows)[0]
+        assert rows[0] == victim_ptr, (use_kernel, rows)
+        assert (rows[1:] == NULL_PTR).all(), (use_kernel, rows)
+    # case B: the head pointer itself is forged into reserved space
+    bptrs[i, j] = fill + 1
+    snap_b = dc.replace(snap, blocks=snap.blocks[:-1]
+                        + (dc.replace(blk, ptrs=jnp.asarray(bptrs)),))
+    for use_kernel in (False, True):
+        rows, _ = ops.fused_lookup(q, snap_b, max_matches=4,
+                                   use_kernel=use_kernel, interpret=True)
+        assert (np.asarray(rows)[0] == NULL_PTR).all(), use_kernel
+
+
+def test_promotion_with_sparse_valid_delta(rng):
+    """A mostly-invalid delta whose raw lane count exceeds its valid-row
+    capacity class still promotes cleanly (the packed rows are trimmed to
+    their class before padding)."""
+    t = create_index(_cols(rng, 100), SCH, rows_per_batch=64, reserve=0)
+    spare = t.spare_capacity()
+    lanes = 1000
+    valid = np.zeros(lanes, bool)
+    valid[::7] = True                       # sparse, > spare valid rows
+    nv = int(valid.sum())
+    assert nv > spare
+    d = {"k": np.arange(lanes, dtype=np.int64) + 10_000,
+         "v": np.arange(lanes, dtype=np.float32)}
+    t2 = append(t, d, valid=valid)
+    assert int(t2.num_rows()) == 100 + nv
+    got, v = joins.indexed_lookup(
+        t2, np.asarray([10_000, 10_007, 10_001], np.int64), max_matches=2)
+    np.testing.assert_array_equal(np.asarray(v).sum(1), [1, 1, 0])
+    np.testing.assert_array_equal(np.asarray(got["v"][:2, 0]), [0.0, 7.0])
+
+
+def test_logical_nbytes_not_inflated_when_shard_stacked(rng):
+    """data_nbytes(logical=True) on a shard-stacked table counts each
+    valid row once (per-row bytes must not absorb the shard axis)."""
+    dist = pytest.importorskip("repro.dist")
+    cols = _cols(rng, 400, key_range=100)
+    dt = dist.create_distributed(cols, SCH, 4, rows_per_batch=64)
+    assert int(dt.table.data_nbytes(logical=True)) \
+        == 400 * SCH.width_words * 4
+
+
+def test_fill_is_a_leaf_not_structure(rng):
+    """fill/version ride as data leaves: same treedef across versions."""
+    t = create_index(_cols(rng, 100), SCH, rows_per_batch=64)
+    t2 = append(t, _cols(rng, 10))
+    assert (jax.tree_util.tree_structure(t)
+            == jax.tree_util.tree_structure(t2))
+    assert int(t2.fill) == int(t.fill) + 10
+    assert int(t2.version) == int(t.version) + 1
+
+
+# --- promotion + threshold compaction --------------------------------------
+
+def test_promotion_grows_geometrically(rng):
+    t = create_index(_cols(rng, 100), SCH, rows_per_batch=64)
+    caps = [t.capacity]
+    for _ in range(3):
+        t = append(t, _cols(rng, t.spare_capacity() + 1))
+        caps.append(t.capacity)
+    # each promotion at least doubles the tail class
+    tails = [c2 - c1 for c1, c2 in zip(caps, caps[1:])]
+    for a, b in zip(tails, tails[1:]):
+        assert b >= 2 * a or b >= caps[0]
+
+
+def test_threshold_compaction_bounds_fanout(rng):
+    """Segment growth past the threshold triggers compaction; lookups are
+    preserved across it."""
+    all_cols = [_cols(rng, 40, key_range=12)]
+    t = create_index(all_cols[0], SCH, rows_per_batch=16, reserve=0)
+    for i in range(12):
+        d = _cols(rng, 20, key_range=12)
+        all_cols.append(d)
+        t = append(t, d, mode="segment", compact_threshold=3)
+        assert t.num_segments <= 4          # threshold + the fresh delta
+    ks = np.concatenate([c["k"] for c in all_cols])
+    vs = np.concatenate([c["v"] for c in all_cols])
+    got, valid = joins.indexed_lookup(t, np.arange(12, dtype=np.int64),
+                                      max_matches=512)
+    for key in range(12):
+        hits = np.nonzero(ks == key)[0][::-1]
+        n = int(valid[key].sum())
+        assert n == len(hits)
+        np.testing.assert_allclose(np.asarray(got["v"][key][:n]), vs[hits])
+    assert DEFAULT_COMPACT_THRESHOLD >= 3   # the default is no tighter
+
+
+def test_arena_promotion_trips_threshold(rng):
+    """Arena-path promotions count toward the threshold too: a table that
+    keeps exhausting its class gets compacted back to one segment."""
+    n0 = 100
+    t = create_index({"k": np.arange(n0, dtype=np.int64),
+                      "v": np.zeros(n0, np.float32)}, SCH,
+                     rows_per_batch=64, reserve=0)
+    total = n0
+    for i in range(6):
+        nd = t.spare_capacity() + 1         # always exhausts the class
+        d = {"k": np.arange(total, total + nd, dtype=np.int64),
+             "v": np.full(nd, float(i + 1), np.float32)}
+        t = append(t, d, compact_threshold=2)
+        total += nd
+        assert t.num_segments <= 3          # threshold + the fresh tail
+    assert int(t.num_rows()) == total
+    got, valid = joins.indexed_lookup(
+        t, np.asarray([0, n0, total - 1, total], np.int64), max_matches=2)
+    np.testing.assert_array_equal(np.asarray(valid).sum(1), [1, 1, 1, 0])
+
+
+def test_compact_returns_reserved_arena(rng):
+    t = create_index(_cols(rng, 100), SCH, rows_per_batch=64, reserve=0)
+    for _ in range(3):
+        t = append(t, _cols(rng, 30), mode="segment")
+    tc = compact(t)
+    assert tc.num_segments == 1
+    assert tc.spare_capacity() > 0          # compaction re-reserves
+    t2 = append(tc, _cols(rng, 10))         # ...so appends are in-place
+    assert t2.num_segments == 1
+    assert (jax.tree_util.tree_structure(t2)
+            == jax.tree_util.tree_structure(tc))
+
+
+# --- memory accounting ------------------------------------------------------
+
+def test_logical_vs_reserved_nbytes(rng):
+    t = create_index(_cols(rng, 300), SCH, rows_per_batch=64)
+    res_d, log_d = int(t.data_nbytes()), int(t.data_nbytes(logical=True))
+    res_i, log_i = int(t.index_nbytes()), int(t.index_nbytes(logical=True))
+    # logical counts valid rows only; reserved counts the arena planes
+    assert log_d == 300 * SCH.width_words * 4
+    assert res_d == t.capacity * SCH.width_words * 4
+    assert log_d < res_d and log_i < res_i
+    # appends grow logical bytes but not reserved bytes (same planes)
+    t2 = append(t, _cols(rng, 50))
+    assert int(t2.data_nbytes()) == res_d
+    assert int(t2.data_nbytes(logical=True)) == 350 * SCH.width_words * 4

@@ -20,18 +20,22 @@ SCH = Schema.of("k", k="int64", v="float32", tag="int32")
 
 
 def _table(rng, n_base, n_appends, layout, key_range=60, rows_per_batch=64,
-           append_rows=37):
+           append_rows=37, mode="segment"):
+    """``mode="segment"`` (default here) grows one delta segment per
+    append — the multi-segment machinery these sweeps exercise;
+    ``mode="arena"`` lands appends in the reserved tail (DESIGN.md §4)."""
     cols = {"k": rng.integers(0, key_range, n_base).astype(np.int64),
             "v": rng.random(n_base).astype(np.float32),
             "tag": np.arange(n_base, dtype=np.int32)}
-    t = create_index(cols, SCH, rows_per_batch=rows_per_batch, layout=layout)
+    t = create_index(cols, SCH, rows_per_batch=rows_per_batch, layout=layout,
+                     reserve=0 if mode == "segment" else None)
     for i in range(n_appends):
         extra = {"k": rng.integers(0, key_range, append_rows)
                  .astype(np.int64),
                  "v": rng.random(append_rows).astype(np.float32),
                  "tag": np.arange(append_rows, dtype=np.int32)
                  + 1000 * (i + 1)}
-        t = append(t, extra)
+        t = append(t, extra, mode=mode)
     return t
 
 
@@ -48,10 +52,16 @@ def _queries(rng, key_range):
 
 @pytest.mark.parametrize("layout", ["row", "columnar"])
 @pytest.mark.parametrize("n_appends", [0, 1, 4, 15])
-def test_fused_lookup_parity_sweep(rng, layout, n_appends):
-    """Fused row ids are bit-identical to the segment-looped reference."""
-    t = _table(rng, 300, n_appends, layout)
-    assert t.num_segments == n_appends + 1
+@pytest.mark.parametrize("mode", ["segment", "arena"])
+def test_fused_lookup_parity_sweep(rng, layout, n_appends, mode):
+    """Fused row ids are bit-identical to the segment-looped reference —
+    on the growing segment chain AND on arena tables (whose appends land
+    in-place in the reserved tail; compile-cache tests in test_arena.py)."""
+    t = _table(rng, 300, n_appends, layout, mode=mode)
+    if mode == "segment":
+        assert t.num_segments == n_appends + 1
+    else:
+        assert t.num_segments == 1   # every append fit the reserved tail
     q = _queries(rng, 60)
     for mm in (1, 4, 8):
         rf, tf = t.lookup(q, mm)
@@ -137,7 +147,7 @@ def test_snapshot_append_reuses_parent_blocks(rng):
     fv1 = t.snapshot
     t2 = append(t, {"k": np.array([1, 2], np.int64),
                     "v": np.array([0.5, 0.7], np.float32),
-                    "tag": np.array([7, 8], np.int32)})
+                    "tag": np.array([7, 8], np.int32)}, mode="segment")
     fv2 = t2.snapshot
     assert fv2 is t2.flat_view()
     assert len(fv2.blocks) == len(fv1.blocks) + 1
@@ -180,7 +190,7 @@ def test_flatview_mixed_bucket_counts(rng):
     t = create_index(cols, SCH, rows_per_batch=256)
     t = append(t, {"k": rng.integers(0, 5000, 10).astype(np.int64),
                    "v": rng.random(10).astype(np.float32),
-                   "tag": np.arange(10, dtype=np.int32)})
+                   "tag": np.arange(10, dtype=np.int32)}, mode="segment")
     fv = t.flat_view()
     assert len(set(fv.bucket_counts)) > 1  # genuinely mixed
     q = np.concatenate([cols["k"][:50],

@@ -110,10 +110,9 @@ def test_jit_zero_ingraph_rebuilds_across_appends(rng):
                                           np.asarray(cols_r[name]))
 
 
-def test_compile_cache_structurally_equal_append_no_retrace(rng):
-    """Divergent same-shape appends produce structurally equal tables
-    (same treedef: same bucket counts, version, shapes) — the second call
-    must hit the first's compile-cache entry, not retrace."""
+def test_compile_cache_arena_append_no_retrace(rng):
+    """Arena appends (DESIGN.md §4) change NO pytree structure — children
+    and divergent siblings all hit the parent's compile-cache entry."""
     traces = {"n": 0}
 
     @jax.jit
@@ -133,6 +132,41 @@ def test_compile_cache_structurally_equal_append_no_retrace(rng):
 
     t2a = append(t, _delta([1, 2, 3, 4]))
     t2b = append(t, _delta([30, 31, 32, 33]))  # divergent, same shapes
+    r_a = f(t2a, q)
+    r_b = f(t2b, q)
+    f(t2a, q)
+    assert traces["n"] == 1                 # zero retraces across appends
+
+    np.testing.assert_array_equal(np.asarray(r_a),
+                                  np.asarray(t2a.lookup_ref(q, 4)[0]))
+    np.testing.assert_array_equal(np.asarray(r_b),
+                                  np.asarray(t2b.lookup_ref(q, 4)[0]))
+
+
+def test_compile_cache_structurally_equal_append_no_retrace(rng):
+    """Segment-chain appends DO grow the pytree (one retrace), but
+    divergent same-shape appends stay structurally equal — the second
+    sibling must hit the first's compile-cache entry (the PR-2 contract,
+    kept on the reference write path)."""
+    traces = {"n": 0}
+
+    @jax.jit
+    def f(tbl, qq):
+        traces["n"] += 1                    # bumps only while tracing
+        rows, _ = tbl.lookup(qq, 4)
+        return rows
+
+    t = create_index(_cols(rng, 300), SCH, rows_per_batch=64,
+                     reserve=0).with_flat_data()
+    q = _cols(rng, 32)["k"]
+
+    f(t, q)
+    assert traces["n"] == 1
+    f(t, q)
+    assert traces["n"] == 1                 # same table: cached
+
+    t2a = append(t, _delta([1, 2, 3, 4]), mode="segment")
+    t2b = append(t, _delta([30, 31, 32, 33]), mode="segment")
     r_a = f(t2a, q)
     assert traces["n"] == 2                 # new structure: one retrace
     r_b = f(t2b, q)
