@@ -34,6 +34,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import Report, powerlaw_keys, timeit
+from repro import IndexedFrame
 from repro.core import Schema, append, create_index, joins
 
 SCH = Schema.of("k", k="int64", v="float32", tag="int32")
@@ -97,6 +98,13 @@ def run(quick: bool = True):
             fused_full_t = timeit(fused_full, q, reps=3, warmup=1)
             ref_full_t = timeit(ref_full, q, reps=3, warmup=1)
 
+            # the public facade dispatches onto the same fused path —
+            # its overhead must be noise (ISSUE 5: zero-cost seam)
+            fr = IndexedFrame(data=t)
+            frame_full = lambda qq: fr.lookup(
+                qq, max_matches=MAX_MATCHES)[0]["v"]
+            frame_full_t = timeit(frame_full, q, reps=3, warmup=1)
+
             speedup = ref_t["median_s"] / fused_t["median_s"]
             speedup_full = (ref_full_t["median_s"]
                             / fused_full_t["median_s"])
@@ -108,6 +116,9 @@ def run(quick: bool = True):
                        fused_full_s=fused_full_t["median_s"],
                        ref_full_s=ref_full_t["median_s"],
                        speedup_full=speedup_full,
+                       frame_full_s=frame_full_t["median_s"],
+                       facade_overhead=(frame_full_t["median_s"]
+                                        / fused_full_t["median_s"]),
                        flat_build_s=flat_build_s,
                        flat_extra_bytes=fv.nbytes())
             bench_rows.append(row)

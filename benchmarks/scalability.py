@@ -28,6 +28,7 @@ import jax
 import numpy as np
 
 from repro.core import Schema
+from repro.core.planner import Planner
 from benchmarks.common import Report, powerlaw_keys, timeit
 
 SCH = Schema.of("k", k="int64", v="float32")
@@ -104,12 +105,15 @@ def _mesh_worker(quick: bool):
         tb = timeit(jb, dt, q_flat, reps=5)["median_s"]
         tr = timeit(jr, dt, q_sharded, reps=5)["median_s"]
         dropped = int(np.asarray(jr(dt, q_sharded)[3]).sum())
+        phys = Planner().physical_lookup(dt, total_q)
         rows.append({"label": f"mesh devices={d}",
                      "devices": d, "total_queries": total_q,
                      "bcast_ms": tb * 1e3, "routed_ms": tr * 1e3,
                      "routed_speedup": tb / tr,
                      "routed_capacity": cap, "routed_dropped": dropped,
-                     "planner": dist.choose_lookup(dt, total_q)})
+                     "planner": ("routed" if phys.kind == "RoutedLookup"
+                                 else "bcast"),
+                     "planner_rule": phys.reason})
     print("MESH_SWEEP_JSON " + json.dumps(rows), flush=True)
 
 

@@ -12,17 +12,25 @@ Measured across write paths (DESIGN.md §4):
                        extension).
 * ``create``         — full createIndex over the delta alone.
 
+Plus the facade's write-hot-stream amortization (ISSUE 5 satellite):
+``frame_seq`` appends N deltas one ``IndexedFrame.append`` at a time (N
+``_arena_fits`` pre-flights + N ``int(fill)`` host round-trips + N ingest
+launches); ``frame_batched`` hands the same N deltas as ONE list —
+coalesced host-side, one round-trip, one launch, one version.
+
 Batch sizes mirror Fig 5's sweep.  Results merge into
 ``BENCH_append.json`` at the repo root (shared with Fig 9).
 """
 
 import numpy as np
 
+from repro import IndexedFrame
 from repro.core import Schema, append, create_index
 from benchmarks.common import Report, timeit
 from benchmarks.append_read_latency import merge_artifact
 
 SCH = Schema.of("k", k="int64", v="float32")
+STREAM_DELTAS = 8
 
 
 def run(quick: bool = True):
@@ -59,7 +67,32 @@ def run(quick: bool = True):
                                                rows_per_batch=4096),
                           reps=3)
 
+        # facade stream: N deltas, sequential vs coalesced-list append
+        chunk = max(rows // STREAM_DELTAS, 1)
+        deltas = [{"k": rng.integers(0, base_n, chunk).astype(np.int64),
+                   "v": rng.random(chunk).astype(np.float32)}
+                  for _ in range(STREAM_DELTAS)]
+        stream_total = STREAM_DELTAS * chunk
+        fr0 = IndexedFrame.from_columns(cols, SCH, rows_per_batch=4096,
+                                        reserve=base_n + stream_rows)
+
+        def frame_seq():
+            f = fr0
+            for d in deltas:
+                f = f.append(d)
+            return f
+
+        t_frame_seq = timeit(frame_seq, reps=3)
+        t_frame_batched = timeit(lambda: fr0.append(deltas), reps=3)
+
         row = dict(rows=rows,
+                   stream_deltas=STREAM_DELTAS,
+                   frame_seq_rows_per_s=(stream_total
+                                         / t_frame_seq["median_s"]),
+                   frame_batched_rows_per_s=(stream_total
+                                             / t_frame_batched["median_s"]),
+                   batched_vs_seq=(t_frame_seq["median_s"]
+                                   / t_frame_batched["median_s"]),
                    arena_rows_per_s=rows / t_arena["median_s"],
                    arena_donated_rows_per_s=rows / t_donate["median_s"],
                    segment_rows_per_s=rows / t_segment["median_s"],

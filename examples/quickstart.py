@@ -2,70 +2,92 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Mirrors the paper's Listing 1 (createIndex / cacheIndex / getRows /
-appendRows / join) on the JAX implementation.
+Paper Listing 1 (createIndex / cacheIndex / getRows / appendRows / join)
+on the ONE public object — ``repro.IndexedFrame`` — which fronts both
+the single-partition and the hash-partitioned backend and routes every
+read through the planner's physical-operator selection (DESIGN.md §11).
 """
 
 import numpy as np
 
-from repro.core import Schema, append, create_index, joins
-from repro.core.planner import Col, Eq, Filter, Join, Lit, Planner, Relation
-from repro.dist import create_distributed, indexed_join_bcast, lookup
+from repro import IndexedFrame
+from repro.core.planner import Col, Eq, Lit
 
 rng = np.random.default_rng(0)
 
 # -- 1. createIndex: build an indexed dataframe over a keyed table ---------
 print("== createIndex ==")
+from repro.core import Schema  # schemas are shared by both backends
+
 schema = Schema.of("user_id", user_id="int64", score="float32",
                    country="int32")
 users = {"user_id": rng.integers(0, 10_000, 50_000).astype(np.int64),
          "score": rng.random(50_000).astype(np.float32),
          "country": rng.integers(0, 200, 50_000).astype(np.int32)}
-df = create_index(users, schema, rows_per_batch=4096)
+df = IndexedFrame.from_columns(users, schema, rows_per_batch=4096)
 print(f"indexed {int(df.num_rows())} rows; index overhead "
       f"{df.index_nbytes() / df.data_nbytes():.1%} of data")
 
 # -- 2. point lookup (getRows) ----------------------------------------------
 print("\n== point lookup ==")
 key = int(users["user_id"][0])
-rows, valid = joins.indexed_lookup(df, np.asarray([key]), max_matches=32)
+rows, valid = df.lookup(np.asarray([key]), max_matches=32)
 n = int(valid[0].sum())
 print(f"user {key}: {n} rows, newest score {float(rows['score'][0, 0]):.3f}")
 
 # -- 3. appendRows: fine-grained MVCC append --------------------------------
 print("\n== appendRows (MVCC) ==")
-df2 = append(df, {"user_id": np.asarray([key], np.int64),
-                  "score": np.asarray([9.99], np.float32),
-                  "country": np.asarray([42], np.int32)})
-rows2, valid2 = joins.indexed_lookup(df2, np.asarray([key]), max_matches=32)
+df2 = df.append({"user_id": np.asarray([key], np.int64),
+                 "score": np.asarray([9.99], np.float32),
+                 "country": np.asarray([42], np.int32)})
+rows2, valid2 = df2.lookup(np.asarray([key]), max_matches=32)
 print(f"v{df2.version}: {int(valid2[0].sum())} rows "
       f"(newest score {float(rows2['score'][0, 0]):.2f}); "
       f"parent v{df.version} still has {n} — divergent versions coexist")
+
+# a LIST of deltas coalesces into one fused ingest: one host round-trip,
+# one version bump, chains bit-identical to appending them one by one
+deltas = [{"user_id": rng.integers(0, 10_000, 256).astype(np.int64),
+           "score": rng.random(256).astype(np.float32),
+           "country": rng.integers(0, 200, 256).astype(np.int32)}
+          for _ in range(4)]
+df3 = df2.append(deltas)
+print(f"coalesced 4 deltas -> one append, v{df3.version}")
 
 # -- 4. indexed join ---------------------------------------------------------
 print("\n== indexed join ==")
 events = {"user_id": rng.choice(users["user_id"], 1000).astype(np.int64),
           "event": np.arange(1000, dtype=np.int32)}
-bcols, pcols, valid = joins.indexed_join(df2, events, "user_id",
-                                         max_matches=8)
+bcols, pcols, valid = df3.join(events, "user_id", max_matches=8)
 print(f"join matched {int(np.asarray(valid).sum())} (event, user) pairs")
 
-# -- 5. the planner picks indexed operators (Catalyst analog) ----------------
+# -- 5. the planner picks the physical operator (Catalyst analog) ------------
 print("\n== planner ==")
-plan = Planner().plan(Join(Relation("users", table=df2),
-                           Relation("events", cols=events), on="user_id"))
-print(plan.explain().rstrip())
-plan2 = Planner().plan(Filter(Relation("users", table=df2),
-                              Eq(Col("user_id"), Lit(key))))
-print(plan2.explain().rstrip())
+print(df3.plan_join(events, "user_id").explain().rstrip())
+print(df3.filter(Eq(Col("user_id"), Lit(key))).explain().rstrip())
+count = df3.filter(Eq(Col("user_id"), Lit(key))).agg("count",
+                                                     "score").execute()
+print(f"rows for user {key} via plan: {int(count)}")
 
-# -- 6. distributed: hash-partitioned across shards --------------------------
+# -- 6. distributed: the SAME facade, hash-partitioned across shards ---------
 print("\n== distributed (4 shards) ==")
-ddf = create_distributed(users, schema, num_shards=4, rows_per_batch=4096)
-cols, valid, owner = lookup(ddf, np.asarray([key]), max_matches=32)
-print(f"key {key} owned by shard {int(owner[0])}, "
-      f"{int(valid.sum())} rows found")
-bc, pc, v = indexed_join_bcast(ddf, {"user_id": events["user_id"]},
-                               "user_id", 8)
-print(f"broadcast join matched {int(np.asarray(v).sum())} pairs")
+ddf = IndexedFrame.from_columns(users, schema, num_shards=4,
+                                rows_per_batch=4096)
+cols, valid = ddf.lookup(np.asarray([key]), max_matches=32)
+plan = ddf.plan_lookup(np.asarray([key]))
+print(f"key {key}: {int(valid.sum())} rows; planner chose {plan.kind}")
+print(plan.explain().rstrip())
+big_q = rng.choice(users["user_id"], 8192).astype(np.int64)
+print(ddf.plan_lookup(big_q).explain().rstrip())
+bc, pc, v = ddf.join({"user_id": events["user_id"]}, "user_id",
+                     max_matches=8)
+print(f"join matched {int(np.asarray(v).sum())} pairs "
+      f"[{ddf.plan_join({'user_id': events['user_id']}, 'user_id').kind}]")
+
+# -- 7. elasticity: reshard the same frame ------------------------------------
+print("\n== reshard ==")
+ddf8 = ddf.reshard(8)
+_, v8 = ddf8.lookup(np.asarray([key]), max_matches=32)
+print(f"resharded 4 -> {ddf8.num_shards} shards; "
+      f"{int(v8.sum())} rows still found")
 print("\nquickstart OK")

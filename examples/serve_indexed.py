@@ -5,7 +5,9 @@
 Requests share a long system-prompt prefix; the engine resolves cached KV
 pages with the paper's point lookup (hash(prefix page) -> page pointer),
 skips their prefill, decodes batched with the paged Pallas kernel
-(interpret mode on CPU), and commits new pages as MVCC appends.
+(interpret mode on CPU), and commits new pages as MVCC appends.  The
+prefix cache underneath (serving/kvcache.py) runs on the public
+``IndexedFrame`` facade — ``from_columns`` / ``.lookup`` / ``.append``.
 """
 
 from repro.launch.serve import main

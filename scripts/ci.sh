@@ -9,10 +9,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-# Fast tracing-count gate FIRST (seconds): fails if appends within a
-# capacity class retrace any fused read entry point (ISSUE 4 acceptance;
-# DESIGN.md §4).  Run under both topologies so the shard_map backend's
-# gate executes even on single-device CI.
+# Public-API drift gate (ISSUE 5): fails when the exported surface no
+# longer matches the committed api_surface.txt — API changes must be
+# declared (regenerate the file), never accidental.
+echo "== public API surface =="
+python scripts/api_surface.py --check
+
+# Fast tracing-count gate (seconds): fails if appends within a
+# capacity class retrace any fused read entry point — free functions AND
+# the IndexedFrame facade (ISSUE 4 + 5 acceptance; DESIGN.md §4, §11).
+# Run under both topologies so the shard_map backend's gate executes
+# even on single-device CI.
 echo "== trace gate (single device) =="
 python scripts/trace_gate.py
 echo "== trace gate (forced 8-device host mesh) =="

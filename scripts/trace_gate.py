@@ -1,4 +1,4 @@
-"""CI tracing-count gate (ISSUE 4 / DESIGN.md §4).
+"""CI tracing-count gate (ISSUE 4 + ISSUE 5 / DESIGN.md §4, §11).
 
 Fails (exit 1) if appends within a capacity class retrace ANY fused read
 entry point:
@@ -9,7 +9,12 @@ entry point:
   ``append_distributed`` rounds, on the vmap backend always and on the
   shard_map backend when the process has >= 4 devices (scripts/ci.sh
   runs this gate under both topologies, so the forced-8 pass exercises
-  shard_map even on single-device CI).
+  shard_map even on single-device CI);
+* the Frame API — the SAME jitted sites driven through ``IndexedFrame``
+  (the frame as the jit argument, ``.lookup``/``.join`` inside): facade
+  dispatch must add zero retraces (ISSUE 5 acceptance), local and
+  distributed (broadcast AND routed flavors), appends through
+  ``frame.append`` including the coalesced list form.
 
 Fast by construction: tiny tables, one compile per site, zero retraces —
 the whole gate is a few seconds of XLA work.
@@ -23,6 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import IndexedFrame
 from repro.core import Schema, append, create_index, joins
 
 SCH = Schema.of("k", k="int64", v="float32")
@@ -97,18 +103,93 @@ def gate_distributed(rt, label):
     print(f"  dist ({label}): 1 compile across {APPENDS} appends")
 
 
+def gate_frame_single():
+    """Facade dispatch adds zero retraces: the frame IS the jit argument."""
+    rng = np.random.default_rng(2)
+    cols = {"k": rng.integers(0, 64, 400).astype(np.int64),
+            "v": rng.random(400).astype(np.float32)}
+    fr = IndexedFrame.from_columns(cols, SCH,
+                                   rows_per_batch=64).with_flat_data()
+    q = jnp.asarray(rng.integers(0, 64, 32).astype(np.int64))
+    pc = {"pk": q, "tag": jnp.arange(32, dtype=jnp.int32)}
+    counts = {"lookup": 0, "join": 0}
+
+    @jax.jit
+    def f_lookup(frame, qq):
+        counts["lookup"] += 1
+        return frame.lookup(qq, max_matches=4)[1]
+
+    @jax.jit
+    def f_join(frame, p):
+        counts["join"] += 1
+        return frame.join(p, "pk", max_matches=4)[2]
+
+    jax.block_until_ready(f_lookup(fr, q))
+    jax.block_until_ready(f_join(fr, pc))
+    for i in range(APPENDS):
+        delta = {"k": rng.integers(0, 64, 8).astype(np.int64),
+                 "v": rng.random(8).astype(np.float32)}
+        # alternate single-delta and coalesced-list appends: both must
+        # keep the frame structurally equal to its parent
+        fr = fr.append([delta, delta] if i % 2 else delta)
+        jax.block_until_ready(f_lookup(fr, q))
+        jax.block_until_ready(f_join(fr, pc))
+    for site, n in counts.items():
+        if n != 1:
+            fail(f"IndexedFrame.{site} call site retraced: {n} traces "
+                 f"across {APPENDS} same-class appends (expected 1)")
+    print(f"  frame (local): 1 compile per site across {APPENDS} appends")
+
+
+def gate_frame_distributed(rt, label):
+    rng = np.random.default_rng(3)
+    cols = {"k": rng.integers(0, 200, 800).astype(np.int64),
+            "v": rng.random(800).astype(np.float32)}
+    fr = IndexedFrame.from_columns(cols, SCH, num_shards=4,
+                                   rows_per_batch=64, rt=rt)
+    q = jnp.asarray(rng.choice(cols["k"], 32).astype(np.int64))
+    counts = {"bcast": 0, "routed": 0}
+
+    @jax.jit
+    def f_bcast(frame, qq):
+        counts["bcast"] += 1
+        return frame.lookup(qq, max_matches=4)[1]     # auto -> L2 bcast
+
+    @jax.jit
+    def f_routed(frame, qq):
+        counts["routed"] += 1
+        return frame.lookup(qq, max_matches=4, op="routed")[1]
+
+    jax.block_until_ready(f_bcast(fr, q))
+    jax.block_until_ready(f_routed(fr, q))
+    for i in range(APPENDS):
+        fr = fr.append({"k": rng.integers(0, 200, 8).astype(np.int64),
+                        "v": rng.random(8).astype(np.float32)})
+        jax.block_until_ready(f_bcast(fr, q))
+        jax.block_until_ready(f_routed(fr, q))
+    for site, n in counts.items():
+        if n != 1:
+            fail(f"IndexedFrame.lookup[{site}] ({label}) retraced: {n} "
+                 f"traces across {APPENDS} same-class appends (expected 1)")
+    print(f"  frame ({label}): 1 compile per flavor across "
+          f"{APPENDS} appends")
+
+
 def main():
     print(f"trace gate: {len(jax.devices())} device(s), "
           f"backend={jax.default_backend()}")
     gate_single_table()
+    gate_frame_single()
     try:
         from repro.dist import mesh
     except ImportError:
         print("  dist layer unavailable; single-table gate only")
         return
     gate_distributed(mesh.vmap_runtime(), "vmap")
+    gate_frame_distributed(mesh.vmap_runtime(), "vmap")
     if len(jax.devices()) >= 4:
         gate_distributed(mesh.mesh_runtime(4), "shard_map")
+        gate_frame_distributed(mesh.mesh_runtime(4), "shard_map")
     else:
         print("  shard_map gate skipped (<4 devices; ci.sh's forced-8 "
               "pass covers it)")

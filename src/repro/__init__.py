@@ -12,3 +12,15 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 __version__ = "1.0.0"
+__all__ = ["FramePlan", "IndexedFrame"]
+
+
+def __getattr__(name):
+    # The public facade (DESIGN.md §11), re-exported LAZILY: importing
+    # repro.frame builds core module constants (jnp arrays), which would
+    # initialize the XLA backend and lock the device count before entry
+    # points like launch/dryrun.py get to set XLA_FLAGS.
+    if name in __all__:
+        from repro import frame
+        return getattr(frame, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

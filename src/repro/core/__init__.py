@@ -15,13 +15,13 @@ Layout:
 
 from repro.core.schema import Schema, Column
 from repro.core.snapshot import FlatBlock, Snapshot
-from repro.core.table import (IndexedTable, FlatView, create_index, append,
-                              compact)
+from repro.core.table import (IndexedTable, FlatView, coalesce_deltas,
+                              create_index, append, compact)
 from repro.core.hashindex import HashIndex, build_index, probe, chain_walk
 from repro.core import joins, planner
 
 __all__ = [
     "Schema", "Column", "IndexedTable", "Snapshot", "FlatBlock", "FlatView",
-    "create_index", "append", "compact", "HashIndex", "build_index", "probe",
-    "chain_walk", "joins", "planner",
+    "coalesce_deltas", "create_index", "append", "compact", "HashIndex",
+    "build_index", "probe", "chain_walk", "joins", "planner",
 ]

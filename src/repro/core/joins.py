@@ -28,6 +28,34 @@ from repro.core.table import IndexedTable
 
 
 # ---------------------------------------------------------------------------
+# Input validation — ONE contract for every lookup/join entry point
+# ---------------------------------------------------------------------------
+#
+# The facade (repro/frame.py), the local operators here, and the dist layer
+# all enforce the same two checks through these helpers, so a bad call fails
+# with the same ValueError no matter which surface it entered through.
+
+def check_max_matches(max_matches: int):
+    """Reject non-positive match-slot counts before any tracing happens."""
+    if max_matches <= 0:
+        raise ValueError(
+            f"max_matches must be a positive match-slot count, "
+            f"got {max_matches}")
+
+
+def as_int64_keys(keys) -> jnp.ndarray:
+    """Coerce ``keys`` to a jnp array and reject non-int64 dtypes."""
+    keys = jnp.asarray(keys)
+    if keys.dtype != jnp.int64:
+        raise ValueError(
+            f"query keys must be int64 (got {keys.dtype}); keys are int64 "
+            f"at every API boundary — pre-hash string keys at ingest "
+            f"(hashing.hash_string_host, DESIGN.md §9) and cast narrower "
+            f"integer keys explicitly")
+    return keys
+
+
+# ---------------------------------------------------------------------------
 # Indexed paths (the paper's contribution)
 # ---------------------------------------------------------------------------
 
@@ -40,17 +68,8 @@ def indexed_lookup(table: IndexedTable, keys, *, max_matches: int,
     in one pass over the table's stored Snapshot (DESIGN.md §3);
     ``fused=False`` keeps the segment-looped reference path for parity
     sweeps."""
-    if max_matches <= 0:
-        raise ValueError(
-            f"max_matches must be a positive match-slot count, "
-            f"got {max_matches}")
-    keys = jnp.asarray(keys)
-    if keys.dtype != jnp.int64:
-        raise ValueError(
-            f"query keys must be int64 (got {keys.dtype}); keys are int64 "
-            f"at every API boundary — pre-hash string keys at ingest "
-            f"(hashing.hash_string_host, DESIGN.md §9) and cast narrower "
-            f"integer keys explicitly")
+    check_max_matches(max_matches)
+    keys = as_int64_keys(keys)
     rids, _ = table.lookup(keys, max_matches, fused=fused)
     valid = rids != NULL_PTR
     cols = table.gather_rows(jnp.maximum(rids, 0), names=names, fused=fused)

@@ -12,14 +12,33 @@ Rules implemented (mirroring the paper's):
   R1  Filter(key == lit)  on an indexed table          -> IndexedLookup
   R2  Join(A, B) on key, A indexed                     -> IndexedJoin(build=A)
   R3  Join(A, B) on key, only B indexed                -> IndexedJoin(build=B)
-  R4  Join with small probe side                       -> broadcast flavor is
-      a distribution-layer decision (dist/dtable.py); the logical rewrite is
-      identical.
+  R4  Join with small probe side                       -> broadcast flavor;
+      see the physical-selection rules below (J2/J3) — the logical rewrite
+      is identical.
   R5  anything else                                    -> fallback (scan /
       per-query hash join) — "regular execution" in the paper's Fig 2.
 
-The physical plan records *why* each choice was made (``explain()``), the
-analog of Spark's ``df.explain`` the paper uses to verify rule firing.
+Physical-operator selection (DESIGN.md §11): once a logical rewrite fires,
+the Planner also picks the *distribution flavor* of the operator — the cost
+rules that used to live as caller-facing helpers (``dist.choose_lookup`` /
+``dist.choose_join``, which now delegate here):
+
+  L1  lookup on a single partition        -> IndexedLookup (local fused probe)
+  L2  dist lookup, Q <  routed_threshold  -> BroadcastLookup (replicate the
+      query batch to every shard; exchange latency dominates at small Q)
+  L3  dist lookup, Q >= routed_threshold  -> RoutedLookup (shuffle-route each
+      query to its owner: ~2Q probe lanes vs broadcast's s*Q)
+  J1  join build side on a single partition -> IndexedJoin (local)
+  J2  dist join, probe_rows <= bcast_threshold -> BroadcastJoin (replicate
+      the probe side — cheaper than shuffling while it is small)
+  J3  dist join, probe_rows >  bcast_threshold -> ShuffleJoin (route probe
+      rows to their owning shard, paper §III-D)
+
+``Relation`` leaves accept an ``IndexedTable`` OR a ``DistributedTable``
+(duck-typed on ``num_shards``), so one logical tree plans and executes
+against either backend; the physical plan records *why* each choice was
+made (``explain()``), the analog of Spark's ``df.explain`` the paper uses
+to verify rule firing.
 """
 
 from __future__ import annotations
@@ -28,9 +47,17 @@ import dataclasses
 from typing import Any
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import joins
 from repro.core.table import IndexedTable
+
+
+def _is_dist(table) -> bool:
+    """Distributed build targets are duck-typed on ``num_shards`` so this
+    module never imports ``repro.dist`` at module scope (dist imports the
+    planner for its cost rules; execution imports dist lazily)."""
+    return table is not None and hasattr(table, "num_shards")
 
 
 # --- expressions ------------------------------------------------------------
@@ -61,9 +88,14 @@ class Lt:
 
 @dataclasses.dataclass(frozen=True)
 class Relation:
-    """Leaf: either an IndexedTable or a plain columnar dict."""
+    """Leaf: an IndexedTable, a DistributedTable, or a plain columnar dict.
+
+    ``table`` may be either backend — both expose ``schema``; the planner
+    dispatches on ``num_shards`` (duck-typed) when choosing and executing
+    physical operators.
+    """
     name: str
-    table: IndexedTable | None = None      # indexed relation
+    table: Any | None = None               # IndexedTable | DistributedTable
     cols: dict | None = None               # plain relation
 
     @property
@@ -71,8 +103,20 @@ class Relation:
         return self.table is not None
 
     @property
+    def distributed(self) -> bool:
+        return _is_dist(self.table)
+
+    @property
     def key(self) -> str | None:
         return self.table.schema.key if self.indexed else None
+
+    def num_rows(self) -> int:
+        """Host-side row count (cardinality input to the J2/J3 cost rule)."""
+        if self.indexed:
+            return int(np.asarray(self.table.num_rows()))
+        if self.cols:
+            return int(np.shape(next(iter(self.cols.values())))[0])
+        return 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,10 +163,70 @@ class Physical:
 
 
 class Planner:
-    """Rule-based rewriter + executor."""
+    """Rule-based rewriter + executor + physical-operator selector.
 
-    def __init__(self, *, max_matches: int = 64):
+    ``routed_threshold`` / ``bcast_threshold`` are the distribution cost
+    knobs (rules L2/L3 and J2/J3); ``rt`` is the ``dist.mesh.Runtime``
+    every distributed physical operator executes under (None = the vmap
+    emulation backend).
+    """
+
+    def __init__(self, *, max_matches: int = 64,
+                 routed_threshold: int = 4096,
+                 bcast_threshold: int = 1_000_000, rt=None):
         self.max_matches = max_matches
+        self.routed_threshold = routed_threshold
+        self.bcast_threshold = bcast_threshold
+        self.rt = rt
+
+    # -- physical-operator selection (the dist.choose_* rules, moved) --------
+    def lookup_flavor(self, num_shards: int,
+                      num_queries: int) -> tuple[str, str]:
+        """(op, reason) for a point lookup: bcast vs routed (L2/L3)."""
+        if num_shards > 1 and num_queries >= self.routed_threshold:
+            return ("routed",
+                    f"L3: Q={num_queries} >= routed_threshold="
+                    f"{self.routed_threshold} -> route each query to its "
+                    f"owner (~2Q probe lanes vs broadcast's "
+                    f"{num_shards}xQ)")
+        return ("bcast",
+                f"L2: Q={num_queries} < routed_threshold="
+                f"{self.routed_threshold} -> broadcast the batch to all "
+                f"{num_shards} shards (exchange latency dominates)")
+
+    def join_flavor(self, probe_rows: int) -> tuple[str, str]:
+        """(op, reason) for an equi-join probe side: bcast vs shuffle
+        (J2/J3, paper §III-D)."""
+        if probe_rows <= self.bcast_threshold:
+            return ("bcast",
+                    f"J2: probe_rows={probe_rows} <= bcast_threshold="
+                    f"{self.bcast_threshold} -> replicate the probe side")
+        return ("shuffle",
+                f"J3: probe_rows={probe_rows} > bcast_threshold="
+                f"{self.bcast_threshold} -> shuffle probe rows to their "
+                f"owning shard")
+
+    def physical_lookup(self, table, num_queries: int) -> Physical:
+        """Physical operator for a point-lookup over ``table`` (either
+        backend) at the given query-batch size."""
+        if not _is_dist(table):
+            return Physical("IndexedLookup",
+                            "L1: single partition -> local fused probe",
+                            table)
+        op, why = self.lookup_flavor(int(table.num_shards), num_queries)
+        kind = "RoutedLookup" if op == "routed" else "BroadcastLookup"
+        return Physical(kind, why, table)
+
+    def physical_join(self, table, probe_rows: int) -> Physical:
+        """Physical operator for an indexed equi-join with ``table`` as the
+        build side and a ``probe_rows``-row probe side."""
+        if not _is_dist(table):
+            return Physical("IndexedJoin",
+                            "J1: single partition -> local indexed join",
+                            table)
+        op, why = self.join_flavor(probe_rows)
+        kind = "ShuffleJoin" if op == "shuffle" else "BroadcastJoin"
+        return Physical(kind, why, table)
 
     # -- rewrite --------------------------------------------------------------
     def plan(self, node) -> Physical:
@@ -136,9 +240,11 @@ class Planner:
                     and node.pred.left.name == child.key
                     and isinstance(node.pred, Eq)
                     and isinstance(node.pred.right, Lit)):
-                return Physical("IndexedLookup",
-                                f"R1: eq-filter on indexed key "
-                                f"'{child.key}'", node,
+                reason = f"R1: eq-filter on indexed key '{child.key}'"
+                flavor = self.physical_lookup(child.table, 1)
+                if flavor.kind != "IndexedLookup":
+                    reason += f"; {flavor.reason}"
+                return Physical(flavor.kind, reason, node,
                                 (self.plan(child),))
             return Physical("ScanFilter", "R5: fallback (non-key or "
                             "non-eq predicate)", node,
@@ -147,14 +253,17 @@ class Planner:
             l, r = node.left, node.right
             l_idx = isinstance(l, Relation) and l.indexed and l.key == node.on
             r_idx = isinstance(r, Relation) and r.indexed and r.key == node.on
-            if l_idx:
-                return Physical("IndexedJoin", "R2: left side indexed on "
-                                f"'{node.on}' -> build side", node,
-                                (self.plan(l), self.plan(r)))
-            if r_idx:
-                return Physical("IndexedJoin", "R3: right side indexed on "
-                                f"'{node.on}' -> build side", node,
-                                (self.plan(r), self.plan(l)))
+            if l_idx or r_idx:
+                build, probe = (l, r) if l_idx else (r, l)
+                rule = "R2: left" if l_idx else "R3: right"
+                reason = (f"{rule} side indexed on '{node.on}' -> "
+                          f"build side")
+                flavor = self.physical_join(build.table,
+                                            _estimate_rows(probe))
+                if flavor.kind != "IndexedJoin":
+                    reason += f"; {flavor.reason}"
+                return Physical(flavor.kind, reason, node,
+                                (self.plan(build), self.plan(probe)))
             return Physical("HashJoin", "R5: no usable index -> per-query "
                             "hash build", node,
                             (self.plan(l), self.plan(r)))
@@ -174,31 +283,51 @@ class Planner:
         n = p.node
         if p.kind in ("IndexedScan", "Scan"):
             return n  # relations are consumed by parents
-        if p.kind == "IndexedLookup":
+        if p.kind in ("IndexedLookup", "BroadcastLookup", "RoutedLookup"):
             rel = n.child
             key = jnp.asarray([n.pred.right.value], jnp.int64)
-            cols, valid = joins.indexed_lookup(rel.table, key,
-                                               max_matches=self.max_matches)
+            if p.kind == "IndexedLookup":
+                cols, valid = joins.indexed_lookup(
+                    rel.table, key, max_matches=self.max_matches)
+            else:
+                from repro.dist import dtable as _dd
+                if p.kind == "BroadcastLookup":
+                    cols, valid, _ = _dd.lookup(
+                        rel.table, key, max_matches=self.max_matches,
+                        rt=self.rt)
+                else:
+                    cols, valid = _dd.lookup_routed_flat(
+                        rel.table, key, max_matches=self.max_matches,
+                        rt=self.rt)
             return {k: v[0] for k, v in cols.items()}, valid[0]
         if p.kind == "ScanFilter":
             rel = n.child
-            cols, valid = _materialize(rel)
+            cols, valid = _materialize(rel, rt=self.rt)
             pred_v = _eval_pred(n.pred, cols)
             return cols, valid & pred_v
-        if p.kind == "IndexedJoin":
+        if p.kind in ("IndexedJoin", "BroadcastJoin", "ShuffleJoin"):
             build_rel = p.children[0].node
             probe_rel = p.children[1].node
-            probe_cols, probe_valid = _materialize(probe_rel)
-            bc, pc, valid = joins.indexed_join(
-                build_rel.table, probe_cols, n.on,
-                max_matches=self.max_matches)
+            probe_cols, probe_valid = _materialize(probe_rel, rt=self.rt)
+            if p.kind == "IndexedJoin":
+                bc, pc, valid = joins.indexed_join(
+                    build_rel.table, probe_cols, n.on,
+                    max_matches=self.max_matches)
+            else:
+                from repro.dist import dtable as _dd
+                join_fn = (_dd.indexed_join_bcast
+                           if p.kind == "BroadcastJoin"
+                           else _dd.indexed_join_routed)
+                bc, pc, valid = join_fn(build_rel.table, probe_cols, n.on,
+                                        max_matches=self.max_matches,
+                                        rt=self.rt)
             valid = valid & probe_valid[:, None]
             merged = {**{f"b_{k}": v for k, v in bc.items()},
                       **{f"p_{k}": v for k, v in pc.items()}}
             return merged, valid
         if p.kind == "HashJoin":
-            lc, lv = _materialize(p.children[0].node)
-            rc, rv = _materialize(p.children[1].node)
+            lc, lv = _materialize(p.children[0].node, rt=self.rt)
+            rc, rv = _materialize(p.children[1].node, rt=self.rt)
             bc, pc, valid = joins.hash_join(lc, n.on, rc, n.on,
                                             max_matches=self.max_matches)
             valid = valid & rv[:, None]
@@ -220,7 +349,26 @@ class Planner:
         raise TypeError(p.kind)
 
 
-def _materialize(rel: Relation):
+def _estimate_rows(node) -> int:
+    """Upper-bound row estimate for the J2/J3 cost rule — recursive, so a
+    probe side wrapped in Filter/Project still reports its source
+    cardinality instead of silently planning as a zero-row broadcast."""
+    if isinstance(node, Relation):
+        return node.num_rows()
+    if isinstance(node, (Filter, Project, Aggregate)):
+        return _estimate_rows(node.child)
+    if isinstance(node, Join):
+        return _estimate_rows(node.left) + _estimate_rows(node.right)
+    return 0
+
+
+def _materialize(rel: Relation, rt=None):
+    if rel.distributed:
+        from repro.dist import dtable as _dd
+        cols = {k: jnp.asarray(v)
+                for k, v in _dd.collect_cols(rel.table, rt=rt).items()}
+        n = next(iter(cols.values())).shape[0]
+        return cols, jnp.ones((n,), bool)
     if rel.indexed:
         all_cols = {}
         for name in rel.table.schema.names:

@@ -850,6 +850,40 @@ def append(table: IndexedTable, cols: dict, valid=None, *,
     return child
 
 
+def coalesce_deltas(deltas, schema: Schema, valids=None):
+    """Concatenate N append deltas into ONE delta (host-side numpy).
+
+    Delta ``i``'s rows precede delta ``i+1``'s, and the arena ingest's
+    lexsort keys on (key, arrival lane), so landing the coalesced delta
+    through one ``append`` yields per-key MVCC chains bit-identical to N
+    sequential appends — while paying the per-append host round-trip
+    (``_arena_fits`` pre-flight + ``int(fill)`` capacity check) and ingest
+    launch ONCE instead of N times.  The coalesced append bumps the
+    version once; use sequential appends when each delta must be its own
+    queryable version.
+
+    Returns ``(cols, valid)`` — ``valid`` is None when ``valids`` is None
+    (every row valid), else the concatenation with per-delta ``None``
+    meaning all-valid.
+    """
+    deltas = list(deltas)
+    if not deltas:
+        raise ValueError("coalesce_deltas needs at least one delta")
+    cols = {c.name: np.concatenate([np.asarray(d[c.name]) for d in deltas])
+            for c in schema.columns}
+    if valids is None:
+        return cols, None
+    valids = list(valids)
+    if len(valids) != len(deltas):
+        raise ValueError(f"{len(valids)} validity masks for "
+                         f"{len(deltas)} deltas")
+    valid = np.concatenate([
+        np.ones(np.shape(np.asarray(d[schema.key]))[0], bool)
+        if v is None else np.asarray(v, bool)
+        for d, v in zip(deltas, valids)])
+    return cols, valid
+
+
 def compact(table: IndexedTable, *, reserve: int | None = None,
             _bump_version: bool = True) -> IndexedTable:
     """Merge all segments into one fresh arena (bounds probe fan-out after

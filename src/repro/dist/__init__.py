@@ -27,14 +27,15 @@ from repro.dist import checkpoint, mesh, runtime, shuffle
 from repro.dist.dtable import (DistributedTable, append_distributed,
                                choose_join, choose_lookup, collect_cols,
                                compact_distributed, create_distributed,
-                               indexed_join_bcast, indexed_join_shuffle,
-                               lookup, lookup_routed)
+                               indexed_join_bcast, indexed_join_routed,
+                               indexed_join_shuffle, lookup, lookup_routed,
+                               lookup_routed_flat)
 from repro.dist.mesh import Runtime, mesh_runtime, vmap_runtime
 
 __all__ = [
     "DistributedTable", "Runtime", "append_distributed", "checkpoint",
     "choose_join", "choose_lookup", "collect_cols", "compact_distributed",
-    "create_distributed", "indexed_join_bcast", "indexed_join_shuffle",
-    "lookup", "lookup_routed", "mesh", "mesh_runtime", "runtime", "shuffle",
-    "vmap_runtime",
+    "create_distributed", "indexed_join_bcast", "indexed_join_routed",
+    "indexed_join_shuffle", "lookup", "lookup_routed", "lookup_routed_flat",
+    "mesh", "mesh_runtime", "runtime", "shuffle", "vmap_runtime",
 ]

@@ -32,41 +32,26 @@ _LEAVES = "leaves.npz"
 _META = "meta.json"
 
 
-def save_dtable(path: str, dt: _dtable.DistributedTable):
-    """Persist a dtable: flattened pytree leaves + structural metadata.
+def _save_leaves(path: str, obj, extra_meta: dict):
+    """Persist any registered pytree: flattened leaves + metadata.
 
     MVCC versions and arena fill counters are data *leaves* (DESIGN.md
     §4), so they ride in ``leaves.npz`` like everything else; the meta
-    copies below are informational (and back-compat for old readers).
+    entries are informational (and back-compat for old readers).
     """
     os.makedirs(path, exist_ok=True)
-    leaves = jax.tree_util.tree_leaves(dt)
+    leaves = jax.tree_util.tree_leaves(obj)
     np.savez(os.path.join(path, _LEAVES),
              **{f"leaf_{i}": np.asarray(a) for i, a in enumerate(leaves)})
-    meta = {"num_shards": dt.num_shards,
-            "version": int(np.asarray(dt.version)),
-            "table_version": int(np.asarray(dt.table.version).ravel()[0]),
-            "num_leaves": len(leaves)}
+    meta = {"num_leaves": len(leaves), **extra_meta}
     with open(os.path.join(path, _META), "w") as f:
         json.dump(meta, f)
 
 
-def restore_dtable(path: str,
-                   like: _dtable.DistributedTable) -> _dtable.DistributedTable:
-    """Restore a checkpoint into ``like``'s structure.
-
-    ``like`` supplies the treedef (a dtable of the same construction —
-    typically the live one or a freshly built empty clone).  Every leaf is
-    validated against the template's shape; any mismatch (different shard
-    count, capacity, segment count...) raises ``ValueError``.
-    """
-    with open(os.path.join(path, _META)) as f:
-        meta = json.load(f)
-    if meta["num_shards"] != like.num_shards:
-        raise ValueError(
-            f"checkpoint was saved with {meta['num_shards']} shards; "
-            f"template has {like.num_shards} — reshard_dtable the restored "
-            f"table instead of restoring into a different topology")
+def _restore_leaves(path: str, like, meta: dict):
+    """Unflatten a checkpoint into ``like``'s treedef, validating every
+    leaf's shape against the template (mismatches are a hard error, not a
+    silent reinterpretation)."""
     like_leaves, treedef = jax.tree_util.tree_flatten(like)
     if meta["num_leaves"] != len(like_leaves):
         raise ValueError(
@@ -84,6 +69,55 @@ def restore_dtable(path: str,
     # empty-clone template cannot demote version-3 data).
     return jax.tree_util.tree_unflatten(
         treedef, [jnp.asarray(a) for a in saved])
+
+
+def _read_meta(path: str) -> dict:
+    with open(os.path.join(path, _META)) as f:
+        return json.load(f)
+
+
+def save_dtable(path: str, dt: _dtable.DistributedTable):
+    """Persist a dtable: flattened pytree leaves + structural metadata."""
+    _save_leaves(path, dt, {
+        "num_shards": dt.num_shards,
+        "version": int(np.asarray(dt.version)),
+        "table_version": int(np.asarray(dt.table.version).ravel()[0])})
+
+
+def restore_dtable(path: str,
+                   like: _dtable.DistributedTable) -> _dtable.DistributedTable:
+    """Restore a checkpoint into ``like``'s structure.
+
+    ``like`` supplies the treedef (a dtable of the same construction —
+    typically the live one or a freshly built empty clone).  Every leaf is
+    validated against the template's shape; any mismatch (different shard
+    count, capacity, segment count...) raises ``ValueError``.
+    """
+    meta = _read_meta(path)
+    if meta.get("num_shards", like.num_shards) != like.num_shards:
+        raise ValueError(
+            f"checkpoint was saved with {meta['num_shards']} shards; "
+            f"template has {like.num_shards} — reshard_dtable the restored "
+            f"table instead of restoring into a different topology")
+    return _restore_leaves(path, like, meta)
+
+
+def save_table(path: str, t):
+    """Persist a single-partition ``IndexedTable`` — the same leaves+meta
+    layout as ``save_dtable``, so the facade's ``.save`` works for either
+    backend."""
+    _save_leaves(path, t, {"version": int(np.asarray(t.version))})
+
+
+def restore_table(path: str, like):
+    """Restore an ``IndexedTable`` checkpoint into ``like``'s structure
+    (leaf-by-leaf shape validation, as ``restore_dtable``)."""
+    meta = _read_meta(path)
+    if "num_shards" in meta:
+        raise ValueError(
+            f"checkpoint at {path!r} holds a {meta['num_shards']}-shard "
+            f"DistributedTable; restore it with restore_dtable")
+    return _restore_leaves(path, like, meta)
 
 
 def reshard_dtable(dt: _dtable.DistributedTable, num_shards: int, *,

@@ -44,6 +44,8 @@ import numpy as np
 
 from repro.core import hashindex as hix
 from repro.core import hashing
+from repro.core import joins
+from repro.core import planner as planner_mod
 from repro.core import snapshot as snap_mod
 from repro.core import table as table_mod
 from repro.core.hashindex import EMPTY_KEY
@@ -368,7 +370,8 @@ def lookup(dt: DistributedTable, keys, *, max_matches: int, names=None,
     s× redundant (``choose_lookup`` picks).
     """
     rt = mesh.resolve(rt).check(dt.num_shards)
-    q = jnp.asarray(keys, jnp.int64)
+    joins.check_max_matches(max_matches)
+    q = joins.as_int64_keys(keys)
     owner = hashing.partition_hash(q, dt.num_shards)
 
     def shard(t, qq):
@@ -412,8 +415,9 @@ def lookup_routed(dt: DistributedTable, keys, valid=None, *,
     versus broadcast's sQ (the s× redundancy the ROADMAP flags).
     """
     rt = mesh.resolve(rt).check(dt.num_shards)
+    joins.check_max_matches(max_matches)
     s = dt.num_shards
-    q = jnp.asarray(keys, jnp.int64)
+    q = joins.as_int64_keys(keys)
     assert q.ndim == 2 and q.shape[0] == s, (q.shape, s)
     n = q.shape[1]
     cap = capacity if capacity is not None else n
@@ -457,15 +461,44 @@ def lookup_routed(dt: DistributedTable, keys, valid=None, *,
     return mesh.axis_map(shard, rt)(dt.table, q, qv)
 
 
+def lookup_routed_flat(dt: DistributedTable, keys, *, max_matches: int,
+                       names=None, rt: mesh.Runtime | None = None):
+    """Routed point lookup with the FLAT contract: ``[Q]`` keys in,
+    ``(cols [Q, M], valid [Q, M])`` out — the adapter the facade and the
+    planner execute "RoutedLookup" through.
+
+    Splits the batch into ``num_shards`` equal source lanes (padding the
+    tail with invalid queries), rides ``lookup_routed``'s two all-to-alls,
+    and re-flattens the per-shard answers into input order.  Capacity is
+    the per-shard lane count, so the exchange can never drop a query —
+    the retry contract never fires on this path.
+    """
+    rt = mesh.resolve(rt).check(dt.num_shards)
+    joins.check_max_matches(max_matches)
+    q = joins.as_int64_keys(keys)
+    assert q.ndim == 1, q.shape
+    s = dt.num_shards
+    qn = q.shape[0]
+    n = max(1, -(-qn // s))
+    qpad = jnp.pad(q, (0, s * n - qn))
+    qvalid = jnp.arange(s * n) < qn
+    cols, valid, _, _ = lookup_routed(
+        dt, qpad.reshape(s, n), qvalid.reshape(s, n),
+        max_matches=max_matches, names=names, rt=rt)
+    flat = {k: v.reshape((s * n,) + v.shape[2:])[:qn]
+            for k, v in cols.items()}
+    return flat, valid.reshape(s * n, max_matches)[:qn]
+
+
 def choose_lookup(dt, total_queries: int, *,
                   routed_threshold: int = 4096) -> str:
-    """Planner rule for point lookups: broadcast probes every query on
-    every shard (s×Q lanes — fine while Q is small and the exchange
-    latency dominates); routing probes each query once plus two
-    all-to-alls (~2Q lanes at capacity ~2n/s).  Route at volume."""
-    s = getattr(dt, "num_shards", 1)
-    return ("routed" if s > 1 and total_queries >= routed_threshold
-            else "bcast")
+    """Back-compat shim: the bcast/routed cost rule now lives in the
+    Planner (rules L2/L3, ``Planner.lookup_flavor``); this keeps the
+    original string-returning helper for existing call sites."""
+    planner = planner_mod.Planner(routed_threshold=routed_threshold)
+    op, _ = planner.lookup_flavor(int(getattr(dt, "num_shards", 1)),
+                                  total_queries)
+    return op
 
 
 def indexed_join_bcast(dt: DistributedTable, probe_cols: dict,
@@ -476,7 +509,7 @@ def indexed_join_bcast(dt: DistributedTable, probe_cols: dict,
     Returns (build_cols [Q, M], probe_cols broadcast [Q, M], valid [Q, M])
     — the same contract as ``core.joins.indexed_join``.
     """
-    q = jnp.asarray(probe_cols[probe_key], jnp.int64)
+    q = joins.as_int64_keys(probe_cols[probe_key])
     build_cols, valid, _ = lookup(dt, q, max_matches=max_matches,
                                   names=names, rt=rt)
     m = valid.shape[1]
@@ -500,8 +533,9 @@ def indexed_join_shuffle(dt: DistributedTable, probe_cols: dict,
     (src, dest) exchange lane; the default ``n`` can never drop.
     """
     rt = mesh.resolve(rt).check(dt.num_shards)
+    joins.check_max_matches(max_matches)
     s = dt.num_shards
-    keys = jnp.asarray(probe_cols[probe_key], jnp.int64)
+    keys = joins.as_int64_keys(probe_cols[probe_key])
     assert keys.shape[0] == s, (keys.shape, s)
     cap = capacity if capacity is not None else keys.shape[1]
     payload = {k: jnp.asarray(v) for k, v in probe_cols.items()}
@@ -521,8 +555,37 @@ def indexed_join_shuffle(dt: DistributedTable, probe_cols: dict,
                                     jnp.asarray(probe_valid, bool))
 
 
+def indexed_join_routed(dt: DistributedTable, probe_cols: dict,
+                        probe_key: str, *, max_matches: int, names=None,
+                        rt: mesh.Runtime | None = None):
+    """Shuffle-flavored equi-join with the FLAT local contract: probe keys
+    ride the routed exchange to their owning shard (two all-to-alls, each
+    key probed exactly once — the same data movement as
+    ``indexed_join_shuffle``'s probe side), while the probe *payload*
+    never leaves the caller: answers come home in input order and the
+    probe columns broadcast locally.
+
+    Returns (build_cols [Q, M], probe_cols broadcast [Q, M],
+    valid [Q, M]) — the same contract as ``core.joins.indexed_join`` and
+    ``indexed_join_bcast``, which is what lets the facade/planner swap
+    flavors per call without changing callers.  ``indexed_join_shuffle``
+    remains the owner-sharded-output form for pipelines that continue
+    shard-local.
+    """
+    q = joins.as_int64_keys(probe_cols[probe_key])
+    build_cols, valid = lookup_routed_flat(dt, q, max_matches=max_matches,
+                                           names=names, rt=rt)
+    m = valid.shape[1]
+    probe_b = {k: jnp.broadcast_to(jnp.asarray(v)[:, None],
+                                   (q.shape[0], m))
+               for k, v in probe_cols.items()}
+    return build_cols, probe_b, valid
+
+
 def choose_join(dt, probe_rows: int, *,
                 bcast_threshold: int = 1_000_000) -> str:
-    """Paper §III-D planner rule: broadcast the probe side while it is
-    cheaper to replicate than to shuffle; shuffle at scale."""
-    return "bcast" if probe_rows <= bcast_threshold else "shuffle"
+    """Back-compat shim: the bcast/shuffle cost rule now lives in the
+    Planner (rules J2/J3, ``Planner.join_flavor``)."""
+    planner = planner_mod.Planner(bcast_threshold=bcast_threshold)
+    op, _ = planner.join_flavor(probe_rows)
+    return op

@@ -1,0 +1,392 @@
+"""IndexedFrame — ONE dataframe facade over both execution backends.
+
+The paper's public object (Listing 1) is a single *Indexed DataFrame*
+with ``createIndex / getRows / appendRows / join`` semantics; PRs 1-4
+grew that into ~20 free functions split across ``repro.core`` (one
+partition) and ``repro.dist`` (hash-partitioned shards), with every
+caller hand-picking the backend AND the physical operator.  This module
+is the seam that puts the paper's abstraction back on top (the same
+place Modin's dataframe algebra and Cylon's unified local/distributed
+API draw it):
+
+* ``IndexedFrame.from_columns(cols, schema, num_shards=...)`` builds a
+  local ``IndexedTable`` (``num_shards=1``) or a ``DistributedTable``
+  behind the same handle.
+* ``.lookup`` / ``.join`` route through the **Planner's physical-operator
+  selection** (core/planner.py rules L1-L3 / J1-J3): the facade auto-picks
+  local vs broadcast vs routed/shuffle per call from the query volume and
+  shard count, and ``.plan_lookup(...).explain()`` names the rule that
+  fired.  The free functions remain the stable internal layer — each
+  facade method IS a thin dispatch onto one of them, bit-identical by
+  test (tests/test_frame.py).
+* ``.append`` is the MVCC write path (parent stays queryable); a *list*
+  of deltas is coalesced host-side into ONE fused ingest launch, paying
+  the per-append host round-trip once (``core.table.coalesce_deltas``).
+* ``.filter/.select/.agg`` build ``core.planner`` logical trees over the
+  frame's relation, with ``.explain()`` / ``.execute()``.
+* ``.save/.load/.reshard`` delegate to ``dist.checkpoint``.
+
+The frame is a registered pytree whose ONLY data field is the wrapped
+table, so jitted call sites can take the frame itself as an argument:
+facade dispatch adds zero retraces (the trace gate drives the fused read
+sites through the Frame API — scripts/trace_gate.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import joins
+from repro.core import planner as planner_mod
+from repro.core import table as table_mod
+from repro.core.pointers import PTR_DTYPE
+from repro.core.schema import Schema
+
+if False:  # annotations only (PEP 563 strings; dist itself loads lazily)
+    from repro.dist import mesh
+
+_LOOKUP_OPS = ("auto", "local", "bcast", "routed")
+_JOIN_OPS = ("auto", "local", "bcast", "shuffle")
+
+
+def _dtable():
+    """The distributed layer, imported on first distributed use — local
+    frames (and repro.core-only consumers like serving/kvcache.py) never
+    pull in repro.dist."""
+    from repro.dist import dtable
+    return dtable
+
+
+def _checkpoint():
+    from repro.dist import checkpoint
+    return checkpoint
+
+
+@dataclasses.dataclass(frozen=True)
+class FramePlan:
+    """A logical-plan builder over a frame's relation: chain ``filter`` /
+    ``select`` / ``agg``, then ``explain()`` (which physical operators and
+    why — the paper's ``df.explain`` verification) or ``execute()``."""
+
+    node: Any
+    planner: planner_mod.Planner
+
+    def filter(self, pred) -> "FramePlan":
+        return FramePlan(planner_mod.Filter(self.node, pred), self.planner)
+
+    def select(self, *names) -> "FramePlan":
+        return FramePlan(planner_mod.Project(self.node, tuple(names)),
+                         self.planner)
+
+    def agg(self, op: str, col: str) -> "FramePlan":
+        return FramePlan(planner_mod.Aggregate(self.node, op, col),
+                         self.planner)
+
+    def plan(self) -> planner_mod.Physical:
+        return self.planner.plan(self.node)
+
+    def explain(self) -> str:
+        return self.plan().explain()
+
+    def execute(self):
+        return self.planner.execute(self.node)
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=["data"],
+         meta_fields=["rt"])
+@dataclasses.dataclass(frozen=True)
+class IndexedFrame:
+    """The paper's Indexed DataFrame: one facade, either backend.
+
+    ``data`` is the wrapped ``IndexedTable`` or ``DistributedTable`` (the
+    frame's only pytree data field — successive MVCC versions of a frame
+    stay structurally equal exactly when the wrapped table does, so
+    jitted read sites taking the frame as an argument never retrace
+    across in-class appends).  ``rt`` is the ``dist.mesh.Runtime`` every
+    distributed op executes under (treedef metadata; None = the vmap
+    emulation backend).
+    """
+
+    data: Any
+    rt: mesh.Runtime | None = None
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def from_columns(cls, cols: dict, schema: Schema, *, num_shards: int = 1,
+                     rt: mesh.Runtime | None = None,
+                     rows_per_batch: int = 4096, layout: str = "row",
+                     slots: int | None = None, valid=None,
+                     reserve: int | None = None) -> "IndexedFrame":
+        """Paper Listing 1 ``createIndex``: build the index over a keyed
+        columnar dict — one partition (``num_shards=1``) or hash-
+        partitioned across shards, same handle either way."""
+        kw = {} if slots is None else {"slots": slots}
+        if num_shards == 1:
+            t = table_mod.create_index(
+                cols, schema, rows_per_batch=rows_per_batch, layout=layout,
+                valid=valid, reserve=reserve, **kw)
+        else:
+            t = _dtable().create_distributed(
+                cols, schema, num_shards, rows_per_batch=rows_per_batch,
+                layout=layout, valid=valid, reserve=reserve, rt=rt, **kw)
+        return cls(data=t, rt=rt)
+
+    # -- shape facts / passthroughs -------------------------------------------
+
+    @property
+    def is_distributed(self) -> bool:
+        # duck-typed like the planner (_is_dist): DistributedTable is the
+        # only backend with a shard count, and this keeps repro.dist out
+        # of local frames' import graph
+        return hasattr(self.data, "num_shards")
+
+    @property
+    def num_shards(self) -> int:
+        return self.data.num_shards if self.is_distributed else 1
+
+    @property
+    def schema(self) -> Schema:
+        return self.data.schema
+
+    @property
+    def version(self):
+        return self.data.version
+
+    def num_rows(self):
+        return self.data.num_rows()
+
+    def index_nbytes(self, **kw) -> int:
+        return self.data.index_nbytes(**kw)
+
+    def data_nbytes(self, **kw) -> int:
+        return self.data.data_nbytes(**kw)
+
+    def with_flat_data(self) -> "IndexedFrame":
+        """Materialize the snapshot's flat data (local frames) so jitted
+        call sites taking the frame as an argument trace the whole fused
+        pipeline as stored leaves; dist frames always carry it."""
+        if self.is_distributed:
+            return self
+        return dataclasses.replace(self, data=self.data.with_flat_data())
+
+    def _planner(self, planner: planner_mod.Planner | None,
+                 max_matches: int = 64) -> planner_mod.Planner:
+        if planner is not None:
+            return planner
+        return planner_mod.Planner(max_matches=max_matches, rt=self.rt)
+
+    # -- reads: planner-routed physical operators -----------------------------
+
+    def _forced_plan(self, op: str, ops: tuple, kinds: dict
+                     ) -> planner_mod.Physical:
+        """A Physical node for an explicitly forced flavor, rejecting ops
+        the frame's backend cannot run (``kinds["local"]`` is the one
+        single-partition operator; the rest need shards)."""
+        if op not in ops:
+            raise ValueError(f"op must be one of {ops}, got {op!r}")
+        kind = kinds[op]
+        wants_local = kind == kinds["local"]
+        if wants_local == self.is_distributed:
+            raise ValueError(
+                f"op={op!r} needs a "
+                f"{'local' if wants_local else 'distributed'} frame; "
+                f"this frame has {self.num_shards} shard(s)")
+        return planner_mod.Physical(kind, f"forced: op={op!r}", self.data)
+
+    def plan_lookup(self, keys, *, max_matches: int = 64, op: str = "auto",
+                    planner: planner_mod.Planner | None = None
+                    ) -> planner_mod.Physical:
+        """The physical operator ``lookup`` would run for this query batch
+        (rules L1-L3) — ``.explain()`` on the result names the rule."""
+        if op == "auto":
+            p = self._planner(planner, max_matches)
+            return p.physical_lookup(self.data, int(jnp.shape(keys)[0]))
+        return self._forced_plan(op, _LOOKUP_OPS,
+                                 {"local": "IndexedLookup",
+                                  "bcast": "BroadcastLookup",
+                                  "routed": "RoutedLookup"})
+
+    def lookup(self, keys, *, max_matches: int = 64, names=None,
+               op: str = "auto",
+               planner: planner_mod.Planner | None = None):
+        """Paper Listing 1 ``getRows``: rows for each key, newest-first.
+
+        Returns ``(cols [Q, max_matches], valid [Q, max_matches])`` on
+        every backend and flavor; the Planner picks local vs broadcast vs
+        routed (``op`` forces a flavor; ``plan_lookup`` explains).
+        """
+        joins.check_max_matches(max_matches)
+        keys = joins.as_int64_keys(keys)
+        kind = self.plan_lookup(keys, max_matches=max_matches, op=op,
+                                planner=planner).kind
+        if kind == "IndexedLookup":
+            return joins.indexed_lookup(self.data, keys,
+                                        max_matches=max_matches, names=names)
+        if kind == "BroadcastLookup":
+            cols, valid, _ = _dtable().lookup(
+                self.data, keys, max_matches=max_matches, names=names,
+                rt=self.rt)
+            return cols, valid
+        return _dtable().lookup_routed_flat(
+            self.data, keys, max_matches=max_matches, names=names,
+            rt=self.rt)
+
+    def plan_join(self, probe_cols: dict, on: str, *, max_matches: int = 64,
+                  op: str = "auto",
+                  planner: planner_mod.Planner | None = None
+                  ) -> planner_mod.Physical:
+        """The physical operator ``join`` would run for this probe side
+        (rules J1-J3)."""
+        if op == "auto":
+            p = self._planner(planner, max_matches)
+            return p.physical_join(self.data,
+                                   int(jnp.shape(probe_cols[on])[0]))
+        return self._forced_plan(op, _JOIN_OPS,
+                                 {"local": "IndexedJoin",
+                                  "bcast": "BroadcastJoin",
+                                  "shuffle": "ShuffleJoin"})
+
+    def join(self, probe_cols: dict, on: str, *, max_matches: int = 64,
+             names=None, op: str = "auto",
+             planner: planner_mod.Planner | None = None):
+        """Equi-join with this frame as the build side.
+
+        Returns ``(build_cols [Q, M], probe_cols broadcast [Q, M],
+        valid [Q, M])`` on every backend and flavor — the shuffle flavor
+        routes probe keys to their owners and brings answers home
+        (``dist.indexed_join_routed``), so results land in probe order
+        like every other flavor.
+        """
+        joins.check_max_matches(max_matches)
+        keys = joins.as_int64_keys(probe_cols[on])
+        kind = self.plan_join(probe_cols, on, max_matches=max_matches,
+                              op=op, planner=planner).kind
+        if kind == "IndexedJoin":
+            return joins.indexed_join(self.data, probe_cols, on,
+                                      max_matches=max_matches, names=names)
+        if kind == "BroadcastJoin":
+            return _dtable().indexed_join_bcast(
+                self.data, probe_cols, on, max_matches, names=names,
+                rt=self.rt)
+        return _dtable().indexed_join_routed(
+            self.data, probe_cols, on, max_matches=max_matches, names=names,
+            rt=self.rt)
+
+    # -- writes: MVCC appends, compaction -------------------------------------
+
+    def append(self, cols, valid=None, *, donate: bool = False,
+               mode: str = "arena",
+               compact_threshold: int | None = None) -> "IndexedFrame":
+        """Paper Listing 1 ``appendRows``: functional append -> a new
+        frame; the parent stays queryable (divergent MVCC children,
+        Listing 2 — unless ``donate=True`` trades the parent for in-place
+        buffer aliasing).
+
+        ``cols`` may be a list/tuple of deltas: they are coalesced
+        host-side (``core.table.coalesce_deltas``) and land through ONE
+        fused ingest launch — one ``_arena_fits`` pre-flight and one
+        ``int(fill)`` check for the whole batch, one version bump —
+        instead of one host round-trip per delta (the ROADMAP's write-hot
+        streams item).  ``valid`` is then a matching list of masks (or
+        None).
+        """
+        if isinstance(cols, (list, tuple)):
+            cols, valid = table_mod.coalesce_deltas(cols, self.schema, valid)
+        if self.is_distributed:
+            if mode != "arena":
+                raise ValueError(
+                    f"distributed append supports only mode='arena' "
+                    f"(got {mode!r}); the segment-chain reference path is "
+                    f"single-partition")
+            new = _dtable().append_distributed(
+                self.data, cols, valid, rt=self.rt, donate=donate,
+                compact_threshold=compact_threshold)
+        else:
+            new = table_mod.append(self.data, cols, valid, mode=mode,
+                                   donate=donate,
+                                   compact_threshold=compact_threshold)
+        return dataclasses.replace(self, data=new)
+
+    def compact(self, *, reserve: int | None = None) -> "IndexedFrame":
+        """Merge all segments into one fresh arena (bounds MVCC probe
+        fan-out; DESIGN.md §4) — lookups bit-identical before and after."""
+        if self.is_distributed:
+            new = _dtable().compact_distributed(self.data, rt=self.rt,
+                                                 reserve=reserve)
+        else:
+            new = table_mod.compact(self.data, reserve=reserve)
+        return dataclasses.replace(self, data=new)
+
+    # -- relational plans ------------------------------------------------------
+
+    def relation(self, name: str = "frame") -> planner_mod.Relation:
+        """This frame as a ``core.planner`` Relation leaf (either
+        backend; the planner dispatches on it)."""
+        return planner_mod.Relation(name, table=self.data)
+
+    def filter(self, pred, *,
+               planner: planner_mod.Planner | None = None) -> FramePlan:
+        return FramePlan(planner_mod.Filter(self.relation(), pred),
+                         self._planner(planner))
+
+    def select(self, *names,
+               planner: planner_mod.Planner | None = None) -> FramePlan:
+        return FramePlan(planner_mod.Project(self.relation(), tuple(names)),
+                         self._planner(planner))
+
+    def agg(self, op: str, col: str, *,
+            planner: planner_mod.Planner | None = None) -> FramePlan:
+        return FramePlan(planner_mod.Aggregate(self.relation(), op, col),
+                         self._planner(planner))
+
+    # -- persistence / elasticity ---------------------------------------------
+
+    def save(self, path: str):
+        """Checkpoint the frame's table (dist.checkpoint leaf format)."""
+        if self.is_distributed:
+            _checkpoint().save_dtable(path, self.data)
+        else:
+            _checkpoint().save_table(path, self.data)
+
+    @classmethod
+    def load(cls, path: str, like: "IndexedFrame") -> "IndexedFrame":
+        """Restore a checkpoint into ``like``'s structure (``like``
+        supplies the treedef AND the runtime, exactly as
+        ``dist.checkpoint.restore_dtable``)."""
+        if like.is_distributed:
+            data = _checkpoint().restore_dtable(path, like.data)
+        else:
+            data = _checkpoint().restore_table(path, like.data)
+        return dataclasses.replace(like, data=data)
+
+    def reshard(self, num_shards: int, *,
+                rt_out: mesh.Runtime | None = None) -> "IndexedFrame":
+        """Elastic scale: re-route every valid row into a ``num_shards``
+        topology (``dist.checkpoint.reshard_dtable``; a local frame is
+        promoted by the same collect -> re-route -> re-index pass).  The
+        global MVCC version is preserved."""
+        if self.is_distributed:
+            new = _checkpoint().reshard_dtable(self.data, num_shards, rt=self.rt,
+                                      rt_out=rt_out)
+            return IndexedFrame(data=new, rt=rt_out)
+        t = self.data
+        valid_all = np.concatenate([np.asarray(s.valid)
+                                    for s in t.segments])
+        bases = np.concatenate([np.asarray(s.row_base
+                                           + np.arange(s.capacity))
+                                for s in t.segments])
+        cols = t.gather_rows(jnp.asarray(bases[valid_all], PTR_DTYPE))
+        dt = _dtable().create_distributed(
+            {k: np.asarray(v) for k, v in cols.items()}, t.schema,
+            num_shards, rows_per_batch=t.rows_per_batch, layout=t.layout,
+            slots=t.slots, rt=rt_out)
+        dt = dataclasses.replace(
+            dt, version=jnp.asarray(int(np.asarray(t.version)), jnp.int32))
+        return IndexedFrame(data=dt, rt=rt_out)

@@ -31,9 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Schema, append, create_index
-from repro.core import joins
-from repro.core.hashindex import EMPTY_KEY
+from repro.core import Schema
+from repro.frame import IndexedFrame
 
 PAGE_SCHEMA = Schema.of("prefix_hash", prefix_hash="int64", page_id="int32",
                         page_index="int32", seq_id="int32")
@@ -107,11 +106,21 @@ class PagePool:
 
 
 class PrefixCache:
-    """The indexed cache: prefix_hash -> page entries, MVCC appends."""
+    """The indexed cache: prefix_hash -> page entries, MVCC appends.
+
+    Built on the public ``IndexedFrame`` facade (DESIGN.md §11) — the
+    serving layer is a consumer of the paper's dataframe API, not of the
+    internal free functions.
+    """
 
     def __init__(self, rows_per_batch: int = 256):
         self.rows_per_batch = rows_per_batch
-        self.table = None            # lazily created on first commit
+        self.frame = None            # lazily created on first commit
+
+    @property
+    def table(self):
+        """The wrapped IndexedTable (back-compat for stats/introspection)."""
+        return None if self.frame is None else self.frame.data
 
     # -- writes ----------------------------------------------------------
     def commit(self, hashes: np.ndarray, page_ids: list[int], seq_id: int):
@@ -121,12 +130,12 @@ class PrefixCache:
                 "page_id": np.asarray(page_ids, np.int32),
                 "page_index": np.arange(n, dtype=np.int32),
                 "seq_id": np.full(n, seq_id, np.int32)}
-        if self.table is None:
-            self.table = create_index(cols, PAGE_SCHEMA,
-                                      rows_per_batch=self.rows_per_batch)
+        if self.frame is None:
+            self.frame = IndexedFrame.from_columns(
+                cols, PAGE_SCHEMA, rows_per_batch=self.rows_per_batch)
         else:
-            self.table = append(self.table, cols)
-        return int(self.table.version)
+            self.frame = self.frame.append(cols)
+        return int(self.frame.version)
 
     # -- reads -----------------------------------------------------------
     def lookup_prefix(self, tokens: np.ndarray, page: int):
@@ -136,13 +145,12 @@ class PrefixCache:
         vectorized probe over every boundary hash (the paper's batched
         point lookup), then take the longest contiguous run of hits.
         """
-        if self.table is None:
+        if self.frame is None:
             return 0, np.zeros((0,), np.int32)
         hs = prefix_hashes(tokens, page)
         if len(hs) == 0:
             return 0, np.zeros((0,), np.int32)
-        cols, valid = joins.indexed_lookup(self.table, jnp.asarray(hs),
-                                           max_matches=1)
+        cols, valid = self.frame.lookup(jnp.asarray(hs), max_matches=1)
         hit = np.asarray(valid[:, 0])
         pid = np.asarray(cols["page_id"][:, 0])
         n = 0
@@ -151,4 +159,4 @@ class PrefixCache:
         return n, pid[:n].astype(np.int32)
 
     def memory_overhead_bytes(self) -> int:
-        return 0 if self.table is None else self.table.index_nbytes()
+        return 0 if self.frame is None else self.frame.index_nbytes()
