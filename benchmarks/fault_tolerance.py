@@ -1,10 +1,20 @@
-"""Fig 12: executor failure during a query sequence.
+"""Fig 12 grown into a chaos sweep: fault type × write rate through the
+supervised frame (dist/resilience.py; DESIGN.md §12).
 
-Kill one shard mid-run; the failed query pays the rebuild (re-shuffle +
-re-index + append replay), subsequent queries return to steady state.
-Because a rebuilt dtable has identical leaf shapes, the recovered queries
-re-enter the jitted join's compile cache — the paper's flat post-recovery
-tail depends on exactly that.
+The original Fig-12 scenario — kill one shard mid-run, the failed query
+pays the rebuild, the tail stays flat — is now ONE cell of a grid.  Each
+cell drives a seeded ``FaultInjector`` plan through
+``IndexedFrame.supervised`` (no caller-side failure handling anywhere in
+the loop), alongside a never-failed twin frame receiving the identical
+appends, and reports:
+
+* steady-state vs failure-query latency (the Fig-12 spike shape),
+* MTTR and replay cost (``replayed_deltas`` — O(deltas since the last
+  checkpoint), not O(full history): the checkpoint-anchored lineage),
+* recompile count (the manager's retrace counter: recovery must re-enter
+  the SAME jit cache entry — the flat tail depends on it),
+* retry/drop accounting for the capacity-pressure cells,
+* bit-identity of every post-recovery answer against the twin.
 
 Results land in ``BENCH_dist.json`` at the repo root (the committed
 artifact) as well as the harness report.
@@ -17,65 +27,162 @@ import time
 import numpy as np
 
 from repro.core import Schema
-from repro.dist import (append_distributed, create_distributed,
-                        indexed_join_bcast, runtime)
-from benchmarks.common import Report, block, powerlaw_keys
+from repro.dist.resilience import Fault, FaultInjector, RecoveryPolicy
+from repro.dist.runtime import Lineage
+from repro.frame import IndexedFrame
+from benchmarks.common import Report, powerlaw_keys
 
 SCH = Schema.of("k", k="int64", v="float32")
+NUM_SHARDS = 4
+
+# fault plans are step-indexed over ticks (one tick per supervised read
+# or append); write_rate w means each loop step is 1 read + w appends
+_FAULT_PLANS = {
+    "none": lambda kill, shard: [],
+    "shard_loss": lambda kill, shard: [
+        Fault("shard_loss", step=kill, shard=shard)],
+    "straggler": lambda kill, shard: [
+        Fault("straggler", step=kill, shard=shard, severity=16.0)],
+    "capacity_pressure": lambda kill, shard: [
+        Fault("capacity_pressure", step=kill, severity=8.0)],
+    # corrupt the newest checkpoint one tick before killing the shard:
+    # recovery must reject it (CRC) and fall back to an older anchor
+    "checkpoint_corruption": lambda kill, shard: [
+        Fault("checkpoint_corruption", step=kill - 1),
+        Fault("shard_loss", step=kill, shard=shard)],
+}
+
+
+def _bit_identical(mgr, twin, q, max_matches, op):
+    cols, valid = mgr.lookup(q, max_matches=max_matches, op=op)
+    tc, tv = twin.lookup(q, max_matches=max_matches, op=op)
+    ok = np.array_equal(np.asarray(valid), np.asarray(tv))
+    for k in tc:
+        ok &= np.array_equal(np.asarray(cols[k]), np.asarray(tc[k]))
+    return ok
+
+
+def _chaos_cell(fault_kind: str, write_rate: int, *, base_cols, ckpt_root,
+                n_steps: int, kill_step: int, rng) -> dict:
+    """One grid cell: seeded fault plan, supervised query/append loop,
+    twin-checked answers."""
+    frame = IndexedFrame.from_columns(base_cols, SCH,
+                                      num_shards=NUM_SHARDS,
+                                      rows_per_batch=2048)
+    twin = IndexedFrame.from_columns(base_cols, SCH,
+                                     num_shards=NUM_SHARDS,
+                                     rows_per_batch=2048)
+    # kill_step is in loop steps; convert to injector ticks (1 read +
+    # write_rate appends per step, fault fires on the read tick)
+    kill_tick = kill_step * (1 + write_rate)
+    dead_shard = 2
+    mgr = frame.supervised(
+        lineage=Lineage(SCH, base_cols, rows_per_batch=2048),
+        injector=FaultInjector(
+            _FAULT_PLANS[fault_kind](kill_tick, dead_shard), seed=5),
+        policy=RecoveryPolicy(checkpoint_every=max(1, 2 * write_rate),
+                              keep_checkpoints=3),
+        checkpoint_dir=os.path.join(ckpt_root,
+                                    f"{fault_kind}_w{write_rate}"))
+    op = "routed" if fault_kind == "capacity_pressure" else "auto"
+    q = rng.choice(base_cols["k"], 128).astype(np.int64)
+    n = base_cols["k"].shape[0]
+
+    lat, identical = [], True
+    total_deltas = 0
+    for step in range(n_steps):
+        t0 = time.perf_counter()
+        ok = _bit_identical(mgr, twin, q, 16, op)
+        lat.append(time.perf_counter() - t0)
+        identical &= bool(ok)
+        for w in range(write_rate):
+            delta = {"k": np.asarray(
+                         [n + (step * write_rate + w)], np.int64),
+                     "v": np.asarray([float(step)], np.float32)}
+            mgr.append(delta)
+            twin = twin.append(delta)
+            total_deltas += 1
+
+    st = mgr.stats
+    steady = float(np.median(lat[1:kill_step]))
+    failure = float(lat[kill_step])
+    post = float(np.median(lat[kill_step + 1:]))
+    return {
+        "fault": fault_kind, "write_rate": write_rate,
+        "steady_state_ms": steady * 1e3,
+        "failure_query_ms": failure * 1e3,
+        "failure_spike_x": failure / steady,
+        "post_recovery_ms": post * 1e3,
+        "recovered": bool(post < 2 * steady),
+        "bit_identical": identical,
+        "mttr_ms": [s * 1e3 for s in st.mttr_s],
+        "recoveries": st.recoveries,
+        "replayed_deltas": st.replayed_deltas,
+        "total_deltas": total_deltas,
+        "retraces": mgr.retraces,
+        "retries": st.retries, "drops": st.drops,
+        "corrupt_checkpoints": st.corrupt_checkpoints,
+        "straggler_events": st.straggler_events,
+        "degraded_reads": st.degraded_reads,
+    }
 
 
 def run(quick: bool = True):
+    import jax
+    import tempfile
     rng = np.random.default_rng(5)
     n = 20_000 if quick else 200_000
-    n_queries = 30 if quick else 200
-    kill_at = 10
+    n_steps = 24 if quick else 100
+    kill_step = 10
+    write_rates = (0, 2) if quick else (0, 1, 4)
+    kinds = (list(_FAULT_PLANS) if not quick
+             else ["shard_loss", "capacity_pressure",
+                   "checkpoint_corruption"])
     rep = Report("fault_tolerance")
 
-    cols = {"k": powerlaw_keys(rng, n, n // 8),
-            "v": rng.random(n).astype(np.float32)}
-    dt = create_distributed(cols, SCH, 4, rows_per_batch=2048)
-    lin = runtime.Lineage(SCH, cols, rows_per_batch=2048)
-    delta = {"k": rng.choice(cols["k"], 100).astype(np.int64),
-             "v": rng.random(100).astype(np.float32)}
-    dt = append_distributed(dt, delta)
-    lin.record_append(delta)
+    base_cols = {"k": powerlaw_keys(rng, n, n // 8),
+                 "v": rng.random(n).astype(np.float32)}
+    cells = []
+    with tempfile.TemporaryDirectory() as ckpt_root:
+        for kind in kinds:
+            for w in write_rates:
+                if kind == "checkpoint_corruption" and w == 0:
+                    # a write-free run has exactly one checkpoint; with
+                    # it corrupt there is no older anchor to fall back to
+                    continue
+                cell = _chaos_cell(kind, w, base_cols=base_cols,
+                                   ckpt_root=ckpt_root, n_steps=n_steps,
+                                   kill_step=kill_step, rng=rng)
+                cells.append(cell)
+                rep.add(f"{kind}_w{w}",
+                        failure_ms=cell["failure_query_ms"],
+                        spike_x=cell["failure_spike_x"],
+                        mttr_ms=(cell["mttr_ms"][0]
+                                 if cell["mttr_ms"] else 0.0),
+                        replayed=(cell["replayed_deltas"][0]
+                                  if cell["replayed_deltas"] else 0),
+                        retraces=cell["retraces"],
+                        bit_identical=cell["bit_identical"])
 
-    probe = rng.choice(cols["k"], 128).astype(np.int64)
-    import jax
-    jfn = jax.jit(lambda d, p: indexed_join_bcast(d, {"pk": p}, "pk", 16))
-    block(jfn(dt, probe))                          # compile outside loop
-    lat = []
-    rebuild_s = None
-    for i in range(n_queries):
-        t0 = time.perf_counter()
-        if i == kill_at:
-            dt = runtime.fail_shard(dt, 2)        # executor dies
-            dt = runtime.rebuild_shard(dt, 2, lin)  # lineage recovery
-            rebuild_s = time.perf_counter() - t0
-        block(jfn(dt, probe))
-        lat.append(time.perf_counter() - t0)
-
-    steady = float(np.median(lat[1:kill_at]))
-    post = float(np.median(lat[kill_at + 1:]))
-    rep.add("steady_state", ms=steady * 1e3)
-    rep.add("failure_query", ms=lat[kill_at] * 1e3,
-            spike_x=lat[kill_at] / steady,
-            rebuild_ms=rebuild_s * 1e3)
-    rep.add("post_recovery", ms=post * 1e3, recovered=post < 2 * steady)
-
+    # the acceptance claims, checked over the whole sweep
+    healed = [c for c in cells if c["recoveries"]]
+    summary = {
+        "all_bit_identical": all(c["bit_identical"] for c in cells),
+        "zero_recompiles": all(
+            c["retraces"] <= (2 if c["fault"] == "capacity_pressure"
+                              else 1) for c in cells),
+        "replay_bounded_by_suffix": all(
+            max(c["replayed_deltas"]) <= max(1, 2 * c["write_rate"])
+            for c in healed),
+    }
     out_path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                             "BENCH_dist.json"))
     with open(out_path, "w") as f:
-        json.dump({"benchmark": "fault_tolerance", "quick": quick,
-                   "backend": jax.default_backend(),
-                   "num_shards": 4, "rows": n, "queries": n_queries,
-                   "kill_at": kill_at,
-                   "steady_state_ms": steady * 1e3,
-                   "failure_query_ms": lat[kill_at] * 1e3,
-                   "failure_spike_x": lat[kill_at] / steady,
-                   "rebuild_ms": rebuild_s * 1e3,
-                   "post_recovery_ms": post * 1e3,
-                   "recovered": bool(post < 2 * steady)}, f, indent=2)
+        json.dump({"benchmark": "fault_tolerance_chaos_sweep",
+                   "quick": quick, "backend": jax.default_backend(),
+                   "num_shards": NUM_SHARDS, "rows": n,
+                   "steps": n_steps, "kill_step": kill_step,
+                   "summary": summary, "cells": cells}, f, indent=2)
     return rep.to_dict()
 
 

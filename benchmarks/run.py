@@ -20,18 +20,19 @@ import time
 # write_throughput share BENCH_append.json (Fig 9 + Fig 10, the arena
 # write path before/after — DESIGN.md §4).
 MODULES = {
-    "lookup_path": None,            # Fig 1 / §III-C hot path
-    "join_scaling": None,           # Fig 7 + Table III
-    "operators": None,              # Fig 8
-    "append_read_latency": None,    # Fig 9 (-> BENCH_append.json)
-    "write_throughput": None,       # Fig 10 (-> BENCH_append.json)
-    "memory_overhead": None,        # Fig 11 (logical vs reserved)
-    "fault_tolerance": None,        # Fig 12
-    "batch_size_sweep": None,       # Fig 5
-    "scalability": None,            # Fig 6 (mesh sweep -> BENCH_scale.json)
-    "tpcds_join": None,             # Fig 14
-    "snb_queries": None,            # Fig 13
-    "flights_queries": None,        # Fig 15
+    "lookup_path": "Fig 1 / §III-C hot path (-> BENCH_lookup.json)",
+    "join_scaling": "Fig 7 + Table III",
+    "operators": "Fig 8",
+    "append_read_latency": "Fig 9 (-> BENCH_append.json)",
+    "write_throughput": "Fig 10 (-> BENCH_append.json)",
+    "memory_overhead": "Fig 11 (logical vs reserved)",
+    "fault_tolerance": "Fig 12 chaos sweep: fault x write rate through "
+                       "the supervised frame (-> BENCH_dist.json)",
+    "batch_size_sweep": "Fig 5",
+    "scalability": "Fig 6 (mesh sweep -> BENCH_scale.json)",
+    "tpcds_join": "Fig 14",
+    "snb_queries": "Fig 13",
+    "flights_queries": "Fig 15",
 }
 
 

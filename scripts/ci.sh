@@ -26,6 +26,17 @@ echo "== trace gate (forced 8-device host mesh) =="
 XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
   python scripts/trace_gate.py
 
+# Fast fault-injection smoke (seconds): a seeded shard kill through the
+# supervised frame must heal automatically — bit-identical answers vs a
+# never-failed twin, ONE trace of the fused read site, replay bounded by
+# the checkpoint suffix (ISSUE 6 acceptance; DESIGN.md §12).  Both
+# topologies, so the recovery state machine runs on shard_map too.
+echo "== fault smoke (single device) =="
+python scripts/fault_smoke.py
+echo "== fault smoke (forced 8-device host mesh) =="
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+  python scripts/fault_smoke.py
+
 echo "== tier-1 pytest (single device) =="
 python -m pytest -q
 

@@ -1,0 +1,102 @@
+"""Fast fault-injection smoke for CI (seconds, not the chaos sweep).
+
+The self-healing acceptance contract (ISSUE 6; DESIGN.md §12), gated on
+every CI run under BOTH topologies (scripts/ci.sh):
+
+  inject a seeded shard kill through ``IndexedFrame.supervised`` ->
+  recovery is automatic (no caller-side handling) -> every post-recovery
+  answer is bit-identical to a never-failed twin frame -> the fused read
+  site traced exactly ONCE (zero recompiles across kill + heal + appends)
+  -> replay cost was the checkpoint-anchored suffix, not full history.
+
+Exits nonzero with a diagnostic on any violation.  Like
+scripts/trace_gate.py it runs on whatever topology the process has —
+ci.sh invokes it plain and under a forced 8-device host mesh; with 8+
+devices the supervised frame runs on the real shard_map backend.
+"""
+
+import sys
+import tempfile
+
+import numpy as np
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.core import Schema                              # noqa: E402
+from repro.dist import mesh                                # noqa: E402
+from repro.dist.resilience import (Fault, FaultInjector,   # noqa: E402
+                                   RecoveryPolicy)
+from repro.dist.runtime import Lineage                     # noqa: E402
+from repro.frame import IndexedFrame                       # noqa: E402
+
+FAILURES = []
+
+
+def check(ok: bool, msg: str):
+    print(("  OK   " if ok else "  FAIL ") + msg)
+    if not ok:
+        FAILURES.append(msg)
+
+
+def main() -> int:
+    ndev = len(jax.devices())
+    s = 8 if ndev >= 8 else 4
+    rt = mesh.mesh_runtime(s) if ndev >= s else None
+    backend = "shard_map" if rt is not None else "vmap"
+    print(f"fault smoke: {s} shards on the {backend} backend "
+          f"({ndev} device(s))")
+
+    rng = np.random.default_rng(11)
+    n = 2048
+    sch = Schema.of("k", k="int64", v="float32")
+    cols = {"k": np.arange(n, dtype=np.int64),
+            "v": rng.standard_normal(n).astype(np.float32)}
+    frame = IndexedFrame.from_columns(cols, sch, num_shards=s,
+                                      rows_per_batch=512, rt=rt)
+    twin = IndexedFrame.from_columns(cols, sch, num_shards=s,
+                                     rows_per_batch=512, rt=rt)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        mgr = frame.supervised(
+            lineage=Lineage(sch, cols, rows_per_batch=512),
+            injector=FaultInjector([Fault("shard_loss", step=3,
+                                          shard=s - 1)], seed=11),
+            policy=RecoveryPolicy(checkpoint_every=2),
+            checkpoint_dir=ckpt_dir)
+        q = rng.integers(0, n, size=64).astype(np.int64)
+        identical = True
+        for step in range(6):
+            c, v = mgr.lookup(q, max_matches=4)
+            tc, tv = twin.lookup(q, max_matches=4)
+            identical &= np.array_equal(np.asarray(v), np.asarray(tv))
+            for k in tc:
+                identical &= np.array_equal(np.asarray(c[k]),
+                                            np.asarray(tc[k]))
+            delta = {"k": np.asarray([n + step], np.int64),
+                     "v": np.asarray([float(step)], np.float32)}
+            mgr.append(delta)
+            twin = twin.append(delta)
+
+        check(mgr.stats.recoveries == 1,
+              f"exactly one automatic recovery "
+              f"(got {mgr.stats.recoveries})")
+        check(not mgr.dead, f"no shard left unrecovered (dead={mgr.dead})")
+        check(identical,
+              "every answer bit-identical to the never-failed twin")
+        check(mgr.retraces == 1,
+              f"fused read site traced once across kill + heal + appends "
+              f"(got {mgr.retraces})")
+        replayed = mgr.stats.replayed_deltas
+        check(bool(replayed) and replayed[0] <= 2,
+              f"replay bounded by the checkpoint suffix "
+              f"(replayed {replayed} of {mgr.stats.appends} deltas)")
+
+    if FAILURES:
+        print(f"\nfault smoke: {len(FAILURES)} violation(s)")
+        return 1
+    print("fault smoke: all recovery contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

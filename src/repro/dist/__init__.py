@@ -11,9 +11,13 @@ Layout:
                  Snapshots as ONE pytree), create/append/lookup/
                  lookup_routed/joins — the single-partition code
                  axis-mapped over the shard axis
-  runtime.py     Lineage append replay, fail/rebuild shard, VersionVector
-                 fencing, StragglerPolicy (paper Fig 12)
-  checkpoint.py  save/restore pytree leaves + elastic reshard
+  runtime.py     Lineage append replay, fail/rebuild/splice shard,
+                 VersionVector fencing, StragglerPolicy (paper Fig 12)
+  checkpoint.py  save/restore pytree leaves (CRC-verified) + elastic
+                 reshard
+  resilience.py  FaultInjector (seeded chaos plans) + RecoveryManager —
+                 the supervision layer ``IndexedFrame.supervised`` routes
+                 reads through (fence, probe, heal, drop->retry)
 
 Every op takes an optional ``rt`` (``mesh.Runtime``): the default vmap
 backend emulates the shard axis on one device; ``mesh.mesh_runtime(s)``
@@ -29,13 +33,18 @@ from repro.dist.dtable import (DistributedTable, append_distributed,
                                compact_distributed, create_distributed,
                                indexed_join_bcast, indexed_join_routed,
                                indexed_join_shuffle, lookup, lookup_routed,
-                               lookup_routed_flat)
+                               lookup_routed_flat, lookup_routed_report)
+from repro.dist import resilience
 from repro.dist.mesh import Runtime, mesh_runtime, vmap_runtime
+from repro.dist.resilience import (Fault, FaultInjector, RecoveryManager,
+                                   RecoveryPolicy, supervise)
 
 __all__ = [
-    "DistributedTable", "Runtime", "append_distributed", "checkpoint",
+    "DistributedTable", "Fault", "FaultInjector", "RecoveryManager",
+    "RecoveryPolicy", "Runtime", "append_distributed", "checkpoint",
     "choose_join", "choose_lookup", "collect_cols", "compact_distributed",
     "create_distributed", "indexed_join_bcast", "indexed_join_routed",
     "indexed_join_shuffle", "lookup", "lookup_routed", "lookup_routed_flat",
-    "mesh", "mesh_runtime", "runtime", "shuffle", "vmap_runtime",
+    "lookup_routed_report", "mesh", "mesh_runtime", "resilience", "runtime",
+    "shuffle", "supervise", "vmap_runtime",
 ]

@@ -20,6 +20,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import zipfile
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +32,15 @@ from repro.dist import mesh as _mesh
 
 _LEAVES = "leaves.npz"
 _META = "meta.json"
+# v1: leaves + num_leaves only.  v2: adds per-leaf CRC32s — restore
+# verifies them, so a flipped bit (disk rot, partial write, an injected
+# checkpoint_corruption fault) is a clear ValueError, never a silently
+# scrambled index.
+FORMAT_VERSION = 2
+
+
+def _leaf_crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
 
 
 def _save_leaves(path: str, obj, extra_meta: dict):
@@ -37,28 +48,58 @@ def _save_leaves(path: str, obj, extra_meta: dict):
 
     MVCC versions and arena fill counters are data *leaves* (DESIGN.md
     §4), so they ride in ``leaves.npz`` like everything else; the meta
-    entries are informational (and back-compat for old readers).
+    entries carry the format version, per-leaf CRC32s (integrity,
+    DESIGN.md §12), and informational fields (back-compat for old
+    readers).
     """
     os.makedirs(path, exist_ok=True)
-    leaves = jax.tree_util.tree_leaves(obj)
+    leaves = [np.asarray(a) for a in jax.tree_util.tree_leaves(obj)]
     np.savez(os.path.join(path, _LEAVES),
-             **{f"leaf_{i}": np.asarray(a) for i, a in enumerate(leaves)})
-    meta = {"num_leaves": len(leaves), **extra_meta}
+             **{f"leaf_{i}": a for i, a in enumerate(leaves)})
+    meta = {"format_version": FORMAT_VERSION, "num_leaves": len(leaves),
+            "leaf_crc32": [_leaf_crc(a) for a in leaves], **extra_meta}
     with open(os.path.join(path, _META), "w") as f:
         json.dump(meta, f)
 
 
 def _restore_leaves(path: str, like, meta: dict):
     """Unflatten a checkpoint into ``like``'s treedef, validating every
-    leaf's shape against the template (mismatches are a hard error, not a
-    silent reinterpretation)."""
+    leaf's shape against the template AND its recorded CRC32 (format v2)
+    — shape mismatches and flipped bits are hard ``ValueError``s, not a
+    silent reinterpretation / silently scrambled restore."""
     like_leaves, treedef = jax.tree_util.tree_flatten(like)
     if meta["num_leaves"] != len(like_leaves):
         raise ValueError(
             f"checkpoint has {meta['num_leaves']} leaves; template has "
             f"{len(like_leaves)} (different segment count or layout?)")
-    with np.load(os.path.join(path, _LEAVES)) as data:
-        saved = [data[f"leaf_{i}"] for i in range(meta["num_leaves"])]
+    leaves_path = os.path.join(path, _LEAVES)
+    try:
+        with np.load(leaves_path) as data:
+            saved = [data[f"leaf_{i}"] for i in range(meta["num_leaves"])]
+    except FileNotFoundError:
+        raise ValueError(
+            f"checkpoint at {path!r} has no {_LEAVES} (interrupted save?)")
+    except KeyError as e:
+        raise ValueError(
+            f"checkpoint at {path!r} is truncated: {_LEAVES} is missing "
+            f"{e} of the {meta['num_leaves']} recorded leaves") from e
+    except (zipfile.BadZipFile, OSError) as e:
+        raise ValueError(
+            f"checkpoint {_LEAVES} at {path!r} is corrupt: {e}") from e
+    crcs = meta.get("leaf_crc32")
+    if crcs is not None:
+        if len(crcs) != len(saved):
+            raise ValueError(
+                f"checkpoint meta at {path!r} is truncated: "
+                f"{len(crcs)} CRCs for {len(saved)} leaves")
+        for i, (s, want) in enumerate(zip(saved, crcs)):
+            got = _leaf_crc(s)
+            if got != want:
+                raise ValueError(
+                    f"checkpoint corruption at {path!r}: leaf {i} CRC32 "
+                    f"{got:#010x} != recorded {want:#010x} (bit flip or "
+                    f"partial write); restore from an older checkpoint or "
+                    f"replay lineage")
     for i, (s, l) in enumerate(zip(saved, like_leaves)):
         if tuple(s.shape) != tuple(np.shape(l)):
             raise ValueError(
@@ -72,8 +113,25 @@ def _restore_leaves(path: str, like, meta: dict):
 
 
 def _read_meta(path: str) -> dict:
-    with open(os.path.join(path, _META)) as f:
-        return json.load(f)
+    meta_path = os.path.join(path, _META)
+    try:
+        with open(meta_path) as f:
+            text = f.read()
+    except FileNotFoundError:
+        raise ValueError(
+            f"no checkpoint at {path!r}: {_META} is missing (not a "
+            f"checkpoint directory, or an interrupted save)")
+    try:
+        meta = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise ValueError(
+            f"checkpoint {_META} at {path!r} is corrupt or truncated: "
+            f"{e}") from e
+    if not isinstance(meta, dict) or "num_leaves" not in meta:
+        raise ValueError(
+            f"checkpoint {_META} at {path!r} is not a checkpoint record "
+            f"(missing num_leaves)")
+    return meta
 
 
 def save_dtable(path: str, dt: _dtable.DistributedTable):

@@ -461,17 +461,21 @@ def lookup_routed(dt: DistributedTable, keys, valid=None, *,
     return mesh.axis_map(shard, rt)(dt.table, q, qv)
 
 
-def lookup_routed_flat(dt: DistributedTable, keys, *, max_matches: int,
-                       names=None, rt: mesh.Runtime | None = None):
-    """Routed point lookup with the FLAT contract: ``[Q]`` keys in,
-    ``(cols [Q, M], valid [Q, M])`` out — the adapter the facade and the
-    planner execute "RoutedLookup" through.
+def lookup_routed_report(dt: DistributedTable, keys, *, max_matches: int,
+                         capacity: int | None = None, names=None,
+                         rt: mesh.Runtime | None = None):
+    """Routed point lookup, flat contract, WITH the drop-retry report:
+    ``[Q]`` keys in, ``(cols [Q, M], valid [Q, M], answered [Q],
+    dropped [s])`` out.
 
     Splits the batch into ``num_shards`` equal source lanes (padding the
-    tail with invalid queries), rides ``lookup_routed``'s two all-to-alls,
-    and re-flattens the per-shard answers into input order.  Capacity is
-    the per-shard lane count, so the exchange can never drop a query —
-    the retry contract never fires on this path.
+    tail with invalid queries) and rides ``lookup_routed``'s two
+    all-to-alls.  ``capacity`` bounds each (src, dest) exchange lane —
+    ``None`` means the lane count, which can never drop; anything smaller
+    surfaces overflow as ``answered=False`` per query plus per-shard
+    ``dropped`` counts, never a silent miss.  That is the retry contract
+    a caller (or ``dist.resilience.RecoveryManager``, which automates it
+    with doubled capacity under a backoff budget) resubmits against.
     """
     rt = mesh.resolve(rt).check(dt.num_shards)
     joins.check_max_matches(max_matches)
@@ -482,12 +486,30 @@ def lookup_routed_flat(dt: DistributedTable, keys, *, max_matches: int,
     n = max(1, -(-qn // s))
     qpad = jnp.pad(q, (0, s * n - qn))
     qvalid = jnp.arange(s * n) < qn
-    cols, valid, _, _ = lookup_routed(
+    cols, valid, answered, dropped = lookup_routed(
         dt, qpad.reshape(s, n), qvalid.reshape(s, n),
-        max_matches=max_matches, names=names, rt=rt)
+        max_matches=max_matches, capacity=capacity, names=names, rt=rt)
     flat = {k: v.reshape((s * n,) + v.shape[2:])[:qn]
             for k, v in cols.items()}
-    return flat, valid.reshape(s * n, max_matches)[:qn]
+    return (flat, valid.reshape(s * n, max_matches)[:qn],
+            answered.reshape(s * n)[:qn], dropped)
+
+
+def lookup_routed_flat(dt: DistributedTable, keys, *, max_matches: int,
+                       names=None, rt: mesh.Runtime | None = None):
+    """Routed point lookup with the FLAT contract: ``[Q]`` keys in,
+    ``(cols [Q, M], valid [Q, M])`` out — the adapter the facade and the
+    planner execute "RoutedLookup" through.
+
+    Capacity is the per-shard lane count, so the exchange can never drop
+    a query — the retry contract never fires on this path
+    (``lookup_routed_report`` is the capacity-bounded form that surfaces
+    it).
+    """
+    cols, valid, _, _ = lookup_routed_report(
+        dt, keys, max_matches=max_matches, capacity=None, names=names,
+        rt=rt)
+    return cols, valid
 
 
 def choose_lookup(dt, total_queries: int, *,

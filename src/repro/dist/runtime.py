@@ -42,6 +42,13 @@ class Lineage:
     Records the base dataframe and every appended delta (defensive copies
     — lineage must survive mutation of the caller's buffers).  ``replay``
     re-runs the exact construction pipeline at any shard count.
+
+    The log would grow without bound under a write-hot stream, so it can
+    be **checkpoint-anchored** (``truncate``): once a checkpoint holds the
+    dtable at version ``v``, every delta at or below ``v`` is subsumed by
+    the checkpoint and dropped — replay becomes restore-the-anchor plus
+    the *suffix* of deltas since it, O(deltas since last checkpoint)
+    instead of O(full history) (paper §III-D; DESIGN.md §12).
     """
 
     def __init__(self, schema: Schema, base_cols: dict, *,
@@ -53,25 +60,91 @@ class Lineage:
         self.slots = slots
         self.base = {k: np.array(v, copy=True)
                      for k, v in base_cols.items()}
-        self.deltas: list[dict] = []
+        self.deltas: list[tuple[dict, np.ndarray | None]] = []
+        # version the replay STARTS from: 0 = the base recipe; after
+        # truncate(v, path) the anchor checkpoint holds version v.
+        self.base_version = 0
+        self.anchor_path: str | None = None
 
-    def record_append(self, delta_cols: dict):
-        self.deltas.append({k: np.array(v, copy=True)
-                            for k, v in delta_cols.items()})
+    @property
+    def version(self) -> int:
+        """The dtable version a full replay reproduces (one bump per
+        recorded append; appends are the only version-bumping ops a
+        lineage records)."""
+        return self.base_version + len(self.deltas)
+
+    @property
+    def has_base(self) -> bool:
+        """Whether a from-scratch replay is still possible (False once
+        ``truncate`` anchored the log to a checkpoint)."""
+        return self.base is not None
+
+    def record_append(self, delta_cols: dict, valid=None):
+        self.deltas.append((
+            {k: np.array(v, copy=True) for k, v in delta_cols.items()},
+            None if valid is None else np.array(valid, bool, copy=True)))
+
+    def deltas_since(self, version: int) -> list:
+        """The replay suffix for a dtable restored at ``version``."""
+        k = version - self.base_version
+        if not 0 <= k <= len(self.deltas):
+            raise ValueError(
+                f"lineage covers versions [{self.base_version}, "
+                f"{self.version}]; cannot take the suffix after {version}")
+        return self.deltas[k:]
+
+    def truncate(self, version: int, checkpoint_path: str):
+        """Anchor the log at a checkpoint: deltas at or below ``version``
+        are subsumed by ``checkpoint_path`` and dropped (the base recipe
+        too).  Closes the unbounded delta log: replay cost from here on is
+        O(deltas since the anchor)."""
+        suffix = self.deltas_since(version)   # validates the version
+        self.deltas = suffix
+        self.base_version = version
+        self.anchor_path = checkpoint_path
+        self.base = None
+
+    def _apply(self, dt: _dtable.DistributedTable, deltas,
+               rt: "_mesh.Runtime | None") -> _dtable.DistributedTable:
+        for delta, valid in deltas:
+            dt = _dtable.append_distributed(dt, delta, valid, rt=rt)
+        return dt
+
+    def replay_from(self, checkpoint_path: str, version: int, like, *,
+                    rt: "_mesh.Runtime | None" = None
+                    ) -> _dtable.DistributedTable:
+        """Restore the checkpoint holding ``version`` into ``like``'s
+        structure, then replay only the lineage suffix since it — the
+        fast recovery path (O(deltas since checkpoint)).  Raises
+        ``ValueError`` on a corrupt/missing checkpoint (CRC-verified,
+        dist/checkpoint.py) or a version outside the log."""
+        from repro.dist import checkpoint as _ckpt
+        suffix = self.deltas_since(version)   # validate before touching IO
+        dt = _ckpt.restore_dtable(checkpoint_path, like)
+        return self._apply(dt, suffix, rt)
 
     def replay(self, num_shards: int,
-               rt: "_mesh.Runtime | None" = None
-               ) -> _dtable.DistributedTable:
+               rt: "_mesh.Runtime | None" = None, *,
+               like=None) -> _dtable.DistributedTable:
         """Re-run the construction pipeline — on whichever execution
         backend the live system uses (lineage is backend-agnostic: the
-        two are bit-identical, tests/test_mesh_parity.py)."""
+        two are bit-identical, tests/test_mesh_parity.py).  A truncated
+        lineage replays from its anchor checkpoint instead of the base
+        recipe and then needs ``like`` (the live dtable) as the restore
+        template."""
+        if self.base is None:
+            if like is None:
+                raise ValueError(
+                    "lineage was truncated to a checkpoint anchor; "
+                    "replay needs like= (the live dtable) as the restore "
+                    "template")
+            return self.replay_from(self.anchor_path, self.base_version,
+                                    like, rt=rt)
         dt = _dtable.create_distributed(
             self.base, self.schema, num_shards,
             rows_per_batch=self.rows_per_batch, layout=self.layout,
             slots=self.slots, rt=rt)
-        for delta in self.deltas:
-            dt = _dtable.append_distributed(dt, delta, rt=rt)
-        return dt
+        return self._apply(dt, self.deltas, rt)
 
 
 def fail_shard(dt: _dtable.DistributedTable,
@@ -118,18 +191,14 @@ def fail_shard(dt: _dtable.DistributedTable,
     return dataclasses.replace(dt, table=table)
 
 
-def rebuild_shard(dt: _dtable.DistributedTable, shard: int,
-                  lineage: Lineage,
-                  rt: "_mesh.Runtime | None" = None
-                  ) -> _dtable.DistributedTable:
-    """Lineage recovery (paper Fig 12): rebuild one shard and splice it in.
-
-    CI-scale replays the whole pipeline and takes the shard's slice —
-    determinism makes the splice exact; a production runtime re-routes
-    only the lost partition's rows.  Raises if the lineage's version
-    disagrees with the live dtable (missed ``record_append``).
-    """
-    fresh = lineage.replay(dt.num_shards, rt=rt)
+def splice_shard(dt: _dtable.DistributedTable, shard: int,
+                 fresh: _dtable.DistributedTable
+                 ) -> _dtable.DistributedTable:
+    """Splice one shard's slice of ``fresh`` into ``dt`` (the recovery
+    state machine's final step — DESIGN.md §12).  Leaf shapes are
+    untouched, so the spliced dtable re-enters every live jit cache
+    entry.  Raises if the two dtables disagree on the global version
+    (a lineage that missed a ``record_append``)."""
     if int(np.asarray(fresh.version)) != int(np.asarray(dt.version)):
         raise ValueError(
             f"lineage replays to version {int(np.asarray(fresh.version))} "
@@ -142,6 +211,23 @@ def rebuild_shard(dt: _dtable.DistributedTable, shard: int,
 
     table = jax.tree.map(splice, dt.table, fresh.table)
     return dataclasses.replace(dt, table=table)
+
+
+def rebuild_shard(dt: _dtable.DistributedTable, shard: int,
+                  lineage: Lineage,
+                  rt: "_mesh.Runtime | None" = None
+                  ) -> _dtable.DistributedTable:
+    """Lineage recovery (paper Fig 12): rebuild one shard and splice it in.
+
+    CI-scale replays the whole pipeline and takes the shard's slice —
+    determinism makes the splice exact; a production runtime re-routes
+    only the lost partition's rows.  A checkpoint-anchored lineage
+    replays restore + suffix instead of the full history.  Raises if the
+    lineage's version disagrees with the live dtable (missed
+    ``record_append``).
+    """
+    fresh = lineage.replay(dt.num_shards, rt=rt, like=dt)
+    return splice_shard(dt, shard, fresh)
 
 
 @dataclasses.dataclass
@@ -176,16 +262,33 @@ class VersionVector:
 
 
 class StragglerPolicy:
-    """Speculative re-execution planning (deadline = factor x median)."""
+    """Speculative re-execution planning (deadline = factor x median).
 
-    def __init__(self, deadline_factor: float = 2.0):
+    ``min_deadline`` is an absolute floor (seconds): an all-fast batch has
+    a near-zero median, and ``factor × ~0`` would flag every harmless
+    microsecond of jitter as a straggler.  Below the floor, nothing is
+    slow enough to be worth a speculative copy.
+    """
+
+    def __init__(self, deadline_factor: float = 2.0,
+                 min_deadline: float = 1e-3):
+        if deadline_factor <= 0 or min_deadline < 0:
+            raise ValueError(
+                f"deadline_factor must be > 0 and min_deadline >= 0, got "
+                f"{deadline_factor!r} / {min_deadline!r}")
         self.deadline_factor = deadline_factor
+        self.min_deadline = min_deadline
         self.slow: list[int] = []
 
     def observe(self, durations) -> list:
-        """Record per-shard task durations; returns straggler indices."""
+        """Record per-shard task durations; returns straggler indices.
+        An empty batch observes nothing (and clears the straggler set)."""
         d = np.asarray(durations, dtype=np.float64)
-        deadline = self.deadline_factor * float(np.median(d))
+        if d.size == 0:
+            self.slow = []
+            return self.slow
+        deadline = max(self.deadline_factor * float(np.median(d)),
+                       self.min_deadline)
         self.slow = [i for i, t in enumerate(d) if t > deadline]
         return self.slow
 

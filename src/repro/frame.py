@@ -324,6 +324,22 @@ class IndexedFrame:
             new = table_mod.compact(self.data, reserve=reserve)
         return dataclasses.replace(self, data=new)
 
+    # -- supervision (self-healing reads) --------------------------------------
+
+    def supervised(self, *, lineage=None, policy=None, injector=None,
+                   checkpoint_dir: str | None = None):
+        """Wrap this distributed frame in a ``dist.resilience``
+        ``RecoveryManager``: reads are version-fenced, integrity-probed,
+        auto-healed (restore latest checkpoint + replay the lineage
+        suffix + splice), and routed drops auto-retry with doubled
+        capacity — failure handling as part of the operator contract
+        instead of the caller's job (DESIGN.md §12).  The manager owns
+        the live frame from here on (``manager.frame``)."""
+        from repro.dist import resilience
+        return resilience.RecoveryManager(
+            self, lineage=lineage, policy=policy, injector=injector,
+            checkpoint_dir=checkpoint_dir)
+
     # -- relational plans ------------------------------------------------------
 
     def relation(self, name: str = "frame") -> planner_mod.Relation:

@@ -315,6 +315,96 @@ def test_no_retrace_across_appends_shard_map(s, rng):
         vb, dist.lookup(d2b, q, max_matches=4, rt=mesh.vmap_runtime())[1])
 
 
+# --- failure path under shard_map (ISSUE 6 satellite) ---------------------
+
+@pytest.mark.parametrize("s", MESHES)
+def test_failed_shard_all_miss_under_shard_map(s, rng):
+    """A dead shard answers every lookup with a miss under the REAL mesh
+    backend — the sentinel blanking survives shard_map lowering (psum
+    owner-select, all_to_all routing), never a fabricated key-0 match."""
+    cols, rv, rs, dtv, dts = _built(s)
+    dead = 1 % s
+    owned = _keys_owned_by(dead, s, 2 * s)
+    brv, brs = drt.fail_shard(dtv, dead), drt.fail_shard(dts, dead)
+    gb, vb, _ = dist.lookup(brv, owned, max_matches=8, rt=rv)
+    gs, vs, _ = dist.lookup(brs, owned, max_matches=8, rt=rs)
+    assert int(np.asarray(vb).sum()) == 0
+    assert int(np.asarray(vs).sum()) == 0
+    qr = np.broadcast_to(owned[:s], (s, s)).copy()
+    cvr = dist.lookup_routed(brv, qr, max_matches=8, rt=rv)
+    csr = dist.lookup_routed(brs, qr, max_matches=8, rt=rs)
+    _assert_trees_bitwise_equal(cvr, csr)
+    _, vr, ans, dropped = csr
+    assert bool(np.asarray(ans).all())          # delivered to the owner...
+    assert int(np.asarray(vr).sum()) == 0       # ...which honestly missed
+    assert int(np.asarray(dropped).sum()) == 0
+
+
+@pytest.mark.parametrize("s", MESHES)
+def test_routed_drop_retry_contract_under_shard_map(s, rng):
+    """The drop->retry contract on the real mesh: a capacity-starved
+    exchange REPORTS its drops (bit-identical to vmap), and resubmitting
+    at doubled capacity delivers everything — exactly the loop
+    resilience.RecoveryManager automates."""
+    cols, rv, rs, dtv, dts = _built(s)
+    hot = _keys_owned_by(0, s, 8)               # all owned by shard 0
+    q = np.broadcast_to(hot, (s, 8)).copy()
+    cap = 2
+    outv = dist.lookup_routed(dtv, q, max_matches=8, capacity=cap, rt=rv)
+    outs = dist.lookup_routed(dts, q, max_matches=8, capacity=cap, rt=rs)
+    _assert_trees_bitwise_equal(outv, outs)
+    _, _, answered, dropped = outs
+    n_dropped = int(np.asarray(dropped).sum())
+    assert n_dropped > 0                        # starved: reported, not silent
+    assert int(np.asarray(answered).sum()) + n_dropped == q.size
+    while n_dropped > 0:                        # the retry contract
+        cap *= 2
+        _, valid, answered, dropped = dist.lookup_routed(
+            dts, q, max_matches=8, capacity=min(cap, 8), rt=rs)
+        n_dropped = int(np.asarray(dropped).sum())
+    assert bool(np.asarray(answered).all())
+    # delivered queries answer with the key's true multiplicity (capped
+    # at max_matches) — retry recovered everything the starved pass lost
+    mult = np.minimum(np.bincount(cols["k"])[hot], 8)
+    np.testing.assert_array_equal(np.asarray(valid).sum(-1),
+                                  np.broadcast_to(mult, (s, 8)))
+
+
+@pytest.mark.parametrize("s", MESHES)
+def test_supervised_recovery_under_shard_map(s, rng, tmp_path):
+    """The tentpole's state machine on the real mesh backend: a seeded
+    shard kill through frame.supervised heals via checkpoint + lineage
+    suffix and stays bit-identical to a never-failed vmap twin."""
+    from repro.dist.resilience import Fault, FaultInjector, RecoveryPolicy
+    from repro.frame import IndexedFrame
+    cols, rv, rs, _, _ = _built(s)
+    frame = IndexedFrame.from_columns(cols, SCH, num_shards=s,
+                                      rows_per_batch=128, rt=rs)
+    twin = IndexedFrame.from_columns(cols, SCH, num_shards=s,
+                                     rows_per_batch=128, rt=rv)
+    lin = drt.Lineage(SCH, cols, rows_per_batch=128)
+    mgr = frame.supervised(
+        lineage=lin,
+        injector=FaultInjector([Fault("shard_loss", step=3,
+                                      shard=1 % s)]),
+        policy=RecoveryPolicy(checkpoint_every=2),
+        checkpoint_dir=str(tmp_path / "ckpts"))
+    q = rng.choice(cols["k"], 48).astype(np.int64)
+    for step in range(6):
+        c, v = mgr.lookup(q, max_matches=8)
+        tc, tv = twin.lookup(q, max_matches=8)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(tv))
+        for k in tc:
+            np.testing.assert_array_equal(np.asarray(c[k]),
+                                          np.asarray(tc[k]))
+        delta = {"k": np.asarray([1000 + step], np.int64),
+                 "v": np.asarray([float(step)], np.float32)}
+        mgr.append(delta)
+        twin = twin.append(delta)
+    assert mgr.stats.recoveries == 1 and not mgr.dead
+    assert mgr.retraces == 1                    # zero recompiles post-heal
+
+
 # --- routed lookup miss/overflow semantics (any topology) -----------------
 
 def _keys_owned_by(shard, num_shards, count, start=0):
@@ -478,19 +568,83 @@ print("MESH_PARITY_8DEV_OK")
 """
 
 
-@pytest.mark.skipif(NDEV >= 8, reason="in-process mesh tests already "
-                    "run on this topology")
-def test_parity_on_forced_8_device_mesh_subprocess():
-    """The acceptance topology: even a single-device tier-1 run proves
-    the shard_map backend on a forced 8-device host mesh."""
+_SUBPROCESS_FAILURE = r"""
+import numpy as np, jax, tempfile
+from repro import dist
+from repro.core import Schema, hashing
+from repro.dist import mesh
+from repro.dist import runtime as drt
+from repro.dist.resilience import Fault, FaultInjector, RecoveryPolicy
+from repro.frame import IndexedFrame
+assert len(jax.devices()) == 8, jax.devices()
+SCH = Schema.of("k", k="int64", v="float32")
+rng = np.random.default_rng(3)
+cols = {"k": rng.integers(0, 200, 800).astype(np.int64),
+        "v": rng.random(800).astype(np.float32)}
+rv, rs = mesh.vmap_runtime(), mesh.mesh_runtime(8)
+# dead shard answers all-miss on the real mesh
+dts = dist.create_distributed(cols, SCH, 8, rows_per_batch=64, rt=rs)
+dead = 2
+owned = [k for k in range(500)
+         if int(hashing.partition_hash_host(np.asarray([k]), 8)[0]) == dead]
+owned = np.asarray(owned[:16], np.int64)
+_, vs, _ = dist.lookup(drt.fail_shard(dts, dead), owned, max_matches=8, rt=rs)
+assert int(np.asarray(vs).sum()) == 0
+# supervised kill-one-shard heals bit-identical to a never-failed vmap twin
+frame = IndexedFrame.from_columns(cols, SCH, num_shards=8,
+                                  rows_per_batch=64, rt=rs)
+twin = IndexedFrame.from_columns(cols, SCH, num_shards=8,
+                                 rows_per_batch=64, rt=rv)
+mgr = frame.supervised(
+    lineage=drt.Lineage(SCH, cols, rows_per_batch=64),
+    injector=FaultInjector([Fault("shard_loss", step=3, shard=dead)]),
+    policy=RecoveryPolicy(checkpoint_every=2),
+    checkpoint_dir=tempfile.mkdtemp())
+q = rng.choice(cols["k"], 48).astype(np.int64)
+for step in range(6):
+    c, v = mgr.lookup(q, max_matches=8)
+    tc, tv = twin.lookup(q, max_matches=8)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(tv))
+    for k in tc:
+        np.testing.assert_array_equal(np.asarray(c[k]), np.asarray(tc[k]))
+    delta = {"k": np.asarray([1000 + step], np.int64),
+             "v": np.asarray([float(step)], np.float32)}
+    mgr.append(delta)
+    twin = twin.append(delta)
+assert mgr.stats.recoveries == 1 and not mgr.dead, vars(mgr.stats)
+assert mgr.retraces == 1, mgr.retraces
+print("MESH_FAILURE_8DEV_OK")
+"""
+
+
+def _run_forced_8(script: str) -> subprocess.CompletedProcess:
     import repro
     src = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                         + " --xla_force_host_platform_device_count=8").strip()
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS_PARITY],
+    return subprocess.run([sys.executable, "-c", script],
                           capture_output=True, text=True, env=env,
                           timeout=600)
+
+
+@pytest.mark.skipif(NDEV >= 8, reason="in-process mesh tests already "
+                    "run on this topology")
+def test_parity_on_forced_8_device_mesh_subprocess():
+    """The acceptance topology: even a single-device tier-1 run proves
+    the shard_map backend on a forced 8-device host mesh."""
+    proc = _run_forced_8(_SUBPROCESS_PARITY)
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     assert "MESH_PARITY_8DEV_OK" in proc.stdout
+
+
+@pytest.mark.skipif(NDEV >= 8, reason="in-process mesh tests already "
+                    "run on this topology")
+def test_failure_path_on_forced_8_device_mesh_subprocess():
+    """The failure path on the acceptance topology: dead-shard all-miss
+    and the supervised kill -> heal -> bit-identical contract, under a
+    forced 8-device shard_map mesh."""
+    proc = _run_forced_8(_SUBPROCESS_FAILURE)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "MESH_FAILURE_8DEV_OK" in proc.stdout

@@ -1,0 +1,400 @@
+"""Self-healing supervision layer (dist/resilience.py; DESIGN.md §12).
+
+The contract under test is the paper's Fig-12 shape made automatic: a
+seeded chaos plan kills shards / delays stragglers / squeezes routed
+capacity / corrupts checkpoints mid-stream, and ``frame.supervised``
+reads keep returning answers bit-identical to a never-failed twin frame
+— with zero caller-side failure handling, zero retraces of the fused
+read sites after recovery, and replay cost bounded by the lineage
+suffix since the last checkpoint.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+pytest.importorskip("repro.dist")
+
+import jax.numpy as jnp
+
+from repro.core import Schema
+from repro.dist import checkpoint as ckpt
+from repro.dist.resilience import (FAULT_KINDS, Fault, FaultInjector,
+                                   RecoveryManager, RecoveryPolicy)
+from repro.dist.runtime import Lineage, StragglerPolicy, fail_shard
+from repro.frame import IndexedFrame
+
+SCH = Schema.of("k", k="int64", v="float32")
+N = 512
+
+
+def _base_cols(rng, n=N):
+    return {"k": np.arange(n, dtype=np.int64),
+            "v": rng.standard_normal(n).astype(np.float32)}
+
+
+def _delta(step, width=8):
+    lo = N + step * width
+    return {"k": np.arange(lo, lo + width, dtype=np.int64),
+            "v": np.full(width, float(step), np.float32)}
+
+
+def _supervised(rng, tmp_path, *, faults=(), num_shards=4,
+                policy=None, seed=0):
+    cols = _base_cols(rng)
+    frame = IndexedFrame.from_columns(cols, SCH, num_shards=num_shards)
+    twin = IndexedFrame.from_columns(cols, SCH, num_shards=num_shards)
+    mgr = frame.supervised(
+        lineage=Lineage(SCH, cols),
+        injector=FaultInjector(faults, seed=seed),
+        policy=policy or RecoveryPolicy(checkpoint_every=2),
+        checkpoint_dir=str(tmp_path / "ckpts"))
+    return mgr, twin
+
+
+def _assert_same_answers(mgr, twin, q, *, max_matches=4, op="auto"):
+    cols, valid = mgr.lookup(q, max_matches=max_matches, op=op)
+    tc, tv = twin.lookup(q, max_matches=max_matches, op=op)
+    np.testing.assert_array_equal(np.asarray(valid), np.asarray(tv))
+    for k in tc:
+        np.testing.assert_array_equal(np.asarray(cols[k]), np.asarray(tc[k]))
+
+
+# --- Fault / FaultInjector ------------------------------------------------
+
+
+def test_fault_validates():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("meteor_strike", step=0)
+    with pytest.raises(ValueError):
+        Fault("shard_loss", step=-1)
+    with pytest.raises(ValueError):
+        Fault("straggler", step=0, severity=0.0)
+
+
+def test_injector_fires_at_planned_steps():
+    inj = FaultInjector([Fault("shard_loss", step=2, shard=1),
+                         Fault("straggler", step=2, shard=0),
+                         Fault("capacity_pressure", step=5)])
+    fired = [inj.tick() for _ in range(6)]
+    assert [len(f) for f in fired] == [0, 0, 2, 0, 0, 1]
+    assert {f.kind for f in fired[2]} == {"shard_loss", "straggler"}
+    assert len(inj.fired) == 3
+
+
+def test_plan_random_is_deterministic():
+    mk = lambda: FaultInjector.plan_random(seed=7, num_shards=4, steps=20,
+                                           n_faults=3)
+    assert mk().plan == mk().plan
+    other = FaultInjector.plan_random(seed=8, num_shards=4, steps=20,
+                                      n_faults=3)
+    assert mk().plan != other.plan
+    for f in mk().plan:
+        assert f.kind in FAULT_KINDS and 1 <= f.step < 20
+
+
+def test_corrupt_checkpoint_detected_by_restore(rng, tmp_path):
+    cols = _base_cols(rng)
+    frame = IndexedFrame.from_columns(cols, SCH, num_shards=4)
+    path = str(tmp_path / "ck")
+    ckpt.save_dtable(path, frame.data)
+    FaultInjector(seed=3).corrupt_checkpoint(path)
+    with pytest.raises(ValueError, match="CRC32"):
+        ckpt.restore_dtable(path, frame.data)
+
+
+# --- supervised recovery (the tentpole acceptance path) -------------------
+
+
+def test_seeded_shard_kill_recovers_bit_identical(rng, tmp_path):
+    mgr, twin = _supervised(
+        rng, tmp_path, faults=[Fault("shard_loss", step=3, shard=2)])
+    q = rng.integers(0, N, size=64).astype(np.int64)
+    for step in range(8):
+        _assert_same_answers(mgr, twin, q)
+        d = _delta(step)
+        mgr.append(d)
+        twin = twin.append(d)
+    assert mgr.stats.recoveries == 1
+    assert not mgr.dead
+    # zero recompiles: ONE trace of the fused read site across the kill
+    assert mgr.retraces == 1
+    # replay cost is the checkpoint-anchored suffix, not full history
+    assert mgr.stats.replayed_deltas[0] <= 2
+
+
+def test_recovery_replays_only_checkpoint_suffix(rng, tmp_path):
+    mgr, twin = _supervised(
+        rng, tmp_path, faults=[Fault("shard_loss", step=8, shard=1)],
+        policy=RecoveryPolicy(checkpoint_every=3))
+    q = rng.integers(0, N, size=32).astype(np.int64)
+    for step in range(10):
+        mgr.append(_delta(step))
+        twin = twin.append(_delta(step))
+    _assert_same_answers(mgr, twin, q)
+    assert mgr.stats.recoveries == 1
+    # 10 appends, checkpoint every 3 -> at most 3 deltas past the anchor
+    assert mgr.stats.replayed_deltas[0] <= 3
+    assert len(mgr.lineage.deltas) < 10   # truncate kept the log bounded
+
+
+def test_corrupt_newest_checkpoint_falls_back_to_older(rng, tmp_path):
+    mgr, twin = _supervised(
+        rng, tmp_path,
+        faults=[Fault("checkpoint_corruption", step=9),
+                Fault("shard_loss", step=10, shard=0)],
+        policy=RecoveryPolicy(checkpoint_every=2, keep_checkpoints=3))
+    q = rng.integers(0, N, size=32).astype(np.int64)
+    for step in range(7):
+        mgr.append(_delta(step))
+        twin = twin.append(_delta(step))
+        _assert_same_answers(mgr, twin, q)
+    assert mgr.stats.recoveries == 1
+    assert mgr.stats.corrupt_checkpoints >= 1   # newest was rejected
+    assert not mgr.dead
+
+
+def test_budget_exhausted_degrades_honestly(rng, tmp_path):
+    cols = _base_cols(rng)
+    frame = IndexedFrame.from_columns(cols, SCH, num_shards=4)
+    # no lineage, no checkpoints: shard 2 is unrecoverable by design
+    mgr = RecoveryManager(
+        frame, injector=FaultInjector([Fault("shard_loss", step=1,
+                                             shard=2)]))
+    q = rng.integers(0, N, size=64).astype(np.int64)
+    mgr.lookup(q, max_matches=4)
+    cols_out, valid = mgr.lookup(q, max_matches=4)
+    rep = mgr.last_report
+    assert mgr.dead == {2} and rep.degraded
+    from repro.core import hashing
+    owner = hashing.partition_hash_host(q, 4)
+    np.testing.assert_array_equal(rep.answered, owner != 2)
+    # dead shard answers are misses, never fabricated matches
+    assert not np.asarray(valid)[owner == 2].any()
+    assert np.asarray(valid)[owner != 2].any()
+    assert mgr.stats.degraded_reads >= 1
+
+
+def test_routed_pressure_retries_until_delivered(rng, tmp_path):
+    mgr, twin = _supervised(
+        rng, tmp_path,
+        faults=[Fault("capacity_pressure", step=1, severity=8.0)])
+    # big batch so the planner picks RoutedLookup on its own
+    q = rng.integers(0, N, size=2048).astype(np.int64)
+    _assert_same_answers(mgr, twin, q, op="routed")   # tick 0: no fault
+    _assert_same_answers(mgr, twin, q, op="routed")   # tick 1: pressured
+    assert mgr.stats.retries >= 1                     # capacity doubled
+    assert mgr.last_report.dropped == 0               # ...until delivered
+    assert mgr.last_report.retries >= 1
+
+
+def test_straggler_fault_plans_speculative_copy(rng, tmp_path):
+    mgr, _ = _supervised(
+        rng, tmp_path,
+        faults=[Fault("straggler", step=1, shard=3, severity=16.0)])
+    q = rng.integers(0, N, size=16).astype(np.int64)
+    mgr.lookup(q, max_matches=4)
+    mgr.lookup(q, max_matches=4)
+    assert mgr.stats.straggler_events == 1
+    plan = mgr.stats.speculative_plans[0]
+    assert 3 in plan and plan[3] != 3
+
+
+def test_supervised_join_heals_too(rng, tmp_path):
+    mgr, twin = _supervised(
+        rng, tmp_path, faults=[Fault("shard_loss", step=1, shard=1)])
+    probe = {"k": rng.integers(0, N, size=48).astype(np.int64)}
+    mgr.join(probe, "k", max_matches=4)         # tick 0 clean
+    b, p, v = mgr.join(probe, "k", max_matches=4)   # kill fires, heals
+    tb, tp, tv = twin.join(probe, "k", max_matches=4)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(tv))
+    for k in tb:
+        np.testing.assert_array_equal(np.asarray(b[k]), np.asarray(tb[k]))
+    assert mgr.stats.recoveries == 1 and not mgr.last_report.degraded
+
+
+def test_supervised_rejects_local_frame(rng):
+    frame = IndexedFrame.from_columns(_base_cols(rng), SCH, num_shards=1)
+    with pytest.raises(ValueError, match="distributed"):
+        frame.supervised()
+
+
+def test_append_list_coalesces_and_records_lineage(rng, tmp_path):
+    mgr, twin = _supervised(rng, tmp_path, faults=[
+        Fault("shard_loss", step=4, shard=0)])
+    q = rng.integers(0, N, size=32).astype(np.int64)
+    deltas = [_delta(0), _delta(1)]
+    mgr.append(deltas)               # ONE fused ingest, one lineage record
+    twin = twin.append(deltas)
+    assert int(np.asarray(mgr.frame.version)) == \
+        int(np.asarray(twin.version))
+    for step in range(2, 6):
+        mgr.append(_delta(step))
+        twin = twin.append(_delta(step))
+    _assert_same_answers(mgr, twin, q)
+    assert mgr.stats.recoveries == 1
+
+
+# --- Lineage.truncate / deltas_since (checkpoint anchoring) ---------------
+
+
+def test_lineage_truncate_bounds_log_and_validates(rng, tmp_path):
+    cols = _base_cols(rng)
+    lin = Lineage(SCH, cols)
+    frame = IndexedFrame.from_columns(cols, SCH, num_shards=4)
+    for step in range(4):
+        frame = frame.append(_delta(step))
+        lin.record_append(_delta(step))
+    path = str(tmp_path / "anchor")
+    ckpt.save_dtable(path, frame.data)
+    lin.truncate(4, path)
+    assert lin.base_version == 4 and not lin.has_base
+    assert len(lin.deltas) == 0 and lin.version == 4
+    with pytest.raises(ValueError, match="suffix"):
+        lin.deltas_since(2)          # below the anchor: gone
+    frame2 = frame.append(_delta(4))
+    lin.record_append(_delta(4))
+    rebuilt = lin.replay(4, like=frame.data)
+    q = np.arange(N + 5 * 8, dtype=np.int64)
+    gc, gv = IndexedFrame(data=rebuilt).lookup(q, max_matches=4, op="bcast")
+    tc, tv = frame2.lookup(q, max_matches=4, op="bcast")
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(tv))
+    for k in tc:
+        np.testing.assert_array_equal(np.asarray(gc[k]), np.asarray(tc[k]))
+
+
+def test_truncated_lineage_replay_needs_template(rng, tmp_path):
+    cols = _base_cols(rng)
+    lin = Lineage(SCH, cols)
+    frame = IndexedFrame.from_columns(cols, SCH, num_shards=4)
+    path = str(tmp_path / "anchor")
+    ckpt.save_dtable(path, frame.data)
+    lin.truncate(0, path)
+    with pytest.raises(ValueError, match="like"):
+        lin.replay(4)
+
+
+# --- StragglerPolicy guards (satellite) -----------------------------------
+
+
+def test_straggler_empty_durations_no_crash():
+    sp = StragglerPolicy()
+    assert sp.observe([]) == []
+    assert sp.observe(np.array([])) == []
+
+
+def test_straggler_all_fast_batch_flags_nothing():
+    sp = StragglerPolicy()
+    # near-zero median: factor x median ~ 0 would flag harmless jitter
+    assert sp.observe([1e-7, 2e-7, 1.5e-7, 9e-7]) == []
+
+
+def test_straggler_floor_still_catches_real_stragglers():
+    sp = StragglerPolicy(min_deadline=1e-3)
+    assert sp.observe([1e-4, 1.2e-4, 0.9e-4, 0.5]) == [3]
+    assert sp.observe([1.0, 1.1, 0.9, 5.0]) == [3]
+
+
+def test_straggler_validates_params():
+    with pytest.raises(ValueError):
+        StragglerPolicy(deadline_factor=0.0)
+    with pytest.raises(ValueError):
+        StragglerPolicy(min_deadline=-1.0)
+
+
+# --- checkpoint integrity (satellite) -------------------------------------
+
+
+def test_checkpoint_meta_has_format_version_and_crcs(rng, tmp_path):
+    frame = IndexedFrame.from_columns(_base_cols(rng), SCH, num_shards=2)
+    path = str(tmp_path / "ck")
+    ckpt.save_dtable(path, frame.data)
+    import json
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["format_version"] == ckpt.FORMAT_VERSION
+    assert len(meta["leaf_crc32"]) == meta["num_leaves"]
+
+
+def test_checkpoint_missing_meta_raises(rng, tmp_path):
+    frame = IndexedFrame.from_columns(_base_cols(rng), SCH, num_shards=2)
+    path = str(tmp_path / "ck")
+    ckpt.save_dtable(path, frame.data)
+    os.remove(os.path.join(path, "meta.json"))
+    with pytest.raises(ValueError, match="meta.json is missing"):
+        ckpt.restore_dtable(path, frame.data)
+
+
+def test_checkpoint_truncated_meta_raises(rng, tmp_path):
+    frame = IndexedFrame.from_columns(_base_cols(rng), SCH, num_shards=2)
+    path = str(tmp_path / "ck")
+    ckpt.save_dtable(path, frame.data)
+    meta_path = os.path.join(path, "meta.json")
+    with open(meta_path) as f:
+        text = f.read()
+    with open(meta_path, "w") as f:
+        f.write(text[:len(text) // 2])
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        ckpt.restore_dtable(path, frame.data)
+
+
+def test_checkpoint_missing_leaves_raises(rng, tmp_path):
+    frame = IndexedFrame.from_columns(_base_cols(rng), SCH, num_shards=2)
+    path = str(tmp_path / "ck")
+    ckpt.save_dtable(path, frame.data)
+    os.remove(os.path.join(path, "leaves.npz"))
+    with pytest.raises(ValueError, match="leaves.npz"):
+        ckpt.restore_dtable(path, frame.data)
+
+
+def test_v1_checkpoint_without_crcs_still_restores(rng, tmp_path):
+    # back-compat: a meta.json with no leaf_crc32 (format v1) skips the
+    # CRC pass but keeps shape validation
+    frame = IndexedFrame.from_columns(_base_cols(rng), SCH, num_shards=2)
+    path = str(tmp_path / "ck")
+    ckpt.save_dtable(path, frame.data)
+    import json
+    meta_path = os.path.join(path, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["leaf_crc32"]
+    meta["format_version"] = 1
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    restored = ckpt.restore_dtable(path, frame.data)
+    q = np.arange(32, dtype=np.int64)
+    gc, gv = IndexedFrame(data=restored).lookup(q, max_matches=4, op="bcast")
+    tc, tv = frame.lookup(q, max_matches=4, op="bcast")
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(tv))
+
+
+# --- splice/version guards ------------------------------------------------
+
+
+def test_splice_rejects_version_mismatch(rng):
+    from repro.dist.runtime import splice_shard
+    cols = _base_cols(rng)
+    frame = IndexedFrame.from_columns(cols, SCH, num_shards=4)
+    ahead = frame.append(_delta(0))
+    with pytest.raises(ValueError, match="version"):
+        splice_shard(frame.data, 0, ahead.data)
+
+
+def test_lookup_routed_report_contract(rng):
+    from repro.dist import lookup_routed_report
+    cols = _base_cols(rng)
+    frame = IndexedFrame.from_columns(cols, SCH, num_shards=4)
+    q = rng.integers(0, N, size=100).astype(np.int64)
+    c, v, answered, dropped = lookup_routed_report(
+        frame.data, jnp.asarray(q), max_matches=4)
+    assert np.asarray(answered).shape == (100,)
+    assert np.asarray(answered).all() and int(np.asarray(dropped).sum()) == 0
+    # starve the exchange: drops are REPORTED, answered goes false
+    c2, v2, ans2, drop2 = lookup_routed_report(
+        frame.data, jnp.asarray(np.zeros(100, np.int64)), max_matches=4,
+        capacity=1)
+    assert int(np.asarray(drop2).sum()) > 0
+    assert not np.asarray(ans2).all()
+    # unanswered lanes are misses, not fabricated matches
+    assert not np.asarray(v2)[~np.asarray(ans2)].any()
