@@ -21,6 +21,53 @@ def block(x):
     return x
 
 
+class SyncCounter:
+    """Counts host<->device synchronization points while active.
+
+    Wraps ``jax.device_get`` and ``jax.block_until_ready`` (the two
+    funnels the repo's hot paths route every host sync through) so
+    benchmarks report MEASURED syncs-per-operation, not just wall clock —
+    the ISSUE-7 acceptance metric for the append queue (≤1 sync per
+    flush).  Implicit conversions (``int(arr)``, ``np.asarray(arr)``)
+    bypass the funnels, so hot paths must use ``jax.device_get``; the
+    queue tests assert the flush path's count stays honest.
+
+        with SyncCounter() as sc:
+            frame = frame.enqueue(delta)       # 0 syncs
+            frame = frame.flush()              # 1 sync (overflow flag)
+        assert sc.syncs == 1
+    """
+
+    def __init__(self):
+        self.device_gets = 0
+        self.blocks = 0
+
+    @property
+    def syncs(self) -> int:
+        return self.device_gets + self.blocks
+
+    def __enter__(self):
+        self._orig_get = jax.device_get
+        self._orig_block = jax.block_until_ready
+
+        def counted_get(x):
+            self.device_gets += 1
+            return self._orig_get(x)
+
+        def counted_block(x):
+            self.blocks += 1
+            return self._orig_block(x)
+
+        jax.device_get = counted_get
+        jax.block_until_ready = counted_block
+        return self
+
+    def __exit__(self, *exc):
+        jax.device_get = self._orig_get
+        jax.block_until_ready = self._orig_block
+        return False
+
+
 def timeit(fn, *args, reps: int = 5, warmup: int = 1, **kw):
     """Median/mean/std seconds over reps (after warmup compiles)."""
     for _ in range(warmup):
@@ -66,9 +113,8 @@ def star_schema(rng, n_fact: int, n_dim: int):
 def flights_table(rng, n: int, n_planes: int = 400):
     """US-Flights analog: tailNum is a string key (pre-hashed at ingest,
     DESIGN.md §9), flightNum an int key."""
-    from repro.core.hashing import hash_string_host
-    tails = np.asarray([hash_string_host(f"N{i:05d}")
-                        for i in range(n_planes)], np.int64)
+    from repro.core.hashing import hash_strings_host
+    tails = hash_strings_host([f"N{i:05d}" for i in range(n_planes)])
     return {"tailnum_h": tails[rng.integers(0, n_planes, n)],
             "flightnum": rng.integers(0, 8000, n).astype(np.int64),
             "delay": rng.standard_normal(n).astype(np.float32),

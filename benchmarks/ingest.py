@@ -1,0 +1,166 @@
+"""ISSUE 7: streaming ingest through the device-resident append queue.
+
+Measures the write paths a streaming producer can take at Fig-5's small
+batch sizes, where per-append host overhead dominates:
+
+* ``frame_seq``     — N ``IndexedFrame.append`` calls (PR 5's facade:
+                      one ``_arena_fits`` pre-flight + one ``fill`` sync
+                      per call; N version bumps).
+* ``frame_batched`` — the same N deltas as ONE coalesced list append
+                      (host-side numpy concat, one fused launch).
+* ``queued``        — N ``enqueue`` (pure on-device lane scatters, ZERO
+                      host syncs) + one ``flush`` (ONE fused jit, ONE
+                      sync: the overflow-flag read).
+
+Alongside wall clock, every path's host syncs are MEASURED with
+``common.SyncCounter`` (the ``jax.device_get`` funnel) — the acceptance
+metric is ≤1 sync per flush vs ≥1 per append today.  The retrace check
+drives ≥2 full ring wraps through ``enqueue``/``flush`` on the local and
+the vmap-distributed backend and asserts ``core.table.QUEUE_TRACES``
+stays at one trace per site per topology.
+
+Results -> ``BENCH_ingest.json`` at the repo root.
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro import IndexedFrame
+from repro.core import Schema
+from repro.core import table as table_mod
+from repro.dist import mesh
+from benchmarks.common import Report, SyncCounter, timeit
+
+SCH = Schema.of("k", k="int64", v="float32")
+STREAM_DELTAS = 8
+ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_ingest.json")
+
+
+def _deltas(rng, n_deltas: int, rows: int, base: int):
+    return [{"k": (rng.integers(0, 1 << 40, rows) | (1 << 41)
+                   ).astype(np.int64),
+             "v": rng.random(rows).astype(np.float32)}
+            for _ in range(n_deltas)]
+
+
+def _stream_paths(fr0, deltas):
+    """(frame_seq, frame_batched, queued) thunks over one delta stream."""
+
+    def frame_seq():
+        f = fr0
+        for d in deltas:
+            f = f.append(d)
+        return f
+
+    def frame_batched():
+        return fr0.append(list(deltas))
+
+    def queued():
+        # fresh ring per stream; the ring is linearly owned so every
+        # enqueue donates it (pure in-place lane scatter).  The flush
+        # keeps the shared base table alive (donate=False) so reps are
+        # independent.
+        f = dataclasses.replace(fr0, queue=None).with_queue(
+            lanes=fr0.queue.lanes, lane_rows=fr0.queue.lane_rows)
+        for d in deltas:
+            f = f.enqueue(d)
+        return f.flush()
+
+    return frame_seq, frame_batched, queued
+
+
+def _wrap_gate(fr0, rng, rows: int, label: str, rep: Report) -> dict:
+    """≥2 full ring wraps; QUEUE_TRACES must not move after wrap 1."""
+    fr = fr0
+    lanes = fr.queue.lanes
+    base = dict(table_mod.QUEUE_TRACES)
+    wraps = 3
+    for w in range(wraps):
+        for d in _deltas(rng, lanes, rows, 0):
+            fr = fr.enqueue(d)
+        fr = fr.flush()
+        if w == 0:     # first wrap may trace; later wraps must not
+            after_first = dict(table_mod.QUEUE_TRACES)
+    retraces = {k: table_mod.QUEUE_TRACES[k] - after_first[k]
+                for k in after_first}
+    out = dict(wraps=wraps, enqueue_retraces=retraces["enqueue"],
+               flush_retraces=retraces["flush"],
+               first_wrap_traces={k: after_first[k] - base[k]
+                                  for k in base})
+    rep.add(f"ring_wraps[{label}]", **{k: v for k, v in out.items()
+                                       if not isinstance(v, dict)})
+    return out
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(7)
+    rep = Report("ingest")
+    base_n = 20_000 if quick else 200_000
+    sizes = (500, 2_000, 10_000) if quick else (1_000, 10_000, 100_000)
+    cols = {"k": rng.integers(0, base_n, base_n).astype(np.int64),
+            "v": rng.random(base_n).astype(np.float32)}
+    doc = {"quick": quick, "stream_deltas": STREAM_DELTAS, "rows": []}
+
+    for rows in sizes:
+        stream_rows = rows * STREAM_DELTAS
+        fr0 = IndexedFrame.from_columns(
+            cols, SCH, rows_per_batch=4096,
+            reserve=base_n + 4 * stream_rows).with_queue(
+                lanes=STREAM_DELTAS, lane_rows=rows)
+        deltas = _deltas(rng, STREAM_DELTAS, rows, base_n)
+        frame_seq, frame_batched, queued = _stream_paths(fr0, deltas)
+
+        t_seq = timeit(frame_seq, reps=3)
+        t_batched = timeit(frame_batched, reps=3)
+        t_queued = timeit(queued, reps=5)
+        with SyncCounter() as sc_seq:
+            frame_seq()
+        with SyncCounter() as sc_batched:
+            frame_batched()
+        with SyncCounter() as sc_queued:
+            queued()
+
+        row = dict(
+            rows_per_delta=rows,
+            stream_rows=stream_rows,
+            queued_rows_per_s=stream_rows / t_queued["median_s"],
+            frame_seq_rows_per_s=stream_rows / t_seq["median_s"],
+            frame_batched_rows_per_s=stream_rows / t_batched["median_s"],
+            queued_vs_seq=t_seq["median_s"] / t_queued["median_s"],
+            queued_vs_batched=t_batched["median_s"] / t_queued["median_s"],
+            queued_syncs_per_stream=sc_queued.syncs,
+            queued_syncs_per_flush=sc_queued.syncs,  # one flush per stream
+            frame_seq_syncs_per_stream=sc_seq.syncs,
+            frame_batched_syncs_per_stream=sc_batched.syncs,
+            queued_ms=t_queued["median_s"] * 1e3,
+            frame_seq_ms=t_seq["median_s"] * 1e3,
+            frame_batched_ms=t_batched["median_s"] * 1e3)
+        doc["rows"].append(row)
+        rep.add(f"rows={rows}", **row)
+
+    # retrace gate across ≥2 ring wraps, local + vmap-dist backends
+    small = sizes[0]
+    fr_local = IndexedFrame.from_columns(
+        cols, SCH, rows_per_batch=4096,
+        reserve=base_n + 64 * small).with_queue(lanes=4, lane_rows=small)
+    doc["ring_wraps_local"] = _wrap_gate(fr_local, rng, small, "local", rep)
+    fr_dist = IndexedFrame.from_columns(
+        cols, SCH, num_shards=4, rt=mesh.vmap_runtime(),
+        rows_per_batch=4096, reserve=base_n + 64 * small).with_queue(
+            lanes=4, lane_rows=small)
+    doc["ring_wraps_dist_vmap"] = _wrap_gate(fr_dist, rng, small,
+                                             "dist_vmap", rep)
+
+    import jax
+    doc["backend"] = jax.default_backend()
+    with open(ARTIFACT, "w") as f:
+        json.dump(doc, f, indent=2)
+    return rep.to_dict()
+
+
+if __name__ == "__main__":
+    run(quick=True)

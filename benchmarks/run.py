@@ -25,6 +25,8 @@ MODULES = {
     "operators": "Fig 8",
     "append_read_latency": "Fig 9 (-> BENCH_append.json)",
     "write_throughput": "Fig 10 (-> BENCH_append.json)",
+    "ingest": "ISSUE 7 streaming ingest: ring enqueue/flush vs facade "
+              "appends, measured syncs (-> BENCH_ingest.json)",
     "memory_overhead": "Fig 11 (logical vs reserved)",
     "fault_tolerance": "Fig 12 chaos sweep: fault x write rate through "
                        "the supervised frame (-> BENCH_dist.json)",

@@ -26,7 +26,7 @@ import numpy as np
 
 from repro import IndexedFrame
 from repro.core import Schema, append, create_index
-from benchmarks.common import Report, timeit
+from benchmarks.common import Report, SyncCounter, timeit
 from benchmarks.append_read_latency import merge_artifact
 
 SCH = Schema.of("k", k="int64", v="float32")
@@ -85,8 +85,17 @@ def run(quick: bool = True):
         t_frame_seq = timeit(frame_seq, reps=3)
         t_frame_batched = timeit(lambda: fr0.append(deltas), reps=3)
 
+        # measured host syncs per stream (SyncCounter wraps the
+        # jax.device_get funnel every hot-path sync routes through)
+        with SyncCounter() as sc_seq:
+            frame_seq()
+        with SyncCounter() as sc_batched:
+            fr0.append(deltas)
+
         row = dict(rows=rows,
                    stream_deltas=STREAM_DELTAS,
+                   frame_seq_syncs=sc_seq.syncs,
+                   frame_batched_syncs=sc_batched.syncs,
                    frame_seq_rows_per_s=(stream_total
                                          / t_frame_seq["median_s"]),
                    frame_batched_rows_per_s=(stream_total

@@ -54,6 +54,23 @@ deltas = [{"user_id": rng.integers(0, 10_000, 256).astype(np.int64),
 df3 = df2.append(deltas)
 print(f"coalesced 4 deltas -> one append, v{df3.version}")
 
+# -- 3b. streaming ingest: the device-resident append ring (DESIGN.md §13) --
+print("\n== streaming ingest (append ring) ==")
+stream = df3.with_queue(lanes=8, lane_rows=512)
+for i in range(6):  # e.g. per-second micro-batches off a feed
+    stream = stream.enqueue(
+        {"user_id": rng.integers(0, 10_000, 128).astype(np.int64),
+         "score": rng.random(128).astype(np.float32),
+         "country": rng.integers(0, 200, 128).astype(np.int32)})
+print(f"staged {stream.pending_deltas} deltas / {stream.pending_rows} rows "
+      f"on-device with ZERO host syncs — still v{stream.version}, "
+      f"invisible to readers")
+stream = stream.flush()   # ONE fused jit + ONE host sync for all 6 deltas
+print(f"flushed -> v{stream.version} (one version bump for the whole ring; "
+      f"{int(stream.num_rows())} rows)")
+# a full ring auto-flushes through append(queued=True); raw enqueue
+# raises core.table.QueueOverflow instead
+
 # -- 4. indexed join ---------------------------------------------------------
 print("\n== indexed join ==")
 events = {"user_id": rng.choice(users["user_id"], 1000).astype(np.int64),

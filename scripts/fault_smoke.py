@@ -9,6 +9,12 @@ every CI run under BOTH topologies (scripts/ci.sh):
   site traced exactly ONCE (zero recompiles across kill + heal + appends)
   -> replay cost was the checkpoint-anchored suffix, not full history.
 
+Second scenario (ISSUE 7 / DESIGN.md §13): the SAME kill lands mid-ring —
+deltas staged in the device-resident append queue but not yet flushed.
+The supervisor's host-side pending mirror must rebuild the lost shard's
+ring lanes deterministically, and the eventual flush must land
+bit-identical to a never-failed twin streaming the same deltas.
+
 Exits nonzero with a diagnostic on any violation.  Like
 scripts/trace_gate.py it runs on whatever topology the process has —
 ci.sh invokes it plain and under a forced 8-device host mesh; with 8+
@@ -91,11 +97,70 @@ def main() -> int:
               f"replay bounded by the checkpoint suffix "
               f"(replayed {replayed} of {mgr.stats.appends} deltas)")
 
+    ring_scenario(s, rt)
+
     if FAILURES:
         print(f"\nfault smoke: {len(FAILURES)} violation(s)")
         return 1
     print("fault smoke: all recovery contracts hold")
     return 0
+
+
+def ring_scenario(s: int, rt):
+    """Kill a shard while its append ring holds staged, unflushed deltas."""
+    print("ring scenario: shard kill mid-ring (staged deltas unflushed)")
+    rng = np.random.default_rng(23)
+    n = 2048
+    sch = Schema.of("k", k="int64", v="float32")
+    cols = {"k": np.arange(n, dtype=np.int64),
+            "v": rng.standard_normal(n).astype(np.float32)}
+    deltas = [{"k": np.asarray([n + i], np.int64),
+               "v": np.asarray([float(i)], np.float32)} for i in range(4)]
+    frame = IndexedFrame.from_columns(cols, sch, num_shards=s,
+                                      rows_per_batch=512,
+                                      rt=rt).with_queue(lanes=4,
+                                                        lane_rows=512)
+    twin = IndexedFrame.from_columns(cols, sch, num_shards=s,
+                                     rows_per_batch=512,
+                                     rt=rt).with_queue(lanes=4,
+                                                       lane_rows=512)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        # step 3 = the third enqueue: two deltas already staged in the
+        # ring, none flushed — the kill erases the shard's ring lanes too
+        mgr = frame.supervised(
+            lineage=Lineage(sch, cols, rows_per_batch=512),
+            injector=FaultInjector([Fault("shard_loss", step=3,
+                                          shard=s - 1)], seed=23),
+            policy=RecoveryPolicy(checkpoint_every=2),
+            checkpoint_dir=ckpt_dir)
+        for d in deltas:
+            mgr.enqueue(d)
+            twin = twin.enqueue(d, donate=False)
+        mgr.flush()
+        twin = twin.flush()
+
+        q = np.concatenate([rng.integers(0, n, 60),
+                            np.arange(n, n + 4)]).astype(np.int64)
+        c, v = mgr.lookup(q, max_matches=4)
+        tc, tv = twin.lookup(q, max_matches=4)
+        identical = np.array_equal(np.asarray(v), np.asarray(tv))
+        for k in tc:
+            identical &= np.array_equal(np.asarray(c[k]), np.asarray(tc[k]))
+        check(mgr.stats.recoveries == 1,
+              f"one automatic mid-ring recovery "
+              f"(got {mgr.stats.recoveries})")
+        check(not mgr.dead, f"no shard left unrecovered (dead={mgr.dead})")
+        check(identical,
+              "flushed ring bit-identical to the never-failed twin")
+        check(mgr.stats.enqueues == 4 and mgr.stats.flushes == 1,
+              f"supervisor counted the stream (enqueues="
+              f"{mgr.stats.enqueues}, flushes={mgr.stats.flushes})")
+        check(mgr.frame.pending_rows == 0,
+              f"ring drained after flush "
+              f"(pending={mgr.frame.pending_rows})")
+        check(mgr.frame.version == twin.version,
+              f"one version bump for the whole ring (supervised="
+              f"{mgr.frame.version}, twin={twin.version})")
 
 
 if __name__ == "__main__":

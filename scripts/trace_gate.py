@@ -14,7 +14,11 @@ entry point:
   (the frame as the jit argument, ``.lookup``/``.join`` inside): facade
   dispatch must add zero retraces (ISSUE 5 acceptance), local and
   distributed (broadcast AND routed flavors), appends through
-  ``frame.append`` including the coalesced list form.
+  ``frame.append`` including the coalesced list form;
+* the append queue — ``enqueue``/``flush`` driven through FULL ring
+  wraps (every lane filled, flushed, refilled) must trace each site
+  exactly ONCE per topology (ISSUE 7 / DESIGN.md §13), and the jitted
+  read sites must not retrace as the ring fills and drains.
 
 Fast by construction: tiny tables, one compile per site, zero retraces —
 the whole gate is a few seconds of XLA work.
@@ -175,11 +179,57 @@ def gate_frame_distributed(rt, label):
           f"{APPENDS} appends")
 
 
+def gate_queue(rt, label):
+    """enqueue/flush across ≥2 FULL ring wraps: one trace per site, and
+    the jitted read site stays compiled while the ring fills/drains."""
+    from repro.core import table as table_mod
+    rng = np.random.default_rng(4)
+    cols = {"k": rng.integers(0, 64, 400).astype(np.int64),
+            "v": rng.random(400).astype(np.float32)}
+    kw = {} if rt is None else dict(num_shards=4, rt=rt)
+    fr = IndexedFrame.from_columns(cols, SCH, rows_per_batch=64,
+                                   reserve=4096, **kw).with_queue(
+                                       lanes=3, lane_rows=16)
+    q = jnp.asarray(rng.integers(0, 64, 32).astype(np.int64))
+    counts = {"lookup": 0}
+
+    @jax.jit
+    def f_lookup(frame, qq):
+        counts["lookup"] += 1
+        return frame.lookup(qq, max_matches=4)[1]
+
+    jax.block_until_ready(f_lookup(fr, q))
+    base = dict(table_mod.QUEUE_TRACES)
+    wraps, traced = 3, None
+    for wrap in range(wraps):
+        for i in range(fr.queue.lanes):       # fill EVERY lane
+            fr = fr.enqueue(
+                {"k": rng.integers(0, 64, 8).astype(np.int64),
+                 "v": rng.random(8).astype(np.float32)}, donate=False)
+        fr = fr.flush()
+        jax.block_until_ready(f_lookup(fr, q))
+        if wrap == 0:
+            traced = dict(table_mod.QUEUE_TRACES)
+    for site in ("enqueue", "flush"):
+        first = traced[site] - base[site]
+        later = table_mod.QUEUE_TRACES[site] - traced[site]
+        if first != 1 or later != 0:
+            fail(f"queue {site} ({label}): {first} first-wrap + {later} "
+                 f"later traces across {wraps} full ring wraps "
+                 f"(expected 1 + 0)")
+    if counts["lookup"] != 1:
+        fail(f"read site ({label}) retraced {counts['lookup']}x while the "
+             f"ring wrapped (expected 1)")
+    print(f"  queue ({label}): 1 trace per site across {wraps} "
+          f"full ring wraps")
+
+
 def main():
     print(f"trace gate: {len(jax.devices())} device(s), "
           f"backend={jax.default_backend()}")
     gate_single_table()
     gate_frame_single()
+    gate_queue(None, "local")
     try:
         from repro.dist import mesh
     except ImportError:
@@ -187,9 +237,11 @@ def main():
         return
     gate_distributed(mesh.vmap_runtime(), "vmap")
     gate_frame_distributed(mesh.vmap_runtime(), "vmap")
+    gate_queue(mesh.vmap_runtime(), "vmap")
     if len(jax.devices()) >= 4:
         gate_distributed(mesh.mesh_runtime(4), "shard_map")
         gate_frame_distributed(mesh.mesh_runtime(4), "shard_map")
+        gate_queue(mesh.mesh_runtime(4), "shard_map")
     else:
         print("  shard_map gate skipped (<4 devices; ci.sh's forced-8 "
               "pass covers it)")

@@ -15,13 +15,17 @@ Layout:
 
 from repro.core.schema import Schema, Column
 from repro.core.snapshot import FlatBlock, Snapshot
-from repro.core.table import (IndexedTable, FlatView, coalesce_deltas,
-                              create_index, append, compact)
+from repro.core.table import (IndexedTable, FlatView, AppendQueue,
+                              QueueOverflow, coalesce_deltas, create_index,
+                              append, compact, empty_queue, enqueue,
+                              flush_queue, queue_pending)
 from repro.core.hashindex import HashIndex, build_index, probe, chain_walk
 from repro.core import joins, planner
 
 __all__ = [
     "Schema", "Column", "IndexedTable", "Snapshot", "FlatBlock", "FlatView",
-    "coalesce_deltas", "create_index", "append", "compact", "HashIndex",
-    "build_index", "probe", "chain_walk", "joins", "planner",
+    "AppendQueue", "QueueOverflow", "coalesce_deltas", "create_index",
+    "append", "compact", "empty_queue", "enqueue", "flush_queue",
+    "queue_pending", "HashIndex", "build_index", "probe", "chain_walk",
+    "joins", "planner",
 ]

@@ -83,6 +83,10 @@ def split64(x):
     return hi, lo
 
 
+_FNV_OFFSET = np.uint64(0xCBF29CE484222325)
+_FNV_PRIME = np.uint64(0x100000001B3)
+
+
 def hash_string_host(s: str) -> int:
     """Host-side FNV-1a of a string key → int64 (ingest path for string
     columns; see DESIGN.md §9)."""
@@ -90,3 +94,41 @@ def hash_string_host(s: str) -> int:
     for b in s.encode("utf-8"):
         h = np.uint64((int(h) ^ b) * 0x100000001B3 & 0xFFFFFFFFFFFFFFFF)
     return int(np.int64(h.astype(np.int64)))
+
+
+def hash_strings_host(strings) -> np.ndarray:
+    """Vectorized ``hash_string_host`` over a batch → int64 array.
+
+    Bit-identical to the scalar loop by construction (and by
+    tests/test_queue.py property test): the byte matrix walk applies the
+    same FNV-1a step per position, masked so each string stops at its own
+    byte length.  One ``np.char.encode`` + ``maxlen`` vectorized rounds
+    replaces N Python loops — the paper's Fig-15 string-ingest tax, first
+    cut (ROADMAP flights item).
+
+    NUL caveat: numpy's S dtype cannot represent trailing ``\\x00`` bytes,
+    so strings containing NUL fall back to the scalar path.
+    """
+    arr = np.asarray(strings, dtype=object).reshape(-1)
+    n = arr.shape[0]
+    if n == 0:
+        return np.empty((0,), np.int64)
+    blist = [s.encode("utf-8") for s in arr]
+    lens = np.array([len(b) for b in blist], dtype=np.int64)
+    # S-dtype storage silently strips *trailing* NULs (interior ones are
+    # fine — the width is fixed) — those few strings go scalar.
+    nul = np.array([b.endswith(b"\x00") for b in blist])
+    out = np.full((n,), _FNV_OFFSET, np.uint64)
+    maxlen = int(lens.max())
+    if maxlen:
+        mat = (np.array(blist, dtype=f"S{maxlen}")
+               .view(np.uint8).reshape(n, maxlen).astype(np.uint64))
+        with np.errstate(over="ignore"):
+            for j in range(maxlen):
+                live = j < lens
+                step = (out ^ mat[:, j]) * _FNV_PRIME
+                out = np.where(live, step, out)
+    if nul.any():
+        out[nul] = [np.uint64(hash_string_host(s) & 0xFFFFFFFFFFFFFFFF)
+                    for s in arr[nul]]
+    return out.astype(np.int64)

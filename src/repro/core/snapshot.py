@@ -127,6 +127,25 @@ class Snapshot:
         return n + sum(a.size * a.dtype.itemsize for a in self.data.values())
 
 
+def probe_view(blocks, prev, fill, *, bucket_counts, layout) -> Snapshot:
+    """A probe-side-only Snapshot over explicit planes (``data=None``).
+
+    Used *inside* the fused ingest/flush jits (``table._ingest_arrays`` /
+    ``table._flush_core``) to probe the PRE-write table state for parent
+    head links, and by readers that only need the probe pipeline.  The
+    hard-mask contract lives here: every fused path masks emitted row ids
+    by ``fill``, so a row id at or past ``fill`` NEVER decodes.  That one
+    invariant is what keeps two kinds of not-yet-data invisible —
+    reserved-but-unwritten arena slack (which, under donation, may alias
+    retired buffers), and rows sitting in an ``AppendQueue`` ring
+    (DESIGN.md §13): queued deltas live *beside* the arena and only move
+    ``fill`` at flush, so MVCC snapshot isolation holds with no reader
+    changes — unflushed lanes are invisible by construction.
+    """
+    return Snapshot(blocks=tuple(blocks), prev=prev, data=None, fill=fill,
+                    bucket_counts=tuple(bucket_counts), layout=layout)
+
+
 def block_from_segment(seg) -> FlatBlock:
     """Split one segment's delta index into a probe-side block."""
     global BLOCK_BUILDS

@@ -167,7 +167,8 @@ class IndexedTable:
         """Reserved-but-unwritten rows left in the arena tail (host int —
         reads the ``fill`` scalar; appends are host-coordinated anyway)."""
         tail = self.segments[-1]
-        return tail.row_base + tail.capacity - int(self.snapshot.fill)
+        return (tail.row_base + tail.capacity
+                - int(jax.device_get(self.snapshot.fill)))
 
     def num_rows(self):
         """Valid (non-padding) rows; array under trace, int when concrete."""
@@ -566,11 +567,10 @@ def _ingest_arrays(state, parent_blocks, cols_p, valid_p, *, schema, layout,
                             gid_s[:-1]])
     # parent head per key: fused probe of the WHOLE pre-insert snapshot
     # (newest -> oldest across all segments), inside this same jit
-    probe_snap = Snapshot(
-        blocks=parent_blocks + (FlatBlock(state["bhi"], state["blo"],
-                                          state["bptr"], nb_t),),
-        prev=state["sprev"], data=None, fill=fill_g,
-        bucket_counts=bucket_counts, layout=layout)
+    probe_snap = snap_mod.probe_view(
+        parent_blocks + (FlatBlock(state["bhi"], state["blo"],
+                                   state["bptr"], nb_t),),
+        state["sprev"], fill_g, bucket_counts=bucket_counts, layout=layout)
     bids = jnp.stack([hashing.bucket_hash(k_s, nb) for nb in bucket_counts])
     qhi, qlo = hashing.split64(k_s)
     parent_head = kref.fused_probe_ref(bids, qhi, qlo, probe_snap)
@@ -727,15 +727,19 @@ def _ingest_arrays_donated(state, parent_blocks, cols_p, valid_p, *,
                           bucket_counts=bucket_counts, slots=slots)
 
 
-@jax.jit
-def _arena_fits(bucket_keys, keys, valid):
-    """Would this delta's new keys overflow the tail's buckets?  Run
-    BEFORE a donated ingest — donation consumes the parent, so the
-    overflow -> promote fallback must be decided on the intact table."""
+def _arena_fits_core(bucket_keys, keys, valid):
+    """Would this delta's new keys overflow the tail's buckets?  Pure —
+    ``_flush_core`` folds it into the fused flush; the jitted ``_arena_fits``
+    wrapper runs it standalone BEFORE a donated ingest (donation consumes
+    the parent, so the overflow -> promote fallback must be decided on the
+    intact table)."""
     order, _, is_head = _delta_order(keys, valid)
     hk = jnp.where(is_head, keys[order], EMPTY_KEY)
     _, overflow = hix.arena_insert_plan(bucket_keys, hk, is_head)
     return overflow
+
+
+_arena_fits = jax.jit(_arena_fits_core)
 
 
 def _append_promote(table: IndexedTable, cols_p: dict, valid_p, nv: int
@@ -821,14 +825,18 @@ def append(table: IndexedTable, cols: dict, valid=None, *,
             child = compact(child, _bump_version=False)
         return child
 
-    nv = int(jnp.sum(valid_p))
+    # host syncs below go through jax.device_get — the funnel the
+    # benchmarks' SyncCounter instruments, so syncs-per-append is a
+    # measured number (the queue's flush path pays ONE of these total)
+    nv = int(jax.device_get(jnp.sum(valid_p)))
     if nv <= table.spare_capacity():
         if donate:
             keys = jnp.where(valid_p,
                              jnp.asarray(cols_p[table.schema.key],
                                          jnp.int64), EMPTY_KEY)
-            ovf = int(_arena_fits(table.segments[-1].index.bucket_keys,
-                                  keys, valid_p))
+            ovf = int(jax.device_get(
+                _arena_fits(table.segments[-1].index.bucket_keys,
+                            keys, valid_p)))
             if ovf == 0:
                 out, _ = _ingest_arrays_donated(
                     _dedup_state(table), table.snapshot.blocks[:-1],
@@ -840,7 +848,7 @@ def append(table: IndexedTable, cols: dict, valid=None, *,
                 return _reassemble(table, out)
         else:
             child, ovf = _arena_ingest(table, cols_p, valid_p)
-            if int(ovf) == 0:
+            if int(jax.device_get(ovf)) == 0:
                 return child
     child = _append_promote(table, cols_p, valid_p, nv)
     threshold = (DEFAULT_COMPACT_THRESHOLD if compact_threshold is None
@@ -882,6 +890,323 @@ def coalesce_deltas(deltas, schema: Schema, valids=None):
         if v is None else np.asarray(v, bool)
         for d, v in zip(deltas, valids)])
     return cols, valid
+
+
+# ---------------------------------------------------------------------------
+# Device-resident append queue (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+DEFAULT_QUEUE_LANES = 8
+
+# Trace counters for the CI gate (scripts/trace_gate.py): bumped once per
+# TRACE of the enqueue/flush cores — a full ring wrap must not retrace.
+QUEUE_TRACES = {"enqueue": 0, "flush": 0}
+
+
+class QueueOverflow(ValueError):
+    """A delta does not fit the ring: the lane rows are too small for it,
+    or every lane is occupied (flush first — ``frame.append(queued=True)``
+    does both automatically)."""
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["cols", "valid", "fills", "count"],
+         meta_fields=["lanes", "lane_rows"])
+@dataclasses.dataclass(frozen=True)
+class AppendQueue:
+    """A fixed-lane ring of pending deltas living beside the arena.
+
+    Every field the ring mutates is a *data leaf* — per-lane fill
+    counters and the occupied-lane ``count`` scalar included, the same
+    trick as ``Snapshot.fill`` (DESIGN.md §4) — so enqueue and flush are
+    pure on-device ops with ZERO pytree shape change: jitted read sites
+    and the enqueue/flush sites themselves stay compile-cached across a
+    full ring wrap (fill lanes -> flush -> fill again).
+
+    ``cols`` holds one ``[lanes, lane_rows]`` typed plane per schema
+    column (layout-agnostic: rows encode at flush, inside the fused
+    ingest); ``valid`` masks real rows inside each lane; ``fills[l]`` is
+    lane ``l``'s valid-row count; ``count`` is the number of occupied
+    lanes (lanes ``[0, count)`` are pending, in enqueue order).  The
+    distributed layer stacks a leading ``[num_shards]`` axis on every
+    leaf and axis-maps the same enqueue/flush cores per shard.
+
+    Queued rows are NOT part of any table version: they sit outside the
+    arena and outside ``fill``, so every reader hard-masks them out
+    (``snapshot.probe_view``) until a flush moves them into the arena —
+    MVCC snapshot isolation with no reader changes.  Unlike the table,
+    the ring is a *staging buffer*, not an MVCC object: the frame owns it
+    linearly, and a flush resets it in place.
+    """
+
+    cols: dict            # {name: [lanes, lane_rows] typed}
+    valid: jax.Array      # [lanes, lane_rows] bool
+    fills: jax.Array      # [lanes] int32 — valid rows per lane
+    count: jax.Array      # scalar int32 — occupied lanes
+    lanes: int
+    lane_rows: int
+
+    @property
+    def capacity_rows(self) -> int:
+        return self.lanes * self.lane_rows
+
+    def nbytes(self) -> int:
+        return (sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                    for a in self.cols.values())
+                + self.valid.size + self.fills.size * 4 + 4)
+
+
+def _set_queue_mirror(queue: AppendQueue, lanes_used, rows):
+    """Host mirror of the pending counts, OUTSIDE the pytree (like
+    ``IndexedTable._flatdata``): the facade issues every enqueue, so it
+    knows the counts for free — no device sync to answer 'is the ring
+    full?' or 'how many rows are pending?'."""
+    object.__setattr__(queue, "_host_lanes", int(lanes_used))
+    object.__setattr__(queue, "_host_rows", int(rows))
+    return queue
+
+
+def queue_pending(queue: AppendQueue):
+    """``(lanes_used, pending_rows)`` as host ints.  Reads the host
+    mirror the enqueue/flush wrappers maintain; falls back to ONE device
+    sync when the queue came back through a jit boundary (the mirror does
+    not survive tracing).  UNDER a trace (the frame itself is a jit
+    argument) the counts are unknowable host-side — report (0, 0): the
+    ring is reader-invisible anyway, so traced read plans never depend
+    on it."""
+    lanes_used = getattr(queue, "_host_lanes", None)
+    rows = getattr(queue, "_host_rows", None)
+    if lanes_used is None or rows is None:
+        if isinstance(queue.count, jax.core.Tracer):
+            return 0, 0
+        count, fills = jax.device_get((queue.count, queue.fills))
+        lanes_used = int(np.asarray(count).reshape(-1)[0])
+        rows = int(np.asarray(fills)[..., :lanes_used].sum())
+        _set_queue_mirror(queue, lanes_used, rows)
+    return lanes_used, rows
+
+
+def empty_queue(schema: Schema, *, lanes: int = DEFAULT_QUEUE_LANES,
+                lane_rows: int = 4096,
+                num_shards: int | None = None) -> AppendQueue:
+    """A fresh all-empty ring (``num_shards`` stacks the dist leading
+    axis; per-shard ``count`` scalars stay in lockstep — every enqueue
+    touches every shard's ring, possibly with zero valid rows)."""
+    lead = () if num_shards is None else (num_shards,)
+    cols = {c.name: jnp.zeros(lead + (lanes, lane_rows), c.jnp_dtype)
+            for c in schema.columns}
+    q = AppendQueue(cols=cols,
+                    valid=jnp.zeros(lead + (lanes, lane_rows), bool),
+                    fills=jnp.zeros(lead + (lanes,), jnp.int32),
+                    count=jnp.zeros(lead, jnp.int32),
+                    lanes=lanes, lane_rows=lane_rows)
+    return _set_queue_mirror(q, 0, 0)
+
+
+def reset_queue(queue: AppendQueue) -> AppendQueue:
+    """Empty the ring without touching the (stale, masked) column planes."""
+    q = dataclasses.replace(queue,
+                            valid=jnp.zeros_like(queue.valid),
+                            fills=jnp.zeros_like(queue.fills),
+                            count=jnp.zeros_like(queue.count))
+    return _set_queue_mirror(q, 0, 0)
+
+
+def _enqueue_core(queue: AppendQueue, lane_cols: dict, lane_valid):
+    """Pure on-device scatter of one delta into the next free lane.
+
+    One dynamic-index write per plane at lane ``count`` (scatter-dropped
+    if a misuse ever aims past the ring) plus the fill/count bumps —
+    zero host syncs, zero pytree shape change.  The distributed layer
+    axis-maps this unchanged per shard.
+    """
+    QUEUE_TRACES["enqueue"] += 1
+    c = queue.count
+    nv = jnp.sum(lane_valid).astype(jnp.int32)
+    cols = {k: queue.cols[k].at[c].set(
+                jnp.asarray(lane_cols[k], queue.cols[k].dtype), mode="drop")
+            for k in queue.cols}
+    valid = queue.valid.at[c].set(jnp.asarray(lane_valid, bool), mode="drop")
+    fills = queue.fills.at[c].set(nv, mode="drop")
+    count = jnp.minimum(c + 1, jnp.int32(queue.lanes))
+    return dataclasses.replace(queue, cols=cols, valid=valid, fills=fills,
+                               count=count)
+
+
+_enqueue = jax.jit(_enqueue_core)
+# The ring is linearly owned (see AppendQueue docstring), so donating it
+# makes enqueue a true in-place lane write — the hot streaming loop's
+# default cost.  The PARENT queue object becomes unusable, exactly like
+# a donated table append.
+_enqueue_donated = jax.jit(_enqueue_core, donate_argnums=(0,))
+
+
+def _lane_arrays(queue: AppendQueue, cols: dict, valid):
+    """Pad a host delta to one ``[lane_rows]`` lane (+ mask).  Host-side
+    shape work only — no device round-trip."""
+    n = int(np.shape(cols[next(iter(queue.cols))])[0])
+    if n > queue.lane_rows:
+        raise QueueOverflow(
+            f"delta has {n} rows but queue lanes hold {queue.lane_rows}; "
+            f"append() it directly or size the ring with "
+            f"with_queue(lane_rows=...)")
+    pad = queue.lane_rows - n
+    lane_cols = {k: jnp.pad(jnp.asarray(cols[k], q.dtype), (0, pad))
+                 for k, q in queue.cols.items()}
+    v = (jnp.ones((n,), bool) if valid is None
+         else jnp.asarray(valid, bool))
+    nv = n if valid is None else int(np.asarray(valid, bool).sum())
+    return lane_cols, jnp.pad(v, (0, pad)), nv
+
+
+def enqueue(queue: AppendQueue, cols: dict, valid=None, *,
+            donate: bool = True) -> AppendQueue:
+    """Stage one delta in the ring — NO host sync, NO table change.
+
+    The delta becomes visible (and the version bumps, once for the whole
+    ring) only at ``flush_queue``.  Raises ``QueueOverflow`` when the
+    ring is full or the delta exceeds a lane — the facade's
+    ``append(queued=True)`` auto-flushes / falls back.  ``donate=True``
+    (default) writes the lane in place; pass ``False`` to keep the parent
+    queue object alive (divergent staging is NOT an MVCC feature — the
+    ring is linearly owned).
+    """
+    lanes_used, rows = queue_pending(queue)
+    if lanes_used >= queue.lanes:
+        raise QueueOverflow(
+            f"append queue is full ({queue.lanes} lanes pending); flush() "
+            f"first (frame.append(queued=True) does this automatically)")
+    lane_cols, lane_valid, nv = _lane_arrays(queue, cols, valid)
+    out = (_enqueue_donated if donate else _enqueue)(queue, lane_cols,
+                                                     lane_valid)
+    return _set_queue_mirror(out, lanes_used + 1, rows + nv)
+
+
+def _flush_core(state, parent_blocks, queue: AppendQueue, *, schema, layout,
+                rb, bucket_counts, slots, cap, axis=None):
+    """ONE fused flush: ring -> arena with the pre-flight folded in.
+
+    Flattens the occupied lanes, lexsorts + chains them, probes parent
+    heads, and ingests into the arena exactly like ``_ingest_arrays`` —
+    but the capacity check AND the bucket-overflow pre-flight
+    (``_arena_fits_core``) run inside the same jit, and the ENTIRE write
+    is gated on their conjunction ``ok``: when the ring does not fit,
+    every scatter drops (all-False valid), ``fill``/version stay put, and
+    the ring keeps its contents — the host reads the single ``ok`` flag
+    and takes the overflow -> promote path on the intact state.  Under a
+    shard axis (``axis``), ``ok`` is psum-reduced so every shard flushes
+    or holds *together* (uniform versions across the stacked pytree).
+
+    Works over the tail's DEDUPLICATED state (``_dedup_state``) exactly
+    like ``_ingest_arrays``, so the donated variant is legal: a donated
+    flush is a true in-place ring -> arena move, the streaming hot
+    path's cost.  ``cap`` is the tail's ``row_base + capacity`` (static).
+
+    Returns ``(out_state, ring_after, ok)``.  The only host sync in a
+    successful flush is the caller's read of ``ok``.
+    """
+    QUEUE_TRACES["flush"] += 1
+    lanes, lane_rows = queue.lanes, queue.lane_rows
+    d = lanes * lane_rows
+    occ = jnp.arange(lanes, dtype=jnp.int32) < queue.count       # [lanes]
+    valid_flat = (queue.valid & occ[:, None]).reshape(d)
+    cols_flat = {k: v.reshape((d,) + v.shape[2:])
+                 for k, v in queue.cols.items()}
+    keys = jnp.where(valid_flat, jnp.asarray(cols_flat[schema.key],
+                                             jnp.int64), EMPTY_KEY)
+    nv = jnp.sum(queue.fills * occ.astype(jnp.int32))
+    room = jnp.int32(cap) - state["fill"]
+    fits = nv <= room
+    ovf = _arena_fits_core(state["bk"], keys, valid_flat)
+    ok = fits & (ovf == 0)
+    if axis is None:
+        ok = ok & (nv > 0)
+    else:
+        bad = jax.lax.psum((~ok).astype(jnp.int32), axis)
+        total = jax.lax.psum(nv, axis)
+        ok = (bad == 0) & (total > 0)
+    gated_valid = valid_flat & ok
+    version = state["version"]
+    out, _ = _ingest_arrays(
+        state, parent_blocks, cols_flat, gated_valid, schema=schema,
+        layout=layout, rb=rb, bucket_counts=bucket_counts, slots=slots)
+    # _ingest_arrays bumps unconditionally; a held flush must not.
+    out["version"] = version + ok.astype(jnp.int32)
+    ring = dataclasses.replace(
+        queue,
+        valid=queue.valid & ~ok,
+        fills=jnp.where(ok, 0, queue.fills),
+        count=jnp.where(ok, 0, queue.count))
+    return out, ring, ok
+
+
+_FLUSH_STATICS = ("schema", "layout", "rb", "bucket_counts", "slots", "cap",
+                  "axis")
+_flush = jax.jit(_flush_core, static_argnames=_FLUSH_STATICS)
+# Donating state + ring makes flush a true in-place lane -> arena move
+# (the table's tail planes are rewritten in place, the ring is cleared in
+# place); parent blocks stay shared.  A HELD flush (ok=False) writes the
+# state back unchanged and keeps the ring contents, so the promote slow
+# path still works off the returned (content-identical) buffers.
+_flush_donated = jax.jit(_flush_core, donate_argnums=(0, 2),
+                         static_argnames=_FLUSH_STATICS)
+
+
+def drain_queue(queue: AppendQueue):
+    """Ring contents -> host ``(cols, valid=None)`` in enqueue order
+    (lane-major; within a lane, arrival order).  The overflow -> promote
+    slow path and the resilience layer's ring rebuild use this — the fast
+    path never does."""
+    cols, valid, count, fills = jax.device_get(
+        (queue.cols, queue.valid, queue.count, queue.fills))
+    c = int(np.asarray(count).reshape(-1)[0])
+    v = np.asarray(valid) & (np.arange(queue.lanes)[:, None] < c)
+    flat_v = v.reshape(-1)
+    return ({k: np.asarray(a).reshape(-1)[flat_v]
+             for k, a in cols.items()}, None)
+
+
+def flush_queue(table: IndexedTable, queue: AppendQueue, *,
+                donate: bool = False,
+                compact_threshold: int | None = None):
+    """Land the ring in the arena: ONE fused jit + ONE host sync (the
+    ``ok`` flag) on the fast path.  Returns ``(table', ring', promoted)``.
+
+    ``donate=True`` trades the parent table AND ring for a true in-place
+    move (the streaming loop's cost); the returned pair is the only
+    usable version afterwards — same contract as ``append(donate=True)``.
+
+    The overflow -> promote contract: when the ring would blow the tail's
+    capacity or buckets, the fused flush holds (bit-identical state, no
+    version bump), the ring is drained host-side, and the coalesced delta
+    lands through the ordinary ``append`` — which seals the tail and
+    opens the next capacity class.  Either way the flush is exactly ONE
+    version bump, same as a coalesced list append, and the decoded table
+    is bit-identical to having appended the deltas directly (the lane-
+    major drain order equals enqueue order — tests/test_queue.py).
+    An empty ring is a no-op (no bump, no sync).
+    """
+    lanes_used, _ = queue_pending(queue)
+    if lanes_used == 0:
+        return table, queue, False
+    tail = table.segments[-1]
+    fn = _flush_donated if donate else _flush
+    out, ring, ok = fn(_dedup_state(table), table.snapshot.blocks[:-1],
+                       queue, schema=table.schema, layout=table.layout,
+                       rb=tail.row_base,
+                       bucket_counts=table.snapshot.bucket_counts,
+                       slots=table.slots,
+                       cap=tail.row_base + tail.capacity)
+    child = _reassemble(table, out)
+    if bool(jax.device_get(ok)):              # THE one host sync per flush
+        return child, _set_queue_mirror(ring, 0, 0), False
+    # held: child is content-identical to the parent (all scatters
+    # dropped, version post-corrected); under donation the PARENT buffers
+    # are consumed, so the promote lands on the reassembled child.
+    cols, valid = drain_queue(ring)
+    child = append(child, cols, valid, donate=donate,
+                   compact_threshold=compact_threshold)
+    return child, reset_queue(ring), True
 
 
 def compact(table: IndexedTable, *, reserve: int | None = None,

@@ -31,6 +31,7 @@ from repro.dist import checkpoint, mesh, runtime, shuffle
 from repro.dist.dtable import (DistributedTable, append_distributed,
                                choose_join, choose_lookup, collect_cols,
                                compact_distributed, create_distributed,
+                               enqueue_distributed, flush_queue_distributed,
                                indexed_join_bcast, indexed_join_routed,
                                indexed_join_shuffle, lookup, lookup_routed,
                                lookup_routed_flat, lookup_routed_report)
@@ -43,7 +44,8 @@ __all__ = [
     "DistributedTable", "Fault", "FaultInjector", "RecoveryManager",
     "RecoveryPolicy", "Runtime", "append_distributed", "checkpoint",
     "choose_join", "choose_lookup", "collect_cols", "compact_distributed",
-    "create_distributed", "indexed_join_bcast", "indexed_join_routed",
+    "create_distributed", "enqueue_distributed", "flush_queue_distributed",
+    "indexed_join_bcast", "indexed_join_routed",
     "indexed_join_shuffle", "lookup", "lookup_routed", "lookup_routed_flat",
     "lookup_routed_report", "mesh", "mesh_runtime", "resilience", "runtime",
     "shuffle", "supervise", "vmap_runtime",

@@ -251,9 +251,11 @@ def append_distributed(dt: DistributedTable, cols: dict, valid=None,
     schema, rpb = dt.schema, dt.rows_per_batch
     sc, sv, cap = _route_host(cols, schema, dt.num_shards, rpb, valid)
     # per-shard fit: routed rows are left-packed, so counts are sv sums
-    counts = np.asarray(sv).sum(axis=1)
+    # host syncs via jax.device_get: the benchmarks' SyncCounter funnel
+    counts = np.asarray(jax.device_get(sv)).sum(axis=1)
     tail = dt.table.segments[-1]
-    spare = tail.row_base + tail.capacity - np.asarray(dt.table.snapshot.fill)
+    spare = (tail.row_base + tail.capacity
+             - np.asarray(jax.device_get(dt.table.snapshot.fill)))
     fits = bool((counts <= spare).all())
 
     if fits and donate:
@@ -261,13 +263,13 @@ def append_distributed(dt: DistributedTable, cols: dict, valid=None,
                          EMPTY_KEY)
         ovf = mesh.axis_map(table_mod._arena_fits, rt)(
             tail.index.bucket_keys, keys, sv)
-        if int(jnp.max(ovf)) == 0:
+        if int(jax.device_get(jnp.max(ovf))) == 0:
             child, _ = _dist_arena_ingest(dt, sc, sv, rt, True)
             return DistributedTable(table=child, num_shards=dt.num_shards,
                                     version=dt.version + 1)
     elif fits:
         child, ovf = _dist_arena_ingest(dt, sc, sv, rt, False)
-        if int(jnp.max(ovf)) == 0:
+        if int(jax.device_get(jnp.max(ovf))) == 0:
             return DistributedTable(table=child, num_shards=dt.num_shards,
                                     version=dt.version + 1)
 
@@ -299,6 +301,131 @@ def append_distributed(dt: DistributedTable, cols: dict, valid=None,
     if child.table.num_segments > threshold:
         child = compact_distributed(child, rt=rt, _bump_version=False)
     return child
+
+
+# ---------------------------------------------------------------------------
+# Device-resident append queue, per shard (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _dist_enqueue_fn(rt: mesh.Runtime, donate: bool):
+    """Jitted, axis-mapped ring enqueue (one compile-cache entry per
+    runtime): every shard scatters its routed slice of the delta into its
+    own ring's next lane — possibly zero valid rows, keeping per-shard
+    ``count`` scalars in lockstep."""
+    mapped = mesh.axis_map(table_mod._enqueue_core, rt)
+    return jax.jit(mapped, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _dist_flush_fn(rt: mesh.Runtime, donate: bool, schema: Schema,
+                   layout: str, rb: int, bucket_counts: tuple, slots: int,
+                   cap: int):
+    """Jitted, axis-mapped fused flush over the deduplicated tail state
+    (one compile-cache entry per runtime + table structure, like
+    ``_dist_ingest_fn``).  ``axis=rt.axis`` makes the ok gate a psum:
+    every shard lands its ring or holds it *together*, so the stacked
+    versions/fills stay uniform (same all-or-nothing contract as
+    ``append_distributed`` promotion)."""
+
+    def per_shard(state, parent_blocks, q):
+        return table_mod._flush_core(
+            state, parent_blocks, q, schema=schema, layout=layout, rb=rb,
+            bucket_counts=bucket_counts, slots=slots, cap=cap,
+            axis=rt.axis)
+
+    return jax.jit(mesh.axis_map(per_shard, rt),
+                   donate_argnums=(0, 2) if donate else ())
+
+
+def enqueue_distributed(dt: DistributedTable, queue, cols: dict, valid=None,
+                        *, rt: mesh.Runtime | None = None,
+                        donate: bool = True):
+    """Stage one delta across every shard's ring — NO table change, and
+    the only host work is the numpy route (no device round-trip).
+
+    The delta is hash-partitioned exactly like ``append_distributed``
+    (host mirror of the device hash), each shard's slice landing in ITS
+    ring's next lane, so a later ``flush_queue_distributed`` ingests the
+    same per-shard rows in the same order as a direct append — bit
+    identical by the parity tests.  Raises ``QueueOverflow`` when the
+    rings are full or one shard's slice exceeds a lane.
+    """
+    rt = mesh.resolve(rt).check(dt.num_shards)
+    lanes_used, rows = table_mod.queue_pending(queue)
+    if lanes_used >= queue.lanes:
+        raise table_mod.QueueOverflow(
+            f"append queue is full ({queue.lanes} lanes pending); "
+            f"flush first")
+    n = int(np.shape(cols[dt.schema.key])[0])
+    nv = n if valid is None else int(np.asarray(valid, bool).sum())
+    sc, sv, cap = _route_host(cols, dt.schema, dt.num_shards, 1, valid)
+    if cap > queue.lane_rows:
+        raise table_mod.QueueOverflow(
+            f"one shard owns {cap} delta rows but queue lanes hold "
+            f"{queue.lane_rows}; append() it directly or size the ring "
+            f"with with_queue(lane_rows=...)")
+    pad = queue.lane_rows - cap
+    if pad:
+        sc = {k: jnp.pad(v, ((0, 0), (0, pad))) for k, v in sc.items()}
+        sv = jnp.pad(sv, ((0, 0), (0, pad)))
+    out = _dist_enqueue_fn(rt, donate)(queue, sc, sv)
+    return table_mod._set_queue_mirror(out, lanes_used + 1, rows + nv)
+
+
+def drain_queue_distributed(queue):
+    """Ring contents -> host ``(cols, valid=None)`` in enqueue order.
+
+    Lane-major across shards — (lane, shard, row) — so re-routing the
+    drained delta packs every shard's rows back in exactly its ring
+    order: the overflow -> promote path stays bit-identical to having
+    flushed in place.
+    """
+    cols, valid, count = jax.device_get(
+        (queue.cols, queue.valid, queue.count))
+    c = int(np.asarray(count).reshape(-1)[0])
+    v = np.asarray(valid) & (np.arange(queue.lanes)[None, :, None] < c)
+    flat_v = np.transpose(v, (1, 0, 2)).reshape(-1)
+    return ({k: np.transpose(np.asarray(a), (1, 0, 2)).reshape(-1)[flat_v]
+             for k, a in cols.items()}, None)
+
+
+def flush_queue_distributed(dt: DistributedTable, queue, *,
+                            rt: mesh.Runtime | None = None,
+                            donate: bool = False,
+                            compact_threshold: int | None = None):
+    """Land every shard's ring in its arena: ONE fused axis-mapped jit +
+    ONE host sync (the psum'd ``ok`` flag, identical on all shards).
+    Returns ``(dtable', ring', promoted)`` — same overflow -> promote and
+    ``donate`` contracts as the local ``flush_queue``: a held flush
+    drains the rings host-side and lands through ``append_distributed``
+    (which seals and promotes every shard together).  Exactly ONE global
+    version bump either way; an empty ring is a no-op.
+    """
+    rt = mesh.resolve(rt).check(dt.num_shards)
+    lanes_used, _ = table_mod.queue_pending(queue)
+    if lanes_used == 0:
+        return dt, queue, False
+    t = dt.table
+    tail = t.segments[-1]
+    fn = _dist_flush_fn(rt, donate, t.schema, t.layout, tail.row_base,
+                        t.snapshot.bucket_counts, t.slots,
+                        tail.row_base + tail.capacity)
+    out, ring, ok = fn(table_mod._dedup_state(t), t.snapshot.blocks[:-1],
+                       queue)
+    child_t = table_mod._reassemble(t, out)
+    if bool(np.asarray(jax.device_get(ok)).reshape(-1)[0]):  # THE one sync
+        child = DistributedTable(table=child_t, num_shards=dt.num_shards,
+                                 version=dt.version + 1)
+        return child, table_mod._set_queue_mirror(ring, 0, 0), False
+    # held: child_t is content-identical to the parent; under donation
+    # the parent buffers are consumed, so promote off the reassembled one
+    held = DistributedTable(table=child_t, num_shards=dt.num_shards,
+                            version=dt.version)
+    cols, valid = drain_queue_distributed(ring)
+    child = append_distributed(held, cols, valid, rt=rt, donate=donate,
+                               compact_threshold=compact_threshold)
+    return child, table_mod.reset_queue(ring), True
 
 
 def collect_cols(dt: DistributedTable,

@@ -184,6 +184,8 @@ class RecoveryStats:
     def __init__(self):
         self.reads = 0
         self.appends = 0
+        self.enqueues = 0
+        self.flushes = 0
         self.probes = 0
         self.recoveries = 0
         self.mttr_s: list[float] = []
@@ -238,6 +240,7 @@ class RecoveryManager:
         self._appends_since_ckpt = 0
         self._pressure_divisor: float | None = None
         self._sites: dict = {}             # (kind, mm, names) -> (jit fn, ctr)
+        self._pending: list = []           # host (cols, valid) per ring delta
         self._expected_fill = self._fill()
         if checkpoint_dir is not None:
             # anchor immediately: recovery never needs the full history
@@ -348,7 +351,24 @@ class RecoveryManager:
         for shard in sorted(suspects - self.dead):
             if self._recover_shard(shard):
                 recovered.append(shard)
+        if recovered and self._pending:
+            self._rebuild_ring()
         return recovered
+
+    def _rebuild_ring(self):
+        """Deterministically re-stage every pending (unflushed) delta
+        into a FRESH ring after a heal: lineage replay restores the table
+        to the last FLUSHED version, and re-enqueueing the manager's host
+        mirror of the ring (``_pending``, in enqueue order) reproduces
+        the lost shard's lanes bit-identically — a shard killed mid-ring
+        heals to exactly the state a never-failed twin holds
+        (scripts/fault_smoke.py gates this)."""
+        q = self.frame.queue
+        fr = dataclasses.replace(self.frame, queue=None).with_queue(
+            lanes=q.lanes, lane_rows=q.lane_rows)
+        for cols, valid in self._pending:
+            fr = fr.enqueue(cols, valid)
+        self.frame = fr
 
     # -- fault application -----------------------------------------------------
 
@@ -357,7 +377,8 @@ class RecoveryManager:
             if f.kind == "shard_loss":
                 self.frame = dataclasses.replace(
                     self.frame,
-                    data=_runtime.fail_shard(self.frame.data, f.shard))
+                    data=_runtime.fail_shard(self.frame.data, f.shard),
+                    queue=self._fail_queue_shard(f.shard))
             elif f.kind == "capacity_pressure":
                 self._pressure_divisor = max(2.0, float(f.severity))
             elif f.kind == "checkpoint_corruption":
@@ -373,6 +394,23 @@ class RecoveryManager:
                     self.stats.speculative_plans.append(
                         self.straggler.plan_speculative(
                             self.frame.num_shards))
+
+    def _fail_queue_shard(self, shard: int):
+        """Blank the lost shard's slice of the append ring (a real
+        executor death takes its staged lanes with it); the host mirror
+        of what SHOULD be pending survives in ``_pending``, which is what
+        ``_rebuild_ring`` heals from."""
+        q = self.frame.queue
+        if q is None:
+            return None
+        blanked = dataclasses.replace(
+            q,
+            cols={k: v.at[shard].set(0) for k, v in q.cols.items()},
+            valid=q.valid.at[shard].set(False),
+            fills=q.fills.at[shard].set(0),
+            count=q.count.at[shard].set(0))
+        return table_mod._set_queue_mirror(blanked,
+                                           *table_mod.queue_pending(q))
 
     def _tick(self):
         if self.injector is not None:
@@ -526,6 +564,50 @@ class RecoveryManager:
         if self.lineage is not None:
             self.lineage.record_append(cols, valid)
         self.stats.appends += 1
+        self.vv.bump_all()
+        self._expected_fill = self._fill()
+        self._appends_since_ckpt += 1
+        if (self.checkpoint_dir is not None and self.policy.checkpoint_every
+                and self._appends_since_ckpt >= self.policy.checkpoint_every):
+            self.checkpoint()
+        return self
+
+    def enqueue(self, cols, valid=None) -> "RecoveryManager":
+        """Supervised ``frame.enqueue``: stages the delta in the
+        device-resident ring AND mirrors it host-side (``_pending``) so a
+        shard killed mid-ring heals bit-identically — lineage only
+        records landed versions, so the manager itself must remember
+        what is staged.  No version bump, no checkpoint pressure."""
+        self._tick()
+        self._heal()
+        from repro.frame import _hash_string_cols
+        cols = _hash_string_cols(cols, self.frame.schema)
+        host = ({k: np.asarray(v).copy() for k, v in cols.items()},
+                None if valid is None else np.asarray(valid, bool).copy())
+        self.frame = self.frame.enqueue(cols, valid)
+        self._pending.append(host)
+        self.stats.enqueues += 1
+        return self
+
+    def flush(self, *,
+              compact_threshold: int | None = None) -> "RecoveryManager":
+        """Supervised ``frame.flush``: lands the ring (one fused jit, one
+        sync, ONE version bump) and records the coalesced pending deltas
+        into the lineage as ONE append — replaying the log reproduces the
+        flush bit-identically (flush ≡ coalesced append by the parity
+        tests), keeping version parity between live and healed tables."""
+        self._tick()
+        self._heal()
+        if not self._pending:
+            return self
+        self.frame = self.frame.flush(compact_threshold=compact_threshold)
+        if self.lineage is not None:
+            cols, valid = table_mod.coalesce_deltas(
+                [c for c, _ in self._pending], self.frame.schema,
+                [v for _, v in self._pending])
+            self.lineage.record_append(cols, valid)
+        self._pending.clear()
+        self.stats.flushes += 1
         self.vv.bump_all()
         self._expected_fill = self._fill()
         self._appends_since_ckpt += 1

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hashing
 from repro.core import joins
 from repro.core import planner as planner_mod
 from repro.core import table as table_mod
@@ -66,6 +67,28 @@ def _dtable():
 def _checkpoint():
     from repro.dist import checkpoint
     return checkpoint
+
+
+def _hash_string_cols(cols: dict, schema: Schema) -> dict:
+    """String-valued columns -> int64 FNV-1a keys, vectorized.
+
+    The facade accepts raw string columns anywhere a delta enters
+    (``from_columns`` / ``append`` / ``enqueue``) and hashes them in one
+    numpy batch (``hashing.hash_strings_host``, bit-identical to the
+    scalar ``hash_string_host`` loop) — the paper's Fig-15 string-ingest
+    tax paid vectorized instead of per row.  Device arrays and numeric
+    columns pass through untouched.
+    """
+    out, changed = dict(cols), False
+    for name, v in cols.items():
+        if isinstance(v, jax.Array):
+            continue
+        a = np.asarray(v)
+        if a.dtype.kind in "US" or (a.dtype.kind == "O" and a.size
+                                    and isinstance(a.reshape(-1)[0], str)):
+            out[name] = hashing.hash_strings_host(a)
+            changed = True
+    return out if changed else cols
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,23 +121,30 @@ class FramePlan:
         return self.planner.execute(self.node)
 
 
-@partial(jax.tree_util.register_dataclass, data_fields=["data"],
+@partial(jax.tree_util.register_dataclass, data_fields=["data", "queue"],
          meta_fields=["rt"])
 @dataclasses.dataclass(frozen=True)
 class IndexedFrame:
     """The paper's Indexed DataFrame: one facade, either backend.
 
-    ``data`` is the wrapped ``IndexedTable`` or ``DistributedTable`` (the
-    frame's only pytree data field — successive MVCC versions of a frame
-    stay structurally equal exactly when the wrapped table does, so
-    jitted read sites taking the frame as an argument never retrace
-    across in-class appends).  ``rt`` is the ``dist.mesh.Runtime`` every
-    distributed op executes under (treedef metadata; None = the vmap
-    emulation backend).
+    ``data`` is the wrapped ``IndexedTable`` or ``DistributedTable`` (a
+    pytree data field — successive MVCC versions of a frame stay
+    structurally equal exactly when the wrapped table does, so jitted
+    read sites taking the frame as an argument never retrace across
+    in-class appends).  ``queue`` is the optional device-resident append
+    ring (``core.table.AppendQueue``, DESIGN.md §13) behind
+    ``enqueue``/``flush``/``append(queued=True)`` — also a data field
+    with fixed lane shapes, so a frame streams deltas and flushes with
+    ZERO treedef change (attaching a queue to a queue-less frame is the
+    one-time treedef change, hence one retrace — do it before the jitted
+    read loop, or at construction).  ``rt`` is the ``dist.mesh.Runtime``
+    every distributed op executes under (treedef metadata; None = the
+    vmap emulation backend).
     """
 
     data: Any
     rt: mesh.Runtime | None = None
+    queue: Any = None
 
     # -- construction ---------------------------------------------------------
 
@@ -127,6 +157,7 @@ class IndexedFrame:
         """Paper Listing 1 ``createIndex``: build the index over a keyed
         columnar dict — one partition (``num_shards=1``) or hash-
         partitioned across shards, same handle either way."""
+        cols = _hash_string_cols(cols, schema)
         kw = {} if slots is None else {"slots": slots}
         if num_shards == 1:
             t = table_mod.create_index(
@@ -207,11 +238,18 @@ class IndexedFrame:
         (rules L1-L3) — ``.explain()`` on the result names the rule."""
         if op == "auto":
             p = self._planner(planner, max_matches)
-            return p.physical_lookup(self.data, int(jnp.shape(keys)[0]))
-        return self._forced_plan(op, _LOOKUP_OPS,
-                                 {"local": "IndexedLookup",
-                                  "bcast": "BroadcastLookup",
-                                  "routed": "RoutedLookup"})
+            phys = p.physical_lookup(self.data, int(jnp.shape(keys)[0]))
+        else:
+            phys = self._forced_plan(op, _LOOKUP_OPS,
+                                     {"local": "IndexedLookup",
+                                      "bcast": "BroadcastLookup",
+                                      "routed": "RoutedLookup"})
+        pending = self.pending_rows
+        if pending:
+            phys = dataclasses.replace(
+                phys, reason=phys.reason + f"; {pending} queued row(s) "
+                f"pending (invisible until flush)")
+        return phys
 
     def lookup(self, keys, *, max_matches: int = 64, names=None,
                op: str = "auto",
@@ -282,7 +320,7 @@ class IndexedFrame:
     # -- writes: MVCC appends, compaction -------------------------------------
 
     def append(self, cols, valid=None, *, donate: bool = False,
-               mode: str = "arena",
+               mode: str = "arena", queued: bool = False,
                compact_threshold: int | None = None) -> "IndexedFrame":
         """Paper Listing 1 ``appendRows``: functional append -> a new
         frame; the parent stays queryable (divergent MVCC children,
@@ -296,9 +334,38 @@ class IndexedFrame:
         instead of one host round-trip per delta (the ROADMAP's write-hot
         streams item).  ``valid`` is then a matching list of masks (or
         None).
+
+        ``queued=True`` stages the delta in the device-resident ring
+        instead (``enqueue`` — zero host syncs, invisible until
+        ``flush``), auto-attaching a default ring and auto-flushing when
+        the ring fills; an oversize delta flushes then lands directly
+        (the documented lane-size bypass).  String-valued columns are
+        hashed to int64 keys in one vectorized batch either way.
         """
+        if queued:
+            if isinstance(cols, (list, tuple)):
+                fr = self
+                for i, d in enumerate(cols):
+                    fr = fr.append(d, None if valid is None else valid[i],
+                                   queued=True, donate=donate,
+                                   compact_threshold=compact_threshold)
+                return fr
+            try:
+                return self.enqueue(cols, valid, donate=donate)
+            except table_mod.QueueOverflow:
+                fr = self.flush(compact_threshold=compact_threshold)
+                try:
+                    return fr.enqueue(cols, valid, donate=donate)
+                except table_mod.QueueOverflow:
+                    # oversize for a lane even when empty -> land directly
+                    return fr.append(cols, valid, donate=donate,
+                                     compact_threshold=compact_threshold)
         if isinstance(cols, (list, tuple)):
-            cols, valid = table_mod.coalesce_deltas(cols, self.schema, valid)
+            cols, valid = table_mod.coalesce_deltas(
+                [_hash_string_cols(d, self.schema) for d in cols],
+                self.schema, valid)
+        else:
+            cols = _hash_string_cols(cols, self.schema)
         if self.is_distributed:
             if mode != "arena":
                 raise ValueError(
@@ -313,6 +380,78 @@ class IndexedFrame:
                                    donate=donate,
                                    compact_threshold=compact_threshold)
         return dataclasses.replace(self, data=new)
+
+    # -- streaming ingest: the device-resident ring (DESIGN.md §13) ------------
+
+    @property
+    def pending_deltas(self) -> int:
+        """Occupied ring lanes (0 for a queue-less frame) — host mirror,
+        no device sync on the facade path."""
+        return 0 if self.queue is None else table_mod.queue_pending(
+            self.queue)[0]
+
+    @property
+    def pending_rows(self) -> int:
+        """Valid rows staged in the ring, invisible to readers until
+        ``flush`` (``plan_lookup`` reasons mention them)."""
+        return 0 if self.queue is None else table_mod.queue_pending(
+            self.queue)[1]
+
+    def with_queue(self, *, lanes: int = table_mod.DEFAULT_QUEUE_LANES,
+                   lane_rows: int | None = None) -> "IndexedFrame":
+        """Attach a fresh device-resident append ring (idempotent on
+        shape: an already-attached same-shape ring is kept).  This is the
+        frame's ONE treedef change — do it before entering a jitted read
+        loop and streaming stays retrace-free."""
+        lr = self.data.rows_per_batch if lane_rows is None else int(lane_rows)
+        q = self.queue
+        if q is not None and (q.lanes, q.lane_rows) == (lanes, lr):
+            return self
+        q = table_mod.empty_queue(
+            self.schema, lanes=lanes, lane_rows=lr,
+            num_shards=self.num_shards if self.is_distributed else None)
+        return dataclasses.replace(self, queue=q)
+
+    def enqueue(self, cols, valid=None, *,
+                donate: bool = True) -> "IndexedFrame":
+        """Stage one delta in the ring — NO host sync, NO table change;
+        rows become visible (one version bump for the whole ring) at
+        ``flush``.  Auto-attaches a default ring on first use.  The ring
+        is linearly owned, so the parent frame's ring is donated by
+        default (``donate=False`` keeps it alive; the *table* is MVCC
+        either way).  Raises ``core.table.QueueOverflow`` when full —
+        ``append(queued=True)`` auto-flushes instead."""
+        fr = self.with_queue() if self.queue is None else self
+        cols = _hash_string_cols(cols, self.schema)
+        if fr.is_distributed:
+            q = _dtable().enqueue_distributed(fr.data, fr.queue, cols, valid,
+                                              rt=fr.rt, donate=donate)
+        else:
+            q = table_mod.enqueue(fr.queue, cols, valid, donate=donate)
+        return dataclasses.replace(fr, queue=q)
+
+    def flush(self, *, donate: bool = False,
+              compact_threshold: int | None = None) -> "IndexedFrame":
+        """Land the ring in the arena: ONE fused jit + ONE host sync (the
+        overflow flag) for however many deltas are staged — vs one
+        pre-flight + one fill check per ``append`` call.  Exactly one
+        version bump; on capacity pressure the flush holds and the
+        drained ring lands through the ordinary promote path
+        (bit-identical either way).  ``donate=True`` hands the parent
+        table state AND the ring to XLA (true in-place landing — only
+        when no other frame aliases them).  Empty ring: no-op, returns
+        self."""
+        if self.queue is None or self.pending_deltas == 0:
+            return self
+        if self.is_distributed:
+            data, q, _ = _dtable().flush_queue_distributed(
+                self.data, self.queue, rt=self.rt, donate=donate,
+                compact_threshold=compact_threshold)
+        else:
+            data, q, _ = table_mod.flush_queue(
+                self.data, self.queue, donate=donate,
+                compact_threshold=compact_threshold)
+        return dataclasses.replace(self, data=data, queue=q)
 
     def compact(self, *, reserve: int | None = None) -> "IndexedFrame":
         """Merge all segments into one fresh arena (bounds MVCC probe
@@ -387,7 +526,11 @@ class IndexedFrame:
         """Elastic scale: re-route every valid row into a ``num_shards``
         topology (``dist.checkpoint.reshard_dtable``; a local frame is
         promoted by the same collect -> re-route -> re-index pass).  The
-        global MVCC version is preserved."""
+        global MVCC version is preserved.  A pending append ring is
+        flushed first (its lane shapes are per-topology), and the
+        resharded frame comes back queue-less — ``with_queue()`` again
+        on the new topology."""
+        self = self.flush()
         if self.is_distributed:
             new = _checkpoint().reshard_dtable(self.data, num_shards, rt=self.rt,
                                       rt_out=rt_out)

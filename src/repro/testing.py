@@ -96,6 +96,23 @@ def lists(elements: SearchStrategy, *, min_size: int = 0,
     return SearchStrategy(draw, f"lists[{min_size}..{cap}]")
 
 
+def text(alphabet=None, *, min_size: int = 0, max_size=None) -> SearchStrategy:
+    """Unicode strings biased toward hashing edge cases: empty, ASCII,
+    NUL bytes, multi-byte codepoints, and surrogate-free astral chars."""
+    cap = max_size if max_size is not None else min_size + 20
+    pool = (list(alphabet) if alphabet is not None else
+            [chr(c) for c in range(0x20, 0x7F)]
+            + ["\x00", "\x01", "é", "ß", "…", "中", "🦜", "߿", "￿"])
+
+    def draw(rnd):
+        r = rnd.random()
+        n = min_size if r < 0.15 else (cap if r < 0.30
+                                       else rnd.randint(min_size, cap))
+        return "".join(rnd.choice(pool) for _ in range(n))
+
+    return SearchStrategy(draw, f"text[{min_size}..{cap}]")
+
+
 def sampled_from(options) -> SearchStrategy:
     options = list(options)
     return SearchStrategy(lambda rnd: rnd.choice(options), "sampled_from")
@@ -151,7 +168,8 @@ def install() -> None:
     hyp.SearchStrategy = SearchStrategy
     hyp.__version__ = "0.0-repro-fallback"
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "lists", "sampled_from", "booleans"):
+    for name in ("integers", "floats", "lists", "text", "sampled_from",
+                 "booleans"):
         setattr(st, name, globals()[name])
     hyp.strategies = st
     sys.modules["hypothesis"] = hyp
