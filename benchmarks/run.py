@@ -30,6 +30,8 @@ MODULES = {
     "memory_overhead": "Fig 11 (logical vs reserved)",
     "fault_tolerance": "Fig 12 chaos sweep: fault x write rate through "
                        "the supervised frame (-> BENCH_dist.json)",
+    "serve": "ISSUE 8 continuous-batching query engine: QPS x write-rate "
+             "grid, p50/p99 SLOs, both topologies (-> BENCH_serve.json)",
     "batch_size_sweep": "Fig 5",
     "scalability": "Fig 6 (mesh sweep -> BENCH_scale.json)",
     "tpcds_join": "Fig 14",

@@ -37,6 +37,24 @@ echo "== fault smoke (forced 8-device host mesh) =="
 XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
   python scripts/fault_smoke.py
 
+# Fast serving smoke (seconds): a short mixed read/write run through
+# the continuous-batching QueryEngine — p99 finite, every answer
+# bit-identical to an unbatched twin replaying the engine's write_log,
+# zero retraces after warmup, one version bump per flush (ISSUE 8
+# acceptance; DESIGN.md §14).  Both topologies, plus an explicit run of
+# the serving suite (it also rides the full tier-1 passes below — the
+# forced-8 pass runs the in-process shard_map serving tests).
+echo "== serve smoke (single device) =="
+python scripts/serve_smoke.py
+echo "== serve smoke (forced 8-device host mesh) =="
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+  python scripts/serve_smoke.py
+echo "== serving suite (single device) =="
+python -m pytest -q tests/test_serving.py tests/test_query_engine.py
+echo "== serving suite (forced 8-device host mesh) =="
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+  python -m pytest -q tests/test_serving.py tests/test_query_engine.py
+
 echo "== tier-1 pytest (single device) =="
 python -m pytest -q
 

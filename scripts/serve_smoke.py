@@ -1,0 +1,108 @@
+"""Fast serving-path smoke for CI (seconds, not the QPS grid).
+
+The continuous-batching acceptance contract (ISSUE 8; DESIGN.md §14),
+gated on every CI run under BOTH topologies (scripts/ci.sh):
+
+  a short mixed read/write run through ``QueryEngine`` — many client
+  streams, every bucket boundary, appends interleaved through the ring
+  -> every answer bit-identical to an unbatched twin replaying the
+  engine's ``write_log`` at the recorded MVCC versions -> p50/p99 read
+  latency finite -> one trace per (site, bucket), zero retraces after
+  warmup -> ONE version bump per flush (host mirror == device scalar).
+
+Exits nonzero with a diagnostic on any violation.  Like
+scripts/fault_smoke.py it runs on whatever topology the process has —
+ci.sh invokes it plain and under a forced 8-device host mesh; with 8+
+devices the engine serves on the real shard_map backend.
+"""
+
+import math
+import sys
+
+import numpy as np
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.core import Schema                              # noqa: E402
+from repro.dist import mesh                                # noqa: E402
+from repro.frame import IndexedFrame                       # noqa: E402
+from repro.serving.query_engine import (QueryEngine,       # noqa: E402
+                                        replay_unbatched)
+
+FAILURES = []
+
+
+def check(ok: bool, msg: str):
+    print(("  OK   " if ok else "  FAIL ") + msg)
+    if not ok:
+        FAILURES.append(msg)
+
+
+def main() -> int:
+    ndev = len(jax.devices())
+    s = 8 if ndev >= 8 else 4
+    rt = mesh.mesh_runtime(s) if ndev >= s else None
+    backend = "shard_map" if rt is not None else "vmap"
+    print(f"serve smoke: {s} shards on the {backend} backend "
+          f"({ndev} device(s))")
+
+    rng = np.random.default_rng(8)
+    n = 2048
+    sch = Schema.of("k", k="int64", v="float32")
+    cols = {"k": np.arange(n, dtype=np.int64),
+            "v": rng.standard_normal(n).astype(np.float32)}
+    twin = IndexedFrame.from_columns(cols, sch, num_shards=s,
+                                     rows_per_batch=512, rt=rt)
+    eng = QueryEngine(
+        IndexedFrame.from_columns(cols, sch, num_shards=s,
+                                  rows_per_batch=512, rt=rt),
+        ladder=(8, 16, 32), max_matches=4, flush_deadline_ticks=2)
+
+    # mixed traffic: reader streams covering every bucket boundary
+    # (1, B, B+1, ladder max — plus misses and out-of-range keys), one
+    # writer stream staging a delta per round; a tick per request so
+    # each rung of the ladder actually compiles and is then reused
+    reqs = []
+    wi = 0
+    for step in range(6):
+        for stream, size in enumerate((1, 8, 9, 32)):
+            q = rng.integers(-5, n + 20, size=size).astype(np.int64)
+            reqs.append(eng.submit_lookup(q, stream_id=stream))
+            eng.tick()
+        eng.submit_append({"k": np.asarray([n + wi], np.int64),
+                           "v": np.asarray([float(wi)], np.float32)},
+                          stream_id=99)
+        wi += 1
+        eng.tick()
+    eng.drain()
+
+    summary = eng.latency_summary()
+    p99 = summary["read"]["p99_ms"]
+    check(all(r.done for r in reqs), f"all {len(reqs)} requests answered")
+    check(math.isfinite(p99) and p99 > 0,
+          f"p99 read latency finite ({p99:.3f} ms, "
+          f"p50 {summary['read']['p50_ms']:.3f} ms)")
+    mism = replay_unbatched(twin, reqs, eng.write_log)
+    check(mism == 0,
+          f"batched answers bit-identical to the unbatched twin "
+          f"({mism} mismatching request(s) of {len(reqs)})")
+    check(eng.zero_retraces_after_warmup,
+          f"zero retraces after warmup ({eng.retraces} traces for "
+          f"{eng.expected_traces} (site, bucket) pairs)")
+    check(eng.stats.flushes >= 2,
+          f"writes interleaved through the ring "
+          f"({eng.stats.flushes} flushes, {eng.stats.writes} writes)")
+    check(eng.verify_version(),
+          f"one version bump per flush (host mirror "
+          f"{eng.version_host} == device scalar)")
+
+    if FAILURES:
+        print(f"\nserve smoke: {len(FAILURES)} violation(s)")
+        return 1
+    print("serve smoke: all serving contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,11 @@ entry point:
 * the append queue — ``enqueue``/``flush`` driven through FULL ring
   wraps (every lane filled, flushed, refilled) must trace each site
   exactly ONCE per topology (ISSUE 7 / DESIGN.md §13), and the jitted
-  read sites must not retrace as the ring fills and drains.
+  read sites must not retrace as the ring fills and drains;
+* the serving engine — the full pad-to-bucket ladder driven with
+  varying request counts while appends interleave (ISSUE 8 /
+  DESIGN.md §14): exactly one trace per (read site, bucket) rung on
+  warmup, ZERO retraces on a second full-ladder pass.
 
 Fast by construction: tiny tables, one compile per site, zero retraces —
 the whole gate is a few seconds of XLA work.
@@ -224,12 +228,58 @@ def gate_queue(rt, label):
           f"full ring wraps")
 
 
+def gate_serving(rt, label):
+    """ISSUE 8: the QueryEngine's pad-to-bucket contract — drive the
+    FULL bucket ladder with varying request counts while appends
+    interleave through the ring; exactly one trace per (site, bucket)
+    on pass 1, ZERO new traces on pass 2."""
+    from repro.serving.query_engine import QueryEngine
+    rng = np.random.default_rng(5)
+    n = 512
+    cols = {"k": np.arange(n, dtype=np.int64),
+            "v": rng.random(n).astype(np.float32)}
+    kw = {} if rt is None else dict(num_shards=4, rt=rt)
+    fr = IndexedFrame.from_columns(cols, SCH, rows_per_batch=64,
+                                   reserve=4096, **kw)
+    eng = QueryEngine(fr, ladder=(4, 8, 16), max_matches=4,
+                      flush_deadline_ticks=2)
+    # every rung, from every side of its boundary, several request
+    # counts per tick — with a write staged between ticks
+    sizes = [1, 3, 4, 5, 8, 9, 16]
+    warm = None
+    for pas in range(2):
+        for i, s in enumerate(sizes):
+            for _ in range(1 + i % 2):
+                eng.submit_lookup(rng.integers(0, n, s).astype(np.int64))
+                eng.tick()
+            eng.submit_append(
+                {"k": rng.integers(0, n, 4).astype(np.int64),
+                 "v": rng.random(4).astype(np.float32)})
+            eng.tick()
+        if pas == 0:
+            warm = eng.retraces
+            if warm != eng.expected_traces or warm != len(eng.ladder):
+                fail(f"serving ({label}): {warm} warmup traces for "
+                     f"{eng.expected_traces} (site, bucket) pairs over a "
+                     f"{len(eng.ladder)}-rung ladder (expected equal)")
+    if eng.retraces != warm:
+        fail(f"serving ({label}): {eng.retraces - warm} retraces on the "
+             f"second full-ladder pass (expected 0)")
+    if not eng.zero_retraces_after_warmup:
+        fail(f"serving ({label}): zero_retraces_after_warmup is False "
+             f"({eng.retraces} traces, {eng.expected_traces} expected)")
+    print(f"  serving ({label}): {warm} traces = one per ladder rung, "
+          f"0 on pass 2 ({eng.stats.batches} batches, "
+          f"{eng.stats.flushes} flushes interleaved)")
+
+
 def main():
     print(f"trace gate: {len(jax.devices())} device(s), "
           f"backend={jax.default_backend()}")
     gate_single_table()
     gate_frame_single()
     gate_queue(None, "local")
+    gate_serving(None, "local")
     try:
         from repro.dist import mesh
     except ImportError:
@@ -238,10 +288,12 @@ def main():
     gate_distributed(mesh.vmap_runtime(), "vmap")
     gate_frame_distributed(mesh.vmap_runtime(), "vmap")
     gate_queue(mesh.vmap_runtime(), "vmap")
+    gate_serving(mesh.vmap_runtime(), "vmap")
     if len(jax.devices()) >= 4:
         gate_distributed(mesh.mesh_runtime(4), "shard_map")
         gate_frame_distributed(mesh.mesh_runtime(4), "shard_map")
         gate_queue(mesh.mesh_runtime(4), "shard_map")
+        gate_serving(mesh.mesh_runtime(4), "shard_map")
     else:
         print("  shard_map gate skipped (<4 devices; ci.sh's forced-8 "
               "pass covers it)")

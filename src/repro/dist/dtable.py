@@ -612,7 +612,12 @@ def lookup_routed_report(dt: DistributedTable, keys, *, max_matches: int,
     qn = q.shape[0]
     n = max(1, -(-qn // s))
     qpad = jnp.pad(q, (0, s * n - qn))
-    qvalid = jnp.arange(s * n) < qn
+    # serving pads batches to a bucket with the reserved EMPTY_KEY
+    # sentinel (serving/query_engine.py PAD_KEY): mask those lanes out
+    # of the exchange entirely, so pad lanes never consume routed
+    # capacity or count as drops — they come back cols=0/valid=False
+    # exactly like the tail padding
+    qvalid = (jnp.arange(s * n) < qn) & (qpad != EMPTY_KEY)
     cols, valid, answered, dropped = lookup_routed(
         dt, qpad.reshape(s, n), qvalid.reshape(s, n),
         max_matches=max_matches, capacity=capacity, names=names, rt=rt)

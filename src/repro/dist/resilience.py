@@ -461,7 +461,11 @@ class RecoveryManager:
             return np.ones(keys_np.shape[0], bool)
         owner = hashing.partition_hash_host(keys_np,
                                             self.frame.num_shards)
-        return ~np.isin(owner, np.asarray(sorted(self.dead)))
+        # EMPTY_KEY lanes are pad sentinels (serving pad-to-bucket) or
+        # explicit guaranteed-miss probes: no owner needs to be alive to
+        # answer them, so they never mark a read degraded
+        pad = keys_np == int(np.asarray(EMPTY_KEY))
+        return pad | ~np.isin(owner, np.asarray(sorted(self.dead)))
 
     def _routed_with_retry(self, q, max_matches: int, names):
         """The automated drop->retry contract: start at the pressured
@@ -508,7 +512,11 @@ class RecoveryManager:
             q = jax.numpy.asarray(q_np)
             cols, valid, answered_x, n_dropped, retries = \
                 self._routed_with_retry(q, max_matches, names_t)
-            answered = self._answered_mask(q_np) & answered_x
+            # pad-sentinel lanes never enter the routed exchange (their
+            # qvalid is masked off), so answered_x reports them False —
+            # but a guaranteed miss needs nobody to answer it
+            answered = self._answered_mask(q_np) & (
+                answered_x | (q_np == int(np.asarray(EMPTY_KEY))))
         else:
             fn, _ = self._site(kind, max_matches, names_t)
             cols, valid = fn(self.frame, jax.numpy.asarray(q_np))

@@ -479,6 +479,18 @@ class IndexedFrame:
             self, lineage=lineage, policy=policy, injector=injector,
             checkpoint_dir=checkpoint_dir)
 
+    def serve(self, **kw):
+        """Wrap this frame in a ``serving.query_engine.QueryEngine``:
+        FIFO admission from many client streams, pad-to-bucket
+        micro-batching into the fused read sites (one trace per bucket),
+        writer deltas interleaved through the append ring (reads ride
+        the pre-flush snapshot), p50/p99 SLO accounting (DESIGN.md §14).
+        The engine owns the frame from here on (``engine.frame``);
+        a supervised frame serves via ``frame.supervised(...).serve()``
+        — i.e. ``QueryEngine(manager, **kw)``."""
+        from repro.serving.query_engine import QueryEngine
+        return QueryEngine(self, **kw)
+
     # -- relational plans ------------------------------------------------------
 
     def relation(self, name: str = "frame") -> planner_mod.Relation:

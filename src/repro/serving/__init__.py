@@ -1,14 +1,27 @@
-"""serving — indexed prefix/KV cache + decode engine.
+"""serving — indexed prefix/KV cache + decode engine + query serving.
 
-  kvcache.py  PagePool (row batches) + PrefixCache (hash-index lookup,
-              MVCC commits) — the paper's cache applied to inference
-  engine.py   dense serve_step (dry-run path), paged GQA fast path,
-              host-side batched Engine
+  kvcache.py       PagePool (row batches) + PrefixCache (hash-index
+                   lookup, MVCC commits) — the paper's cache applied to
+                   inference
+  engine.py        dense serve_step (dry-run path), paged GQA fast path,
+                   host-side batched Engine
+  query_engine.py  continuous-batching QueryEngine over the IndexedFrame
+                   facade: FIFO admission, pad-to-bucket micro-batching,
+                   AppendQueue write interleaving, p50/p99 SLO accounting
+                   (DESIGN.md §14)
 """
 
 from repro.serving.kvcache import PagePool, PrefixCache, prefix_hashes
 from repro.serving.engine import Engine, Request, make_serve_step, \
     paged_decode_step
+from repro.serving.query_engine import (PAD_KEY, EngineStats, QueryEngine,
+                                        QueryRequest, WriteRequest,
+                                        bucket_ladder, pad_keys,
+                                        percentiles, pick_bucket,
+                                        replay_unbatched)
 
 __all__ = ["PagePool", "PrefixCache", "prefix_hashes", "Engine", "Request",
-           "make_serve_step", "paged_decode_step"]
+           "make_serve_step", "paged_decode_step",
+           "PAD_KEY", "EngineStats", "QueryEngine", "QueryRequest",
+           "WriteRequest", "bucket_ladder", "pad_keys", "percentiles",
+           "pick_bucket", "replay_unbatched"]

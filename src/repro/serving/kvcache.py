@@ -116,6 +116,7 @@ class PrefixCache:
     def __init__(self, rows_per_batch: int = 256):
         self.rows_per_batch = rows_per_batch
         self.frame = None            # lazily created on first commit
+        self._released: set[int] = set()   # page ids handed back to the pool
 
     @property
     def table(self):
@@ -154,9 +155,18 @@ class PrefixCache:
         hit = np.asarray(valid[:, 0])
         pid = np.asarray(cols["page_id"][:, 0])
         n = 0
-        while n < len(hs) and hit[n]:
+        # a committed-then-released page must never resurface as a hit:
+        # the index row still exists (MVCC appends are immutable) but the
+        # page's KV contents are gone, so the usable prefix stops there
+        while n < len(hs) and hit[n] and int(pid[n]) not in self._released:
             n += 1
         return n, pid[:n].astype(np.int32)
+
+    def release(self, page_ids):
+        """Hand pages back (eviction / sequence teardown): their index
+        entries stay — the MVCC log is immutable — but ``lookup_prefix``
+        stops treating them as cached."""
+        self._released.update(int(i) for i in page_ids)
 
     def memory_overhead_bytes(self) -> int:
         return 0 if self.frame is None else self.frame.index_nbytes()

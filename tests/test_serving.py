@@ -48,6 +48,36 @@ def test_prefix_cache_lookup_and_commit(rng):
     assert cache.lookup_prefix(toks2, 16)[0] == 4
 
 
+def test_prefix_cache_edge_cases(rng):
+    """lookup_prefix edges (ISSUE 8): empty token stream, sub-page tail,
+    and a committed-then-released page never resurfacing as a hit."""
+    cache = PrefixCache()
+    toks = rng.integers(1, 100, 64).astype(np.int32)
+    cache.commit(prefix_hashes(toks, 16), [10, 11, 12, 13], seq_id=0)
+
+    # empty token stream: zero pages, empty id vector, no probe crash
+    n, ids = cache.lookup_prefix(np.zeros(0, np.int32), 16)
+    assert n == 0 and ids.shape == (0,) and ids.dtype == np.int32
+    # a stream shorter than one page hashes to zero boundaries
+    assert cache.lookup_prefix(toks[:15], 16)[0] == 0
+    # a sub-page tail is ignored: 64 full + 7 tail tokens -> the same
+    # 4-page hit as the aligned stream
+    n, ids = cache.lookup_prefix(
+        np.concatenate([toks, toks[:7]]), 16)
+    assert n == 4
+    np.testing.assert_array_equal(ids, [10, 11, 12, 13])
+
+    # committed-then-released: the MVCC index row survives (appends are
+    # immutable) but the page's KV is gone — the hit run must stop AT
+    # the released page, and pages behind it stay usable
+    cache.release([12])
+    n, ids = cache.lookup_prefix(toks, 16)
+    assert n == 2
+    np.testing.assert_array_equal(ids, [10, 11])
+    cache.release([10])
+    assert cache.lookup_prefix(toks, 16)[0] == 0
+
+
 def test_page_pool_alloc_release():
     pool = PagePool.create(2, 8, 4, 2, 8, dtype=jnp.float32)
     ids = pool.alloc(3)
