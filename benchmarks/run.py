@@ -33,7 +33,8 @@ MODULES = {
     "serve": "ISSUE 8 continuous-batching query engine: QPS x write-rate "
              "grid, p50/p99 SLOs, both topologies (-> BENCH_serve.json)",
     "batch_size_sweep": "Fig 5",
-    "scalability": "Fig 6 (mesh sweep -> BENCH_scale.json)",
+    "scalability": "Fig 6 (mesh sweep + ISSUE 9 Zipf skew sweep "
+                   "-> BENCH_scale.json)",
     "tpcds_join": "Fig 14",
     "snb_queries": "Fig 13",
     "flights_queries": "Fig 15",

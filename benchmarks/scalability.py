@@ -13,6 +13,14 @@ Three sweeps:
   the 2x-overprovisioned capacity) — the s× redundancy the ROADMAP
   flags, measured.
 
+* **skew sweep** (ISSUE 9): Zipf-distributed data and queries at
+  s in {0.5, 1.0, 1.5}, pure routing at the standard 2x exchange
+  capacity vs the hot-key-replicated hybrid (DESIGN.md §15) — on the
+  vmap-4 backend in this process and on the forced-8 shard_map mesh in
+  the subprocess.  The headline: at s=1.5 routing drops and needs
+  capacity-doubling retries to deliver; the hybrid stays flat at zero
+  drops, bit-identical to the full-capacity routed oracle.
+
 The mesh sweep needs the forced device count set *before* jax
 initializes, so it runs in a subprocess (``--mesh-worker``); the parent
 collects its JSON and lands everything in ``BENCH_scale.json`` at the
@@ -33,6 +41,101 @@ from benchmarks.common import Report, powerlaw_keys, timeit
 
 SCH = Schema.of("k", k="int64", v="float32")
 MESH_DEVICES = (1, 2, 4, 8)
+ZIPF_S = (0.5, 1.0, 1.5)
+
+
+def _zipf_keys(rng, n, uniques, s):
+    ranks = np.arange(1, uniques + 1, dtype=np.float64)
+    p = ranks ** -float(s)
+    p /= p.sum()
+    return rng.choice(uniques, size=n, p=p).astype(np.int64)
+
+
+def _skew_rows(num_shards, rt, quick, topology):
+    """The skew sweep (ISSUE 9 headline): Zipf-distributed data AND
+    queries at s in ZIPF_S, pure routing at the standard 2x-provisioned
+    exchange capacity vs the hot-key-replicated hybrid.
+
+    Per cell: one-shot routed latency + drops at the standard capacity,
+    the retry-until-delivered blowup (the RecoveryManager's doubling
+    contract replayed by hand — total wall clock a pressured caller
+    actually waits), hybrid latency + drops at the SAME capacity, hot
+    coverage, and a bitwise parity check against the full-capacity
+    routed oracle.  At s=1.5 most queries hit one owner: routing
+    collapses (drops at any fixed capacity, delivered only after
+    doublings) while the hybrid stays flat — its hot lanes never enter
+    the exchange.
+    """
+    from repro import dist
+
+    n = 40_000 if quick else 200_000
+    total_q = 8_192 if quick else 32_768
+    uniques = 4_096
+    max_matches = 8
+    per = -(-total_q // num_shards)
+    cap = max(64, -(-2 * per // num_shards))    # standard 2x provisioning
+    rows = []
+    for s_exp in ZIPF_S:
+        rng = np.random.default_rng(17 + int(s_exp * 10))
+        data_k = _zipf_keys(rng, n, uniques, s_exp)
+        q = _zipf_keys(rng, total_q, uniques, s_exp)
+        base = {"k": np.arange(4, dtype=np.int64),
+                "v": np.zeros(4, np.float32)}
+        dt = dist.create_distributed(base, SCH, num_shards,
+                                     rows_per_batch=2048,
+                                     reserve=n + 4096, track_hot=64, rt=rt)
+        dt = dist.append_distributed(
+            dt, {"k": data_k, "v": rng.random(n).astype(np.float32)},
+            rt=rt)
+        dt = dist.attach_replica(dt, capacity=64, max_matches=max_matches)
+        dt = dist.refresh_replica(dt, rt=rt)
+
+        jr = jax.jit(lambda t_, p_, _rt=rt, _c=cap:
+                     dist.lookup_routed_report(
+                         t_, p_, max_matches=max_matches, capacity=_c,
+                         rt=_rt))
+        jh = jax.jit(lambda t_, p_, _rt=rt, _c=cap:
+                     dist.lookup_hybrid_report(
+                         t_, p_, max_matches=max_matches, capacity=_c,
+                         rt=_rt))
+        tr = timeit(jr, dt, q, reps=5)["median_s"]
+        th = timeit(jh, dt, q, reps=5)["median_s"]
+        routed_drops = int(np.asarray(jr(dt, q)[3]).sum())
+        hybrid_drops = int(np.asarray(jh(dt, q)[3]).sum())
+
+        # retry-until-delivered: double capacity per attempt until the
+        # exchange stops dropping (the resilience layer's contract)
+        deliver_ms, retries, c = 0.0, 0, cap
+        while True:
+            ja = jax.jit(lambda t_, p_, _rt=rt, _c=c:
+                         dist.lookup_routed_report(
+                             t_, p_, max_matches=max_matches, capacity=_c,
+                             rt=_rt))
+            deliver_ms += timeit(ja, dt, q, reps=3)["median_s"] * 1e3
+            if int(np.asarray(ja(dt, q)[3]).sum()) == 0 or retries >= 8:
+                break
+            retries += 1
+            c *= 2
+
+        ch, vh = dist.lookup_hybrid_flat(dt, q, max_matches=max_matches,
+                                         rt=rt)
+        cr, vr = dist.lookup_routed_flat(dt, q, max_matches=max_matches,
+                                         rt=rt)
+        parity = bool(np.array_equal(np.asarray(vh), np.asarray(vr))
+                      and all(np.array_equal(np.asarray(ch[k]),
+                                             np.asarray(cr[k]))
+                              for k in ch))
+        rows.append({"label": f"skew {topology} s={s_exp}",
+                     "topology": topology, "zipf_s": s_exp,
+                     "num_shards": num_shards, "total_queries": total_q,
+                     "capacity": cap,
+                     "routed_ms": tr * 1e3, "routed_dropped": routed_drops,
+                     "routed_delivered_ms": deliver_ms,
+                     "routed_retries": retries,
+                     "hybrid_ms": th * 1e3, "hybrid_dropped": hybrid_drops,
+                     "hot_fraction": dist.hot_fraction(dt, q),
+                     "parity_ok": parity})
+    return rows
 
 
 def _vmap_sweeps(rep, rng, n):
@@ -115,6 +218,9 @@ def _mesh_worker(quick: bool):
                                  else "bcast"),
                      "planner_rule": phys.reason})
     print("MESH_SWEEP_JSON " + json.dumps(rows), flush=True)
+    skew = _skew_rows(max(MESH_DEVICES), mesh.mesh_runtime(max(MESH_DEVICES)),
+                      quick, f"shard_map-{max(MESH_DEVICES)}")
+    print("SKEW_SWEEP_JSON " + json.dumps(skew), flush=True)
 
 
 def _mesh_sweep(rep, quick: bool):
@@ -132,15 +238,19 @@ def _mesh_sweep(rep, quick: bool):
     if proc.returncode != 0:
         raise RuntimeError(f"mesh worker failed:\n{proc.stdout}\n"
                            f"{proc.stderr}")
-    line = [ln for ln in proc.stdout.splitlines()
-            if ln.startswith("MESH_SWEEP_JSON ")][-1]
-    rows = json.loads(line[len("MESH_SWEEP_JSON "):])
+    def grab(tag):
+        line = [ln for ln in proc.stdout.splitlines()
+                if ln.startswith(tag + " ")][-1]
+        return json.loads(line[len(tag) + 1:])
+
+    rows = grab("MESH_SWEEP_JSON")
     for r in rows:
         rep.add(r["label"], bcast_ms=r["bcast_ms"],
                 routed_ms=r["routed_ms"],
                 routed_speedup=r["routed_speedup"],
                 routed_dropped=r["routed_dropped"])
-    return rows
+    skew_rows = grab("SKEW_SWEEP_JSON")
+    return rows, skew_rows
 
 
 def run(quick: bool = True):
@@ -148,7 +258,22 @@ def run(quick: bool = True):
     n = 30_000 if quick else 300_000
     rep = Report("scalability")
     _vmap_sweeps(rep, rng, n)
-    mesh_rows = _mesh_sweep(rep, quick)
+    skew_rows = _skew_rows(4, None, quick, "vmap-4")
+    for r in skew_rows:
+        rep.add(r["label"], routed_ms=r["routed_ms"],
+                routed_dropped=r["routed_dropped"],
+                routed_delivered_ms=r["routed_delivered_ms"],
+                hybrid_ms=r["hybrid_ms"],
+                hybrid_dropped=r["hybrid_dropped"],
+                hot_fraction=r["hot_fraction"], parity_ok=r["parity_ok"])
+    mesh_rows, skew_mesh = _mesh_sweep(rep, quick)
+    for r in skew_mesh:
+        rep.add(r["label"], routed_ms=r["routed_ms"],
+                routed_dropped=r["routed_dropped"],
+                routed_delivered_ms=r["routed_delivered_ms"],
+                hybrid_ms=r["hybrid_ms"],
+                hybrid_dropped=r["hybrid_dropped"],
+                hot_fraction=r["hot_fraction"], parity_ok=r["parity_ok"])
 
     out_path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                             "BENCH_scale.json"))
@@ -156,6 +281,7 @@ def run(quick: bool = True):
         json.dump({"benchmark": "scalability", "quick": quick,
                    "backend": jax.default_backend(),
                    "mesh_sweep": mesh_rows,
+                   "skew_sweep": skew_rows + skew_mesh,
                    "rows": rep.to_dict()["rows"]}, f, indent=2)
     return rep.to_dict()
 

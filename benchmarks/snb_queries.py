@@ -1,4 +1,6 @@
-"""Fig 13: SNB short-read analogs on a power-law social graph.
+"""Fig 13: SNB short-read analogs on a power-law social graph, driven
+through the ``IndexedFrame`` facade (the paper's user API) so the Zipf
+claims land on a paper workload, not only synthetic keys.
 
 SQ1  person lookup (point query on vertex id)
 SQ2  recent posts of person (lookup, multi-match)
@@ -7,17 +9,53 @@ SQ4  posts of friends (lookup -> join)
 SQ5  full-profile projection (row-layout tax — the paper's slow case)
 SQ6  2-hop scan-heavy traversal (fallback path, non-indexed win is small)
 SQ7  replies to person (join on dst)
+SQ8  celebrity fan-in (ISSUE 9): the SNB degree skew concentrated on a
+     4-shard distributed frame — routed vs hot-key-replicated hybrid on
+     a probe batch dominated by the highest-degree vertices, parity
+     checked bitwise.
 """
 
 import jax
 import numpy as np
 
-from repro.core import Schema, create_index, joins
+from repro.core import Schema, joins
+from repro.frame import IndexedFrame
 from benchmarks.common import Report, edge_table, powerlaw_keys, timeit
 
 V_SCH = Schema.of("vid", vid="int64", age="int32", f0="float32",
                   f1="float32", f2="float32", f3="float32")
 E_SCH = Schema.of("src", src="int64", dst="int64", weight="float32")
+
+
+def _celebrity_fanin(rep, rng, edges, quick):
+    """SQ8: the skew cell — edges land on 4 shards with the hot-key
+    tracker counting ingest; the probe batch is drawn from the SAME
+    power law as the graph (celebrity-heavy), so routing funnels most
+    lanes to one owner while the hybrid answers them from the mirror."""
+    n_q = 2_048 if quick else 8_192
+    base = {k: v[:4] for k, v in edges.items()}
+    rest = {k: v[4:] for k, v in edges.items()}
+    ef = IndexedFrame.from_columns(base, E_SCH, num_shards=4,
+                                   rows_per_batch=2048, track_hot=64,
+                                   reserve=len(edges["src"]) + 4096)
+    ef = ef.with_replica(capacity=64, max_matches=16)
+    ef = ef.append(rest)                      # tracker counts, mirror fresh
+    probe = powerlaw_keys(rng, n_q, int(edges["src"].max()) + 1)
+
+    jh = jax.jit(lambda f, q: f.lookup(q, max_matches=16, op="hybrid"))
+    jr = jax.jit(lambda f, q: f.lookup(q, max_matches=16, op="routed"))
+    th = timeit(jh, ef, probe, reps=5)["median_s"]
+    tr = timeit(jr, ef, probe, reps=5)["median_s"]
+    ch, vh = jax.tree.map(np.asarray, jh(ef, probe))
+    cr, vr = jax.tree.map(np.asarray, jr(ef, probe))
+    parity = bool(np.array_equal(vh, vr)
+                  and all(np.array_equal(ch[k], cr[k]) for k in ch))
+    from repro import dist
+    rep.add("SQ8_celebrity_fanin", hybrid_ms=th * 1e3, routed_ms=tr * 1e3,
+            hot_fraction=dist.hot_fraction(ef.data, probe),
+            planner_rule=ef.plan_lookup(probe, max_matches=16,
+                                        op="hybrid").reason,
+            parity_ok=parity)
 
 
 def run(quick: bool = True):
@@ -33,57 +71,61 @@ def run(quick: bool = True):
     edges = edge_table(rng, n_e, n_v)
     edges = {"src": edges["src"], "dst": edges["dst"],
              "weight": edges["weight"]}
-    vt = create_index(verts, V_SCH, rows_per_batch=2048)
-    et = create_index(edges, E_SCH, rows_per_batch=2048)
+    vf = IndexedFrame.from_columns(verts, V_SCH, rows_per_batch=2048)
+    ef = IndexedFrame.from_columns(edges, E_SCH, rows_per_batch=2048)
     hot = powerlaw_keys(rng, 64, n_v)        # hot vertices (power law)
 
     qs = {
         "SQ1_person": (
-            jax.jit(lambda t, q: joins.indexed_lookup(t, q,
-                                                      max_matches=1)),
-            jax.jit(lambda t, q: joins.scan_lookup(t, q, max_matches=1)),
-            vt, hot[:8]),
+            jax.jit(lambda f, q: f.lookup(q, max_matches=1)),
+            jax.jit(lambda f, q: joins.scan_lookup(f.data, q,
+                                                   max_matches=1)),
+            vf, hot[:8]),
         "SQ3_friends": (
-            jax.jit(lambda t, q: joins.indexed_lookup(t, q,
-                                                      max_matches=64)),
-            jax.jit(lambda t, q: joins.scan_lookup(t, q, max_matches=64)),
-            et, hot[:8]),
+            jax.jit(lambda f, q: f.lookup(q, max_matches=64)),
+            jax.jit(lambda f, q: joins.scan_lookup(f.data, q,
+                                                   max_matches=64)),
+            ef, hot[:8]),
     }
-    for name, (idx_fn, van_fn, tab, q) in qs.items():
-        ti = timeit(idx_fn, tab, q, reps=3)["median_s"]
-        tv = timeit(van_fn, tab, q, reps=3)["median_s"]
+    for name, (idx_fn, van_fn, frame, q) in qs.items():
+        ti = timeit(idx_fn, frame, q, reps=3)["median_s"]
+        tv = timeit(van_fn, frame, q, reps=3)["median_s"]
         rep.add(name, indexed_ms=ti * 1e3, vanilla_ms=tv * 1e3,
-                speedup=tv / ti)
+                speedup=tv / ti,
+                planner_rule=frame.plan_lookup(q).reason)
 
     # SQ7: replies to person — indexed join vs per-query hash join
     probe7 = {"dst": edges["dst"][:512]}
-    j7i = jax.jit(lambda t, p: joins.indexed_join(t, p, "dst",
-                                                  max_matches=1))
+    j7i = jax.jit(lambda f, p: f.join(p, "dst", max_matches=1))
     j7v = jax.jit(lambda b, p: joins.hash_join(
         b, "vid", p, "dst", max_matches=1, num_buckets=16384))
-    ti = timeit(j7i, vt, probe7, reps=3)["median_s"]
+    ti = timeit(j7i, vf, probe7, reps=3)["median_s"]
     tv = timeit(j7v, verts, probe7, reps=3)["median_s"]
     rep.add("SQ7_replies", indexed_ms=ti * 1e3, vanilla_ms=tv * 1e3,
-            speedup=tv / ti)
+            speedup=tv / ti,
+            planner_rule=vf.plan_join(probe7, "dst").reason)
 
     # SQ4: friends-of -> posts join (two-stage indexed, one jitted graph)
-    def sq4(et_, vt_, q):
-        rids, _ = et_.lookup(q, 32)
-        friends = et_.gather_rows(jax.numpy.maximum(rids, 0),
-                                  names=("dst",))["dst"].reshape(-1)
-        return joins.indexed_lookup(vt_, friends, max_matches=1)
+    def sq4(ef_, vf_, q):
+        rids, _ = ef_.data.lookup(q, 32)
+        friends = ef_.data.gather_rows(jax.numpy.maximum(rids, 0),
+                                       names=("dst",))["dst"].reshape(-1)
+        return vf_.lookup(friends, max_matches=1)
     rep.add("SQ4_posts_of_friends",
-            indexed_ms=timeit(jax.jit(sq4), et, vt, hot[:8],
+            indexed_ms=timeit(jax.jit(sq4), ef, vf, hot[:8],
                               reps=3)["median_s"] * 1e3)
 
     # SQ5: full-profile projection — row layout pays vs columnar
-    vt_col = create_index(verts, V_SCH, rows_per_batch=2048,
-                          layout="columnar")
-    j_scan = jax.jit(lambda t: t.scan_column("f2"))
-    t_row = timeit(j_scan, vt, reps=3)["median_s"]
-    t_col = timeit(j_scan, vt_col, reps=3)["median_s"]
+    vf_col = IndexedFrame.from_columns(verts, V_SCH, rows_per_batch=2048,
+                                       layout="columnar")
+    j_scan = jax.jit(lambda f: f.data.scan_column("f2"))
+    t_row = timeit(j_scan, vf, reps=3)["median_s"]
+    t_col = timeit(j_scan, vf_col, reps=3)["median_s"]
     rep.add("SQ5_projection", row_ms=t_row * 1e3, col_ms=t_col * 1e3,
             row_tax=t_row / t_col)
+
+    # SQ8: the ISSUE-9 skew cell (distributed, hybrid vs routed)
+    _celebrity_fanin(rep, rng, edges, quick)
     return rep.to_dict()
 
 

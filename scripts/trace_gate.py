@@ -22,7 +22,13 @@ entry point:
 * the serving engine — the full pad-to-bucket ladder driven with
   varying request counts while appends interleave (ISSUE 8 /
   DESIGN.md §14): exactly one trace per (read site, bucket) rung on
-  warmup, ZERO retraces on a second full-ladder pass.
+  warmup, ZERO retraces on a second full-ladder pass;
+* skew resilience — a tracked + replicated frame under hot-set CHURN
+  (every append crowns a different celebrity key, each auto-refreshing
+  the mirror): the hybrid lookup/join sites and the jitted replica
+  refresh itself each compile exactly once per topology (ISSUE 9 /
+  DESIGN.md §15 — the hot set and the mirror's freshness are data
+  leaves, never treedef).
 
 Fast by construction: tiny tables, one compile per site, zero retraces —
 the whole gate is a few seconds of XLA work.
@@ -273,6 +279,53 @@ def gate_serving(rt, label):
           f"{eng.stats.flushes} flushes interleaved)")
 
 
+def gate_skew(rt, label):
+    """ISSUE 9: hot-set churn (appends crowning a ROTATING celebrity key,
+    each auto-refreshing the mirror) never retraces the hybrid read
+    sites, and the jitted replica refresh compiles once per topology."""
+    from repro.dist import dtable as _dd
+    rng = np.random.default_rng(6)
+    cols = {"k": rng.integers(0, 200, 800).astype(np.int64),
+            "v": rng.random(800).astype(np.float32)}
+    fr = IndexedFrame.from_columns(cols, SCH, num_shards=4,
+                                   rows_per_batch=64, reserve=4096, rt=rt,
+                                   track_hot=8)
+    fr = fr.with_replica(capacity=8, max_matches=4)
+    base_refresh = _dd.REPLICA_TRACES["refresh"]
+    q = jnp.asarray(rng.integers(0, 200, 32).astype(np.int64))
+    pc = {"pk": q, "tag": jnp.arange(32, dtype=jnp.int32)}
+    counts = {"lookup": 0, "join": 0}
+
+    @jax.jit
+    def f_lookup(frame, qq):
+        counts["lookup"] += 1
+        return frame.lookup(qq, max_matches=4, op="hybrid")[1]
+
+    @jax.jit
+    def f_join(frame, p):
+        counts["join"] += 1
+        return frame.join(p, "pk", max_matches=4, op="hybrid")[2]
+
+    jax.block_until_ready(f_lookup(fr, q))
+    jax.block_until_ready(f_join(fr, pc))
+    for i in range(APPENDS):
+        hot_key = np.int64(i % 5)   # a different celebrity every append
+        fr = fr.append({"k": np.full(12, hot_key),
+                        "v": rng.random(12).astype(np.float32)})
+        jax.block_until_ready(f_lookup(fr, q))
+        jax.block_until_ready(f_join(fr, pc))
+    for site, n in counts.items():
+        if n != 1:
+            fail(f"hybrid {site} ({label}) retraced: {n} traces across "
+                 f"{APPENDS} hot-churn appends (expected 1)")
+    refreshes = _dd.REPLICA_TRACES["refresh"] - base_refresh
+    if refreshes != 1:
+        fail(f"replica refresh ({label}) retraced: {refreshes} traces "
+             f"across {APPENDS} auto-refreshing appends (expected 1)")
+    print(f"  skew ({label}): hybrid sites + refresh compiled once "
+          f"across {APPENDS} hot-churn appends")
+
+
 def main():
     print(f"trace gate: {len(jax.devices())} device(s), "
           f"backend={jax.default_backend()}")
@@ -289,11 +342,13 @@ def main():
     gate_frame_distributed(mesh.vmap_runtime(), "vmap")
     gate_queue(mesh.vmap_runtime(), "vmap")
     gate_serving(mesh.vmap_runtime(), "vmap")
+    gate_skew(mesh.vmap_runtime(), "vmap")
     if len(jax.devices()) >= 4:
         gate_distributed(mesh.mesh_runtime(4), "shard_map")
         gate_frame_distributed(mesh.mesh_runtime(4), "shard_map")
         gate_queue(mesh.mesh_runtime(4), "shard_map")
         gate_serving(mesh.mesh_runtime(4), "shard_map")
+        gate_skew(mesh.mesh_runtime(4), "shard_map")
     else:
         print("  shard_map gate skipped (<4 devices; ci.sh's forced-8 "
               "pass covers it)")

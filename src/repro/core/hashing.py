@@ -51,6 +51,22 @@ def partition_hash(keys, num_shards: int):
     return (h % np.uint64(num_shards)).astype(jnp.int32)
 
 
+def sketch_hash(keys, row: int, width: int):
+    """Count-min-sketch column in [0, width) for plane ``row``.
+
+    Per-row salts keep the planes independent of each other AND of the
+    partition/bucket hashes (a hot key must not systematically collide
+    with the same victims in every plane, and sketch occupancy must not
+    correlate with shard ownership).  ``width`` must be a power of two.
+    """
+    assert width & (width - 1) == 0, "sketch width must be 2**k"
+    salt = np.uint64((int(_GOLDEN) * (2 * int(row) + 3))
+                     & 0xFFFFFFFFFFFFFFFF)
+    h = _splitmix64(jnp.asarray(keys).astype(jnp.uint64) ^ salt)
+    shift = np.uint64(64 - int(width).bit_length() + 1)
+    return ((h * _GOLDEN) >> shift).astype(jnp.int32) & jnp.int32(width - 1)
+
+
 def partition_hash_host(keys, num_shards: int) -> np.ndarray:
     """Pure-numpy ``partition_hash`` — bit-identical to the device version.
 

@@ -28,11 +28,23 @@ rules that used to live as caller-facing helpers (``dist.choose_lookup`` /
       query batch to every shard; exchange latency dominates at small Q)
   L3  dist lookup, Q >= routed_threshold  -> RoutedLookup (shuffle-route each
       query to its owner: ~2Q probe lanes vs broadcast's s*Q)
+  L4  as L3 but a hot-key mirror covers max_matches -> HybridLookup (hot
+      queries answer locally from the replica arena, only the cold tail
+      routes — skew no longer concentrates exchange lanes on one owner,
+      DESIGN.md §15)
   J1  join build side on a single partition -> IndexedJoin (local)
   J2  dist join, probe_rows <= bcast_threshold -> BroadcastJoin (replicate
       the probe side — cheaper than shuffling while it is small)
   J3  dist join, probe_rows >  bcast_threshold -> ShuffleJoin (route probe
       rows to their owning shard, paper §III-D)
+  J4  as J3 but a hot-key mirror covers max_matches -> HybridJoin (hot
+      probe keys join against the mirror locally, cold tail shuffles)
+
+Reason strings are UNIFORM across every L/J rule: ``"<rule>: <detail>
+[est_fanout=<per-query shard fan-out>]"`` — bcast flavors report ``s``x
+(every shard touches the batch), routed/shuffle ``1``x (+2 all_to_alls),
+hybrid ``hot:0x cold:1x``; the facade appends ``pending_ring_rows=N`` so
+``explain()`` reads the same for every flavor.
 
 ``Relation`` leaves accept an ``IndexedTable`` OR a ``DistributedTable``
 (duck-typed on ``num_shards``), so one logical tree plans and executes
@@ -180,41 +192,70 @@ class Planner:
         self.rt = rt
 
     # -- physical-operator selection (the dist.choose_* rules, moved) --------
-    def lookup_flavor(self, num_shards: int,
-                      num_queries: int) -> tuple[str, str]:
-        """(op, reason) for a point lookup: bcast vs routed (L2/L3)."""
+    def _hybrid_ok(self, table) -> bool:
+        """True when a hot-key mirror is attached that fully answers this
+        planner's ``max_matches`` (the L4/J4 precondition — a mirror
+        storing fewer matches per key cannot substitute for routing)."""
+        rep = getattr(table, "replica", None)
+        return rep is not None and self.max_matches <= rep.max_matches
+
+    def lookup_flavor(self, num_shards: int, num_queries: int, *,
+                      hybrid_ok: bool = False) -> tuple[str, str]:
+        """(op, reason) for a point lookup: bcast vs routed vs hybrid
+        (L2/L3/L4)."""
         if num_shards > 1 and num_queries >= self.routed_threshold:
+            if hybrid_ok:
+                return ("hybrid",
+                        f"L4: Q={num_queries} >= routed_threshold="
+                        f"{self.routed_threshold} and a hot-key mirror is "
+                        f"attached -> answer hot queries from the replica "
+                        f"arena, route only the cold tail "
+                        f"[est_fanout=hot:0x cold:1x]")
             return ("routed",
                     f"L3: Q={num_queries} >= routed_threshold="
                     f"{self.routed_threshold} -> route each query to its "
                     f"owner (~2Q probe lanes vs broadcast's "
-                    f"{num_shards}xQ)")
+                    f"{num_shards}xQ) [est_fanout=1x]")
         return ("bcast",
                 f"L2: Q={num_queries} < routed_threshold="
                 f"{self.routed_threshold} -> broadcast the batch to all "
-                f"{num_shards} shards (exchange latency dominates)")
+                f"{num_shards} shards (exchange latency dominates) "
+                f"[est_fanout={num_shards}x]")
 
-    def join_flavor(self, probe_rows: int) -> tuple[str, str]:
-        """(op, reason) for an equi-join probe side: bcast vs shuffle
-        (J2/J3, paper §III-D)."""
+    def join_flavor(self, probe_rows: int, *, num_shards: int | None = None,
+                    hybrid_ok: bool = False) -> tuple[str, str]:
+        """(op, reason) for an equi-join probe side: bcast vs shuffle vs
+        hybrid (J2/J3/J4, paper §III-D)."""
+        fan = "s" if num_shards is None else str(int(num_shards))
         if probe_rows <= self.bcast_threshold:
             return ("bcast",
                     f"J2: probe_rows={probe_rows} <= bcast_threshold="
-                    f"{self.bcast_threshold} -> replicate the probe side")
+                    f"{self.bcast_threshold} -> replicate the probe side "
+                    f"[est_fanout={fan}x]")
+        if hybrid_ok:
+            return ("hybrid",
+                    f"J4: probe_rows={probe_rows} > bcast_threshold="
+                    f"{self.bcast_threshold} and a hot-key mirror is "
+                    f"attached -> join hot probe keys against the mirror "
+                    f"locally, shuffle only the cold tail "
+                    f"[est_fanout=hot:0x cold:1x]")
         return ("shuffle",
                 f"J3: probe_rows={probe_rows} > bcast_threshold="
                 f"{self.bcast_threshold} -> shuffle probe rows to their "
-                f"owning shard")
+                f"owning shard [est_fanout=1x]")
 
     def physical_lookup(self, table, num_queries: int) -> Physical:
         """Physical operator for a point-lookup over ``table`` (either
         backend) at the given query-batch size."""
         if not _is_dist(table):
             return Physical("IndexedLookup",
-                            "L1: single partition -> local fused probe",
+                            "L1: single partition -> local fused probe "
+                            "[est_fanout=1x]",
                             table)
-        op, why = self.lookup_flavor(int(table.num_shards), num_queries)
-        kind = "RoutedLookup" if op == "routed" else "BroadcastLookup"
+        op, why = self.lookup_flavor(int(table.num_shards), num_queries,
+                                     hybrid_ok=self._hybrid_ok(table))
+        kind = {"routed": "RoutedLookup", "hybrid": "HybridLookup",
+                "bcast": "BroadcastLookup"}[op]
         return Physical(kind, why, table)
 
     def physical_join(self, table, probe_rows: int) -> Physical:
@@ -222,10 +263,14 @@ class Planner:
         build side and a ``probe_rows``-row probe side."""
         if not _is_dist(table):
             return Physical("IndexedJoin",
-                            "J1: single partition -> local indexed join",
+                            "J1: single partition -> local indexed join "
+                            "[est_fanout=1x]",
                             table)
-        op, why = self.join_flavor(probe_rows)
-        kind = "ShuffleJoin" if op == "shuffle" else "BroadcastJoin"
+        op, why = self.join_flavor(probe_rows,
+                                   num_shards=int(table.num_shards),
+                                   hybrid_ok=self._hybrid_ok(table))
+        kind = {"shuffle": "ShuffleJoin", "hybrid": "HybridJoin",
+                "bcast": "BroadcastJoin"}[op]
         return Physical(kind, why, table)
 
     # -- rewrite --------------------------------------------------------------
@@ -283,7 +328,8 @@ class Planner:
         n = p.node
         if p.kind in ("IndexedScan", "Scan"):
             return n  # relations are consumed by parents
-        if p.kind in ("IndexedLookup", "BroadcastLookup", "RoutedLookup"):
+        if p.kind in ("IndexedLookup", "BroadcastLookup", "RoutedLookup",
+                      "HybridLookup"):
             rel = n.child
             key = jnp.asarray([n.pred.right.value], jnp.int64)
             if p.kind == "IndexedLookup":
@@ -296,7 +342,10 @@ class Planner:
                         rel.table, key, max_matches=self.max_matches,
                         rt=self.rt)
                 else:
-                    cols, valid = _dd.lookup_routed_flat(
+                    flat = (_dd.lookup_hybrid_flat
+                            if p.kind == "HybridLookup"
+                            else _dd.lookup_routed_flat)
+                    cols, valid = flat(
                         rel.table, key, max_matches=self.max_matches,
                         rt=self.rt)
             return {k: v[0] for k, v in cols.items()}, valid[0]
@@ -305,7 +354,8 @@ class Planner:
             cols, valid = _materialize(rel, rt=self.rt)
             pred_v = _eval_pred(n.pred, cols)
             return cols, valid & pred_v
-        if p.kind in ("IndexedJoin", "BroadcastJoin", "ShuffleJoin"):
+        if p.kind in ("IndexedJoin", "BroadcastJoin", "ShuffleJoin",
+                      "HybridJoin"):
             build_rel = p.children[0].node
             probe_rel = p.children[1].node
             probe_cols, probe_valid = _materialize(probe_rel, rt=self.rt)
@@ -315,9 +365,9 @@ class Planner:
                     max_matches=self.max_matches)
             else:
                 from repro.dist import dtable as _dd
-                join_fn = (_dd.indexed_join_bcast
-                           if p.kind == "BroadcastJoin"
-                           else _dd.indexed_join_routed)
+                join_fn = {"BroadcastJoin": _dd.indexed_join_bcast,
+                           "ShuffleJoin": _dd.indexed_join_routed,
+                           "HybridJoin": _dd.indexed_join_hybrid}[p.kind]
                 bc, pc, valid = join_fn(build_rel.table, probe_cols, n.on,
                                         max_matches=self.max_matches,
                                         rt=self.rt)

@@ -124,7 +124,7 @@ class Segment:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["segments", "snapshot", "version"],
+         data_fields=["segments", "snapshot", "version", "hot"],
          meta_fields=["schema", "rows_per_batch", "layout", "slots"])
 @dataclasses.dataclass(frozen=True)
 class IndexedTable:
@@ -148,6 +148,7 @@ class IndexedTable:
     rows_per_batch: int
     layout: str           # "row" | "columnar"
     slots: int
+    hot: object = None    # HotTracker | None — skew detection (§15)
 
     # -- shape facts ----------------------------------------------------------
     @property
@@ -468,7 +469,9 @@ def _build_segment_retrying(cols, valid, parent_heads, schema, *, row_base,
 
 def create_index(cols: dict, schema: Schema, *, rows_per_batch: int = 4096,
                  layout: str = "row", slots: int = hix.DEFAULT_SLOTS,
-                 valid=None, reserve: int | None = None) -> IndexedTable:
+                 valid=None, reserve: int | None = None,
+                 track_hot: int | None = None,
+                 hot_mode: str = "topk") -> IndexedTable:
     """Paper Listing 1 ``createIndex``: build the index over a dataframe.
 
     In the distributed layer this is preceded by the hash-partition shuffle;
@@ -494,9 +497,14 @@ def create_index(cols: dict, schema: Schema, *, rows_per_batch: int = 4096,
                                   rows_per_batch=rows_per_batch,
                                   layout=layout, slots=slots)
     snap = snapshot_from_segments((seg,), layout, schema=schema)
+    # track_hot attaches an EMPTY tracker (see with_hot: the created rows
+    # are not back-counted — replay-deterministic by construction)
+    hot = (None if track_hot is None
+           else empty_tracker(track_hot, mode=hot_mode))
     return IndexedTable(segments=(seg,), snapshot=snap, schema=schema,
                         rows_per_batch=rows_per_batch, layout=layout,
-                        version=jnp.asarray(0, jnp.int32), slots=slots)
+                        version=jnp.asarray(0, jnp.int32), slots=slots,
+                        hot=hot)
 
 
 # ---------------------------------------------------------------------------
@@ -521,6 +529,153 @@ def _delta_order(keys, valid):
     return order, same, is_head
 
 
+# ---------------------------------------------------------------------------
+# Hot-key tracker (skew detection, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+DEFAULT_HOT_TOP_K = 128
+SKETCH_DEPTH = 4
+SKETCH_WIDTH = 1024
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["keys", "counts", "sketch"], meta_fields=["mode"])
+@dataclasses.dataclass(frozen=True)
+class HotTracker:
+    """Exact top-k hot-key counts maintained at ingest (DESIGN.md §15).
+
+    Every mutable field is a DATA leaf (the §4 arena trick): the hot set
+    changes across appends with ZERO pytree shape change, so the hybrid
+    dispatch consuming it never retraces.  Entries live in canonical
+    (count desc, key asc) order with ``EMPTY_KEY`` marking vacant slots,
+    which makes the ingest-time fold idempotent: merging an all-invalid
+    delta (a held ring flush) reproduces the tracker bit-for-bit.
+
+    ``mode="topk"`` keeps Misra-Gries-style counts — exact while the
+    distinct-key population fits ``top_k``, a lower bound after
+    evictions (an evicted key re-enters at its fresh delta count).
+    ``mode="sketch"`` adds count-min planes for unbounded streams:
+    counts become CMS upper-bound estimates over the whole history, the
+    candidate set is still (tracker ∪ delta heads).
+    """
+
+    keys: jax.Array    # [T] int64 — EMPTY_KEY = vacant slot
+    counts: jax.Array  # [T] int64 — lower bounds (topk) / CMS estimates
+    sketch: object     # [D, W] int64 count-min planes | None (topk mode)
+    mode: str          # "topk" | "sketch"
+
+
+def empty_tracker(top_k: int = DEFAULT_HOT_TOP_K, *, mode: str = "topk",
+                  sketch_depth: int = SKETCH_DEPTH,
+                  sketch_width: int = SKETCH_WIDTH,
+                  num_shards: int | None = None) -> HotTracker:
+    """A fresh all-vacant tracker (``num_shards`` stacks the dist leading
+    axis — each shard counts its OWN ingest; routing partitions by key,
+    so per-shard hot sets are disjoint and a global top-H is a flat merge
+    of the per-shard arrays)."""
+    if mode not in ("topk", "sketch"):
+        raise ValueError(f"tracker mode must be 'topk' or 'sketch', "
+                         f"got {mode!r}")
+    lead = () if num_shards is None else (num_shards,)
+    sketch = (jnp.zeros(lead + (sketch_depth, sketch_width), jnp.int64)
+              if mode == "sketch" else None)
+    return HotTracker(keys=jnp.full(lead + (top_k,), EMPTY_KEY, jnp.int64),
+                      counts=jnp.zeros(lead + (top_k,), jnp.int64),
+                      sketch=sketch, mode=mode)
+
+
+def with_hot(table: IndexedTable, top_k: int = DEFAULT_HOT_TOP_K, *,
+             mode: str = "topk", sketch_depth: int = SKETCH_DEPTH,
+             sketch_width: int = SKETCH_WIDTH) -> IndexedTable:
+    """Attach an empty tracker — ONE treedef change (like adding a queue),
+    done before entering jitted loops.  Rows already in the table are NOT
+    back-counted: the hot set accumulates from subsequent ingest only, so
+    lineage replay (which re-attaches an empty tracker before replaying
+    the append log) reproduces the live tracker bit-identically."""
+    return dataclasses.replace(table, hot=empty_tracker(
+        top_k, mode=mode, sketch_depth=sketch_depth,
+        sketch_width=sketch_width))
+
+
+def _seg_scan(op, vals, newrun):
+    """Segmented inclusive scan: ``op`` restarts at every ``newrun`` lane,
+    so a run's LAST lane holds the run's full reduction."""
+    def comb(a, b):
+        af, av = a
+        bf, bv = b
+        return af | bf, jnp.where(bf, bv, op(av, bv))
+    _, out = jax.lax.associative_scan(comb, (newrun, vals))
+    return out
+
+
+def _tracker_top(cand_k, cand_c, top_k: int, *, combine: str):
+    """Combine equal candidate keys (``sum`` of exact per-delta counts;
+    ``max`` when candidates are whole-history re-estimates), then keep the
+    ``top_k`` entries in canonical (count desc, key asc) order.  Vacant
+    (EMPTY_KEY / zero-count) lanes sort last, so the result is unique,
+    permutation-invariant in the candidates, and idempotent on an
+    all-vacant candidate set — a held flush cannot perturb the tracker."""
+    n = cand_k.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    o = jnp.lexsort((idx, cand_k))
+    k_s = cand_k[o]
+    c_s = cand_c[o].astype(jnp.int64)
+    newrun = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
+    is_end = jnp.concatenate([k_s[1:] != k_s[:-1], jnp.ones((1,), bool)])
+    op = jnp.add if combine == "sum" else jnp.maximum
+    total = _seg_scan(op, c_s, newrun)
+    live = is_end & (k_s != EMPTY_KEY) & (total > 0)
+    rk = jnp.where(live, k_s, EMPTY_KEY)
+    rc = jnp.where(live, total, jnp.int64(0))
+    o2 = jnp.lexsort((rk, -rc))
+    return rk[o2][:top_k], rc[o2][:top_k]
+
+
+def _tracker_fold(hkeys, hcounts, hsketch, hot_k, hot_c):
+    """Fold per-key delta head counts into the tracker arrays.
+
+    ``hot_k``/``hot_c`` carry one lane per distinct delta key (EMPTY / 0
+    elsewhere).  Returns ``(keys, counts, sketch)``; pure sorts and
+    scatter-adds — safe inside the fused ingest and under vmap/shard_map.
+    """
+    top_k = hkeys.shape[0]
+    if hsketch is not None:
+        depth, width = hsketch.shape
+        sk = hsketch
+        for r in range(depth):
+            slot = jnp.where(hot_k != EMPTY_KEY,
+                             hashing.sketch_hash(hot_k, r, width),
+                             jnp.int32(width))
+            sk = sk.at[r, slot].add(hot_c, mode="drop")
+        cand = jnp.concatenate([hkeys, hot_k])
+        est = jnp.full(cand.shape, jnp.iinfo(jnp.int64).max, jnp.int64)
+        for r in range(depth):
+            est = jnp.minimum(est, sk[r, hashing.sketch_hash(cand, r,
+                                                             width)])
+        est = jnp.where(cand == EMPTY_KEY, jnp.int64(0), est)
+        nk, nc = _tracker_top(cand, est, top_k, combine="max")
+        return nk, nc, sk
+    nk, nc = _tracker_top(jnp.concatenate([hkeys, hot_k]),
+                          jnp.concatenate([hcounts, hot_c]),
+                          top_k, combine="sum")
+    return nk, nc, None
+
+
+@jax.jit
+def _tracker_ingest(hot: HotTracker, keys, valid) -> HotTracker:
+    """Standalone delta fold (the promote path): same lexsort scaffold and
+    merge as the in-ingest update, so both paths land bit-identical
+    trackers for the same delta."""
+    order, same, is_head = _delta_order(keys, valid)
+    k_s, v_s = keys[order], valid[order]
+    cnt = _seg_scan(jnp.add, v_s.astype(jnp.int64), ~same)
+    hot_k = jnp.where(is_head, k_s, EMPTY_KEY)
+    hot_c = jnp.where(is_head, cnt, jnp.int64(0))
+    nk, nc, sk = _tracker_fold(hot.keys, hot.counts, hot.sketch,
+                               hot_k, hot_c)
+    return dataclasses.replace(hot, keys=nk, counts=nc, sketch=sk)
+
+
 def _ingest_arrays(state, parent_blocks, cols_p, valid_p, *, schema, layout,
                    rb, bucket_counts, slots):
     """One fused on-device pass over the tail's DEDUPLICATED mutable state.
@@ -542,6 +697,8 @@ def _ingest_arrays(state, parent_blocks, cols_p, valid_p, *, schema, layout,
                  tdata   tail row storage,
                  sdata   flat data | None (None also when single-segment:
                          derived from tdata by reshape at reassembly),
+                 hkeys/hcounts/hsketch  hot-key tracker leaves | None
+                         (DESIGN.md §15 — folded in this same pass),
                  fill / version scalars)
     Returns (new state, overflow).
     """
@@ -625,6 +782,18 @@ def _ingest_arrays(state, parent_blocks, cols_p, valid_p, *, schema, layout,
                    .at[flat_slot].set(head_ptr, mode="drop")
                    .reshape(nb_t, slots))
 
+    # -- hot-key tracker (skew detection, DESIGN.md §15) --------------------
+    # Rides the same lexsort scaffold the chain writer just built — zero
+    # extra sorts over the delta, zero host syncs.  ``hk`` already holds
+    # each distinct key at its head lane (EMPTY elsewhere); the per-key
+    # count is the valid-run total at that lane.  A fully-gated delta (a
+    # held flush) folds all-vacant candidates: bit-identical no-op.
+    if state["hkeys"] is not None:
+        cnt = _seg_scan(jnp.add, v_s.astype(jnp.int64), ~same)
+        hot_c = jnp.where(is_head, cnt, jnp.int64(0))
+        out["hkeys"], out["hcounts"], out["hsketch"] = _tracker_fold(
+            state["hkeys"], state["hcounts"], state["hsketch"], hk, hot_c)
+
     out["fill"] = fill_g + nv
     out["version"] = state["version"] + 1
     return out, overflow
@@ -635,6 +804,7 @@ def _dedup_state(table: IndexedTable) -> dict:
     tail = table.segments[-1]
     snap = table.snapshot
     single = len(table.segments) == 1
+    hot = table.hot
     return dict(bk=tail.index.bucket_keys,
                 bhi=snap.blocks[-1].key_hi,
                 blo=snap.blocks[-1].key_lo,
@@ -644,6 +814,9 @@ def _dedup_state(table: IndexedTable) -> dict:
                 tvalid=tail.valid,
                 tdata=tail.data,
                 sdata=None if single else snap.data,
+                hkeys=None if hot is None else hot.keys,
+                hcounts=None if hot is None else hot.counts,
+                hsketch=None if hot is None else hot.sketch,
                 fill=snap.fill,
                 version=table.version)
 
@@ -683,9 +856,14 @@ def _reassemble(table: IndexedTable, out: dict) -> IndexedTable:
     snap_new = dataclasses.replace(
         snap, blocks=snap.blocks[:-1] + (blk_new,), prev=out["sprev"],
         data=sdata, fill=out["fill"])
+    hot = table.hot
+    if hot is not None:
+        hot = dataclasses.replace(hot, keys=out["hkeys"],
+                                  counts=out["hcounts"],
+                                  sketch=out["hsketch"])
     return dataclasses.replace(
         table, segments=table.segments[:-1] + (tail_new,),
-        snapshot=snap_new, version=out["version"])
+        snapshot=snap_new, version=out["version"], hot=hot)
 
 
 def _arena_ingest_core(table: IndexedTable, cols_p: dict, valid_p):
@@ -772,8 +950,14 @@ def _append_promote(table: IndexedTable, cols_p: dict, valid_p, nv: int
                                   rows_per_batch=rpb, layout=table.layout,
                                   slots=table.slots)
     snap = extend_snapshot(table.snapshot, seg, schema=table.schema)
+    hot = table.hot
+    if hot is not None:
+        # the promote path bypasses _ingest_arrays; fold the delta here
+        # with the same merge so both write paths count identically
+        hot = _tracker_ingest(hot, keys, valid_r)
     return dataclasses.replace(table, segments=table.segments + (seg,),
-                               snapshot=snap, version=table.version + 1)
+                               snapshot=snap, version=table.version + 1,
+                               hot=hot)
 
 
 def append(table: IndexedTable, cols: dict, valid=None, *,
@@ -1228,5 +1412,8 @@ def compact(table: IndexedTable, *, reserve: int | None = None,
                          layout=table.layout, slots=table.slots,
                          reserve=reserve)
     version = table.version + 1 if _bump_version else table.version
+    # compaction rewrites storage, not history: the tracker's ingest
+    # counts carry through unchanged (DESIGN.md §15)
     return dataclasses.replace(fresh, version=jnp.asarray(version,
-                                                          jnp.int32))
+                                                          jnp.int32),
+                               hot=table.hot)

@@ -28,25 +28,33 @@ The two backends are bit-identical (tests/test_mesh_parity.py).
 """
 
 from repro.dist import checkpoint, mesh, runtime, shuffle
-from repro.dist.dtable import (DistributedTable, append_distributed,
+from repro.dist.dtable import (DistributedTable, HotReplica,
+                               append_distributed, attach_replica,
                                choose_join, choose_lookup, collect_cols,
                                compact_distributed, create_distributed,
                                enqueue_distributed, flush_queue_distributed,
-                               indexed_join_bcast, indexed_join_routed,
-                               indexed_join_shuffle, lookup, lookup_routed,
-                               lookup_routed_flat, lookup_routed_report)
+                               hot_fraction, indexed_join_bcast,
+                               indexed_join_hybrid, indexed_join_routed,
+                               indexed_join_shuffle, lookup, lookup_hybrid_flat,
+                               lookup_hybrid_report, lookup_routed,
+                               lookup_routed_flat, lookup_routed_report,
+                               refresh_replica, reseed_tracker)
 from repro.dist import resilience
 from repro.dist.mesh import Runtime, mesh_runtime, vmap_runtime
 from repro.dist.resilience import (Fault, FaultInjector, RecoveryManager,
                                    RecoveryPolicy, supervise)
 
 __all__ = [
-    "DistributedTable", "Fault", "FaultInjector", "RecoveryManager",
-    "RecoveryPolicy", "Runtime", "append_distributed", "checkpoint",
+    "DistributedTable", "Fault", "FaultInjector", "HotReplica",
+    "RecoveryManager", "RecoveryPolicy", "Runtime", "append_distributed",
+    "attach_replica", "checkpoint",
     "choose_join", "choose_lookup", "collect_cols", "compact_distributed",
     "create_distributed", "enqueue_distributed", "flush_queue_distributed",
-    "indexed_join_bcast", "indexed_join_routed",
-    "indexed_join_shuffle", "lookup", "lookup_routed", "lookup_routed_flat",
-    "lookup_routed_report", "mesh", "mesh_runtime", "resilience", "runtime",
-    "shuffle", "supervise", "vmap_runtime",
+    "hot_fraction", "indexed_join_bcast", "indexed_join_hybrid",
+    "indexed_join_routed",
+    "indexed_join_shuffle", "lookup", "lookup_hybrid_flat",
+    "lookup_hybrid_report", "lookup_routed", "lookup_routed_flat",
+    "lookup_routed_report", "mesh", "mesh_runtime", "refresh_replica",
+    "reseed_tracker", "resilience", "runtime", "shuffle", "supervise",
+    "vmap_runtime",
 ]

@@ -56,7 +56,8 @@ from repro.core.table import (IndexedTable, capacity_class,
 from repro.dist import mesh, shuffle
 
 
-@partial(jax.tree_util.register_dataclass, data_fields=["table", "version"],
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["table", "version", "replica"],
          meta_fields=["num_shards"])
 @dataclasses.dataclass(frozen=True)
 class DistributedTable:
@@ -65,11 +66,23 @@ class DistributedTable:
     ``version`` is a scalar int32 *data leaf* (DESIGN.md §4): arena
     appends bump it on-device, so successive dtable versions stay
     structurally equal and jitted distributed queries keep their compile
-    cache across appends."""
+    cache across appends.
+
+    ``replica`` is the optional hot-key mirror (``HotReplica``,
+    DESIGN.md §15): hot rows replicated to every shard so skewed point
+    queries answer locally instead of concentrating the routed exchange
+    on one owner.  Its leaves carry NO shard axis — the mirror is
+    identical everywhere by construction, and the hybrid dispatch reads
+    it outside the axis-mapped region.  Appends carry it through
+    unchanged; its stored fetch version then trails ``version``, which
+    the hybrid dispatch treats as stale (pure routing) until
+    ``refresh_replica`` re-mirrors — MVCC consistency by version gating,
+    never by mutation."""
 
     table: IndexedTable   # every array leaf is [num_shards, ...]
     version: jax.Array    # global MVCC version (paper §III-D), scalar int32
     num_shards: int
+    replica: object = None  # HotReplica | None — hot-key mirror (§15)
 
     @property
     def schema(self) -> Schema:
@@ -158,6 +171,7 @@ def create_distributed(cols: dict, schema: Schema, num_shards: int, *,
                        rows_per_batch: int = 4096, layout: str = "row",
                        slots: int = hix.DEFAULT_SLOTS, valid=None,
                        reserve: int | None = None,
+                       track_hot: int | None = None, hot_mode: str = "topk",
                        rt: mesh.Runtime | None = None) -> DistributedTable:
     """Paper Listing 1 ``createIndex`` at cluster scope: hash-partition the
     dataframe, then build every shard's index in one axis-mapped pass
@@ -189,10 +203,15 @@ def create_distributed(cols: dict, schema: Schema, num_shards: int, *,
                                  layout=layout, slots=slots, rt=rt)
     snap = mesh.axis_map(lambda s: snap_mod.snapshot_from_segments(
         (s,), layout, schema=schema, with_data=True), rt)(seg)
+    # track_hot attaches an EMPTY per-shard tracker (created rows are not
+    # back-counted — see table.with_hot: replay-deterministic)
+    hot = (None if track_hot is None
+           else table_mod.empty_tracker(track_hot, mode=hot_mode,
+                                        num_shards=num_shards))
     table = IndexedTable(segments=(seg,), snapshot=snap, schema=schema,
                          rows_per_batch=rows_per_batch, layout=layout,
                          version=jnp.zeros((num_shards,), jnp.int32),
-                         slots=slots)
+                         slots=slots, hot=hot)
     return DistributedTable(table=table, num_shards=num_shards,
                             version=jnp.asarray(0, jnp.int32))
 
@@ -266,12 +285,14 @@ def append_distributed(dt: DistributedTable, cols: dict, valid=None,
         if int(jax.device_get(jnp.max(ovf))) == 0:
             child, _ = _dist_arena_ingest(dt, sc, sv, rt, True)
             return DistributedTable(table=child, num_shards=dt.num_shards,
-                                    version=dt.version + 1)
+                                    version=dt.version + 1,
+                                    replica=dt.replica)
     elif fits:
         child, ovf = _dist_arena_ingest(dt, sc, sv, rt, False)
         if int(jax.device_get(jnp.max(ovf))) == 0:
             return DistributedTable(table=child, num_shards=dt.num_shards,
-                                    version=dt.version + 1)
+                                    version=dt.version + 1,
+                                    replica=dt.replica)
 
     # promotion: seal every shard's tail, open a next-class arena on all
     # shards together (uniform shapes across the stacked pytree)
@@ -295,7 +316,7 @@ def append_distributed(dt: DistributedTable, cols: dict, valid=None,
                                 snapshot=snap,
                                 version=dt.table.version + 1)
     child = DistributedTable(table=table, num_shards=dt.num_shards,
-                             version=dt.version + 1)
+                             version=dt.version + 1, replica=dt.replica)
     threshold = (table_mod.DEFAULT_COMPACT_THRESHOLD
                  if compact_threshold is None else compact_threshold)
     if child.table.num_segments > threshold:
@@ -416,12 +437,12 @@ def flush_queue_distributed(dt: DistributedTable, queue, *,
     child_t = table_mod._reassemble(t, out)
     if bool(np.asarray(jax.device_get(ok)).reshape(-1)[0]):  # THE one sync
         child = DistributedTable(table=child_t, num_shards=dt.num_shards,
-                                 version=dt.version + 1)
+                                 version=dt.version + 1, replica=dt.replica)
         return child, table_mod._set_queue_mirror(ring, 0, 0), False
     # held: child_t is content-identical to the parent; under donation
     # the parent buffers are consumed, so promote off the reassembled one
     held = DistributedTable(table=child_t, num_shards=dt.num_shards,
-                            version=dt.version)
+                            version=dt.version, replica=dt.replica)
     cols, valid = drain_queue_distributed(ring)
     child = append_distributed(held, cols, valid, rt=rt, donate=donate,
                                compact_threshold=compact_threshold)
@@ -464,11 +485,13 @@ def compact_distributed(dt: DistributedTable, *,
         rt=rt_out if rt_out is not None else rt)
     old_tv = int(np.asarray(dt.table.version).ravel()[0])
     bump = 1 if _bump_version else 0
+    # compaction rewrites storage, not history: tracker counts and the
+    # (version-gated) mirror carry through unchanged (DESIGN.md §15)
     table = dataclasses.replace(
         fresh.table, version=jnp.full((dt.num_shards,), old_tv + bump,
-                                      jnp.int32))
+                                      jnp.int32), hot=dt.table.hot)
     return DistributedTable(table=table, num_shards=dt.num_shards,
-                            version=dt.version + bump)
+                            version=dt.version + bump, replica=dt.replica)
 
 
 # ---------------------------------------------------------------------------
@@ -642,6 +665,259 @@ def lookup_routed_flat(dt: DistributedTable, keys, *, max_matches: int,
         dt, keys, max_matches=max_matches, capacity=None, names=names,
         rt=rt)
     return cols, valid
+
+
+# ---------------------------------------------------------------------------
+# Hot-key replication + hybrid dispatch (skew resilience, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+DEFAULT_REPLICA_SLOTS = 128
+DEFAULT_REPLICA_MATCHES = 8
+
+# Trace counter for the CI gate (scripts/trace_gate.py gate_skew): the
+# refresh site must trace ONCE per (runtime, table structure) — hot-set
+# churn across appends reuses the cached entry.
+REPLICA_TRACES = {"refresh": 0}
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["keys", "cols", "valid", "version"],
+         meta_fields=["max_matches"])
+@dataclasses.dataclass(frozen=True)
+class HotReplica:
+    """Fixed-capacity mirror of the hottest keys' rows (DESIGN.md §15).
+
+    Conceptually each shard holds an identical copy beside its main
+    arena; since the copies are identical by construction, the pytree
+    stores ONE un-stacked instance (no ``[num_shards]`` axis) that the
+    hybrid dispatch reads outside the axis-mapped region — under
+    shard_map that is a replicated operand, exactly the broadcast the
+    design calls for.  All mutable fields are data leaves (§4), so the
+    hot set can churn across refreshes with zero retraces.
+
+    MVCC rule: ``version`` records the dtable version the rows were
+    fetched at.  The mirror is consulted ONLY while it equals the live
+    version — any append/flush/compact bump makes it stale and the
+    hybrid degrades to pure routing (bit-identical answers, no staleness
+    window) until ``refresh_replica`` re-mirrors.  Rows are fetched
+    through ``lookup_routed_flat`` (word-packed ints), so mirrored
+    answers are bit-exact under both backends — the broadcast ``lookup``
+    path's float ``-0.0`` caveat never applies.
+
+    A query with ``max_matches`` ≤ ``max_matches`` stored here is fully
+    answerable from the mirror: matches are newest-first, so the stored
+    prefix IS the routed answer prefix, whatever the chain length.
+    """
+
+    keys: jax.Array     # [H] int64 hot keys — EMPTY_KEY = vacant slot
+    cols: dict          # {name: [H, M] typed} — full schema, newest-first
+    valid: jax.Array    # [H, M] bool match mask
+    version: jax.Array  # scalar int32 — dtable version at fetch time
+    max_matches: int    # M — the deepest chain prefix the mirror answers
+
+
+def attach_replica(dt: DistributedTable, *,
+                   capacity: int = DEFAULT_REPLICA_SLOTS,
+                   max_matches: int = DEFAULT_REPLICA_MATCHES
+                   ) -> DistributedTable:
+    """Attach an empty, STALE mirror (version −1: never consulted until
+    the first ``refresh_replica``).  One treedef change, done before
+    entering jitted loops — like attaching a queue or tracker."""
+    if dt.table.hot is None:
+        raise ValueError(
+            "attach_replica needs a hot-key tracker on the table "
+            "(create with track_hot=... or frame.with_hot_tracker())")
+    joins.check_max_matches(max_matches)
+    sch = dt.schema
+    cols = {c.name: jnp.zeros((capacity, max_matches), c.jnp_dtype)
+            for c in sch.columns}
+    rep = HotReplica(keys=jnp.full((capacity,), EMPTY_KEY, jnp.int64),
+                     cols=cols,
+                     valid=jnp.zeros((capacity, max_matches), bool),
+                     version=jnp.asarray(-1, jnp.int32),
+                     max_matches=max_matches)
+    return dataclasses.replace(dt, replica=rep)
+
+
+@functools.lru_cache(maxsize=None)
+def _refresh_fn(rt: mesh.Runtime):
+    """Jitted replica refresh for one runtime: merge the per-shard
+    trackers into the global top-H (keys are disjoint across shards —
+    routing partitions by key — so the merge is one flat sort), fetch
+    those keys' newest rows through the bit-exact routed path, and stamp
+    the live version.  Zero host syncs; returns only the new mirror, so
+    the table's leaves never round-trip through the jit."""
+
+    def core(dt):
+        REPLICA_TRACES["refresh"] += 1
+        rep = dt.replica
+        hot = dt.table.hot
+        h = rep.keys.shape[0]
+        flat_k = hot.keys.reshape(-1)
+        flat_c = hot.counts.reshape(-1)
+        if flat_k.shape[0] < h:
+            flat_k = jnp.pad(flat_k, (0, h - flat_k.shape[0]),
+                             constant_values=EMPTY_KEY)
+            flat_c = jnp.pad(flat_c, (0, h - flat_c.shape[0]))
+        o = jnp.lexsort((flat_k, -flat_c))   # count desc, key asc: stable
+        hot_k = jnp.where(flat_c[o[:h]] > 0, flat_k[o[:h]], EMPTY_KEY)
+        cols, valid = lookup_routed_flat(dt, hot_k,
+                                         max_matches=rep.max_matches,
+                                         rt=rt)
+        return dataclasses.replace(
+            rep, keys=hot_k, cols=cols, valid=valid,
+            version=jnp.asarray(dt.version, jnp.int32))
+
+    return jax.jit(core)
+
+
+def refresh_replica(dt: DistributedTable, *,
+                    rt: mesh.Runtime | None = None) -> DistributedTable:
+    """Re-mirror the current global top-H hot keys at the live version.
+
+    ONE cached jit call (no host sync): tracker merge + routed fetch of
+    H keys.  Callers decide cadence — the facade refreshes after every
+    append/flush when a mirror is attached, keeping the hybrid hot; a
+    skipped refresh is safe (stale mirror ⇒ pure routing).
+    """
+    rt = mesh.resolve(rt).check(dt.num_shards)
+    if dt.replica is None:
+        raise ValueError("refresh_replica: no replica attached "
+                         "(attach_replica first)")
+    if dt.table.hot is None:
+        raise ValueError("refresh_replica: table has no hot-key tracker")
+    return dataclasses.replace(dt, replica=_refresh_fn(rt)(dt))
+
+
+def _replica_split(dt: DistributedTable, q):
+    """In-graph hot/cold split: ``(eligible [Q], slot [Q])``.
+
+    A query is hot when its key sits in the mirror AND the mirror is
+    fresh (fetch version == live version).  EMPTY_KEY queries (serving
+    pads, masked tails) are never hot — they stay guaranteed misses on
+    the cold path, consuming no exchange capacity either way."""
+    rep = dt.replica
+    hit = q[:, None] == rep.keys[None, :]                      # [Q, H]
+    fresh = jnp.asarray(rep.version) == jnp.asarray(dt.version)
+    eligible = jnp.any(hit, axis=1) & (q != EMPTY_KEY) & fresh
+    return eligible, jnp.argmax(hit, axis=1)
+
+
+def lookup_hybrid_report(dt: DistributedTable, keys, *, max_matches: int,
+                         capacity: int | None = None, names=None,
+                         rt: mesh.Runtime | None = None):
+    """Skew-resilient point lookup: hot keys answer locally from the
+    mirror, the cold tail routes — same flat report contract as
+    ``lookup_routed_report`` (``cols [Q, M], valid [Q, M], answered [Q],
+    dropped [s]``), bit-identical answers to pure routing.
+
+    The split is in-graph: hot lanes are masked to ``EMPTY_KEY`` before
+    the exchange, so (by the routed path's pad contract) they never
+    consume a (src, dest) capacity lane and never count as drops — the
+    owner of a celebrity key sees only the cold tail.  Hot answers
+    gather from the mirror and recombine in input order.  Statically
+    falls back to pure routing when no mirror is attached or the query
+    wants deeper chains than the mirror stores; dynamically degrades to
+    pure routing per-batch while the mirror is stale (version gate).
+    """
+    rt = mesh.resolve(rt).check(dt.num_shards)
+    joins.check_max_matches(max_matches)
+    q = joins.as_int64_keys(keys)
+    rep = dt.replica
+    if rep is None or max_matches > rep.max_matches:
+        return lookup_routed_report(dt, q, max_matches=max_matches,
+                                    capacity=capacity, names=names, rt=rt)
+    eligible, slot = _replica_split(dt, q)
+    cold_q = jnp.where(eligible, EMPTY_KEY, q)
+    cols_r, valid_r, answered_r, dropped = lookup_routed_report(
+        dt, cold_q, max_matches=max_matches, capacity=capacity,
+        names=names, rt=rt)
+    nm = tuple(names) if names is not None else tuple(dt.schema.names)
+    cols = {k: jnp.where(eligible[:, None],
+                         rep.cols[k][slot, :max_matches], cols_r[k])
+            for k in nm}
+    valid = jnp.where(eligible[:, None],
+                      rep.valid[slot, :max_matches], valid_r)
+    return cols, valid, eligible | answered_r, dropped
+
+
+def lookup_hybrid_flat(dt: DistributedTable, keys, *, max_matches: int,
+                       names=None, rt: mesh.Runtime | None = None):
+    """Hybrid point lookup with the FLAT contract (``[Q]`` keys →
+    ``(cols [Q, M], valid [Q, M])``) — what the facade and planner
+    execute "HybridLookup" through.  Cold capacity is the lane count
+    (never drops), hot lanes never reach the exchange at all."""
+    cols, valid, _, _ = lookup_hybrid_report(
+        dt, keys, max_matches=max_matches, capacity=None, names=names,
+        rt=rt)
+    return cols, valid
+
+
+def indexed_join_hybrid(dt: DistributedTable, probe_cols: dict,
+                        probe_key: str, *, max_matches: int, names=None,
+                        rt: mesh.Runtime | None = None):
+    """Skew-resilient equi-join, flat local contract (same as
+    ``indexed_join_routed``): hot probe keys join against the mirror
+    locally, the cold tail rides the routed exchange — a power-law probe
+    side no longer concentrates its exchange lanes on one owner."""
+    q = joins.as_int64_keys(probe_cols[probe_key])
+    build_cols, valid = lookup_hybrid_flat(dt, q, max_matches=max_matches,
+                                           names=names, rt=rt)
+    m = valid.shape[1]
+    probe_b = {k: jnp.broadcast_to(jnp.asarray(v)[:, None],
+                                   (q.shape[0], m))
+               for k, v in probe_cols.items()}
+    return build_cols, probe_b, valid
+
+
+def reseed_tracker(hot, num_shards: int):
+    """Host-side tracker re-seed for ``reshard``: route the surviving
+    tracker entries to their NEW owning shards (``partition_hash_host`` —
+    same bits as the device routing) and keep each new shard's top-T.
+
+    Top-k counts carry through as exact lower bounds (entries were
+    disjoint across the old shards, so the merge has no duplicate keys);
+    sketch planes restart at zero — per-plane cell sums cannot be
+    re-partitioned by key, so after a reshard the sketch re-estimates
+    from subsequent ingest while the carried top-k entries keep the hot
+    set warm."""
+    top_k = hot.keys.shape[-1]
+    k = np.asarray(jax.device_get(hot.keys)).reshape(-1)
+    c = np.asarray(jax.device_get(hot.counts)).reshape(-1)
+    live = k != np.int64(EMPTY_KEY)
+    k, c = k[live], c[live]
+    owner = hashing.partition_hash_host(k, num_shards)
+    keys = np.full((num_shards, top_k), np.int64(EMPTY_KEY))
+    counts = np.zeros((num_shards, top_k), np.int64)
+    for s in range(num_shards):
+        m = owner == s
+        ks, cs = k[m], c[m]
+        o = np.lexsort((ks, -cs))[:top_k]          # count desc, key asc
+        keys[s, :o.size] = ks[o]
+        counts[s, :o.size] = cs[o]
+    sketch = (None if hot.sketch is None
+              else jnp.zeros((num_shards,) + hot.sketch.shape[-2:],
+                             jnp.int64))
+    return dataclasses.replace(hot, keys=jnp.asarray(keys),
+                               counts=jnp.asarray(counts), sketch=sketch)
+
+
+def hot_fraction(dt: DistributedTable, keys) -> float:
+    """Host-side diagnostic: fraction of CONCRETE query keys the mirror
+    would answer locally (``explain()`` reports it; never called under a
+    trace).  Uses a host mirror of the replica keys cached on the
+    instance — one device_get per replica object, not per call."""
+    rep = dt.replica
+    if rep is None or isinstance(rep.keys, jax.core.Tracer):
+        return 0.0
+    hk = getattr(rep, "_host_keys", None)
+    if hk is None:
+        hk = np.asarray(jax.device_get(rep.keys))
+        object.__setattr__(rep, "_host_keys", hk)
+    q = np.asarray(keys).astype(np.int64).reshape(-1)
+    if q.size == 0:
+        return 0.0
+    return float(np.isin(q, hk[hk != np.int64(EMPTY_KEY)]).mean())
 
 
 def choose_lookup(dt, total_queries: int, *,

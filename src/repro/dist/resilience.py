@@ -332,6 +332,12 @@ class RecoveryManager:
             self.dead.add(shard)
             return False
         healed = _runtime.splice_shard(dt, shard, fresh)
+        if healed.replica is not None:
+            # fail_shard marked the mirror stale (the dead executor's
+            # copy died with it); with tracker and rows spliced back
+            # bit-identically, one refresh restores the replica arena
+            # bit-identically to a never-failed twin's.
+            healed = _dtable.refresh_replica(healed, rt=self.frame.rt)
         self.frame = dataclasses.replace(self.frame, data=healed)
         self.vv.mark_fresh(shard, version=self._version())
         self._expected_fill = self._fill()
@@ -436,6 +442,12 @@ class RecoveryManager:
                     return _dtable.lookup_routed_flat(
                         fr.data, q, max_matches=max_matches, names=names,
                         rt=fr.rt)
+            elif kind == "HybridLookup":
+                def f(fr, q):
+                    ctr["n"] += 1
+                    return _dtable.lookup_hybrid_flat(
+                        fr.data, q, max_matches=max_matches, names=names,
+                        rt=fr.rt)
             elif kind == "BroadcastJoin":
                 def f(fr, pc, on):
                     ctr["n"] += 1
@@ -446,6 +458,12 @@ class RecoveryManager:
                 def f(fr, pc, on):
                     ctr["n"] += 1
                     return _dtable.indexed_join_routed(
+                        fr.data, pc, on, max_matches=max_matches,
+                        names=names, rt=fr.rt)
+            elif kind == "HybridJoin":
+                def f(fr, pc, on):
+                    ctr["n"] += 1
+                    return _dtable.indexed_join_hybrid(
                         fr.data, pc, on, max_matches=max_matches,
                         names=names, rt=fr.rt)
             else:
@@ -471,13 +489,26 @@ class RecoveryManager:
         """The automated drop->retry contract: start at the pressured
         capacity, double per attempt under the exponential-backoff
         budget, stop at zero drops or budget exhaustion (drops are then
-        reported honestly, never silently missed)."""
+        reported honestly, never silently missed).
+
+        When a fresh hot-key mirror covers this read's ``max_matches``,
+        every attempt goes through the hybrid report: hot queries answer
+        from the replica arena and are masked OUT of the exchange before
+        capacity is spent, so a dropped-then-retried batch never re-routes
+        its hot lanes at doubled capacity — the retry only re-runs the
+        cold tail that actually dropped (the skew fix: under pressure a
+        celebrity key can otherwise never be delivered at any doubling).
+        """
+        rep = self.frame.data.replica
+        report = (_dtable.lookup_hybrid_report
+                  if rep is not None and max_matches <= rep.max_matches
+                  else _dtable.lookup_routed_report)
         s = self.frame.num_shards
         lanes = max(1, -(-int(np.shape(q)[0]) // s))
         cap = max(1, int(lanes / self._pressure_divisor))
         attempt = 0
         while True:
-            cols, valid, answered, dropped = _dtable.lookup_routed_report(
+            cols, valid, answered, dropped = report(
                 self.frame.data, q, max_matches=max_matches,
                 capacity=min(cap, lanes), names=names, rt=self.frame.rt)
             n_dropped = int(np.asarray(dropped).sum())
@@ -508,7 +539,8 @@ class RecoveryManager:
                                       op=op).kind
         q_np = np.asarray(keys).astype(np.int64).reshape(-1)
         retries = n_dropped = 0
-        if kind == "RoutedLookup" and self._pressure_divisor is not None:
+        if (kind in ("RoutedLookup", "HybridLookup")
+                and self._pressure_divisor is not None):
             q = jax.numpy.asarray(q_np)
             cols, valid, answered_x, n_dropped, retries = \
                 self._routed_with_retry(q, max_matches, names_t)

@@ -144,6 +144,22 @@ class Lineage:
             self.base, self.schema, num_shards,
             rows_per_batch=self.rows_per_batch, layout=self.layout,
             slots=self.slots, rt=rt)
+        if like is not None and like.table.hot is not None:
+            # Re-attach an EMPTY tracker shaped like the live one BEFORE
+            # replaying the append log: trackers are attached at creation
+            # and count ingest only (never back-counted), so the replay
+            # reproduces the live tracker bit-identically — and the
+            # spliced pytree structurally matches (splice_shard tree_maps
+            # the whole table).
+            h = like.table.hot
+            sd, sw = ((h.sketch.shape[-2], h.sketch.shape[-1])
+                      if h.sketch is not None
+                      else (_dtable.table_mod.SKETCH_DEPTH,
+                            _dtable.table_mod.SKETCH_WIDTH))
+            dt = dataclasses.replace(dt, table=dataclasses.replace(
+                dt.table, hot=_dtable.table_mod.empty_tracker(
+                    h.keys.shape[-1], mode=h.mode, sketch_depth=sd,
+                    sketch_width=sw, num_shards=num_shards)))
         return self._apply(dt, self.deltas, rt)
 
 
@@ -188,7 +204,25 @@ def fail_shard(dt: _dtable.DistributedTable,
         data=(None if t.snapshot.data is None
               else jax.tree.map(lambda a: kill(a, 0), t.snapshot.data)))
     table = dataclasses.replace(t, segments=segments, snapshot=snap)
-    return dataclasses.replace(dt, table=table)
+    if t.hot is not None:
+        # The shard's hot-key counts died with it (rebuilt by lineage
+        # replay, which replays them bit-identically into the splice).
+        table = dataclasses.replace(table, hot=dataclasses.replace(
+            t.hot, keys=kill(t.hot.keys, EMPTY_KEY),
+            counts=kill(t.hot.counts, 0),
+            sketch=(None if t.hot.sketch is None
+                    else kill(t.hot.sketch, 0))))
+    out = dataclasses.replace(dt, table=table)
+    if dt.replica is not None:
+        # The dead executor's replica copy is gone; our un-stacked
+        # representation models that as global staleness (version -1 ⇒
+        # hybrid degrades to pure routing), and the supervisor's heal
+        # re-mirrors after the splice — bit-identical to a refresh on a
+        # never-failed dtable, since tracker and rows are restored
+        # bit-identically first.
+        out = dataclasses.replace(out, replica=dataclasses.replace(
+            dt.replica, version=jnp.asarray(-1, jnp.int32)))
+    return out
 
 
 def splice_shard(dt: _dtable.DistributedTable, shard: int,

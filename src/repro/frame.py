@@ -52,8 +52,8 @@ from repro.core.schema import Schema
 if False:  # annotations only (PEP 563 strings; dist itself loads lazily)
     from repro.dist import mesh
 
-_LOOKUP_OPS = ("auto", "local", "bcast", "routed")
-_JOIN_OPS = ("auto", "local", "bcast", "shuffle")
+_LOOKUP_OPS = ("auto", "local", "bcast", "routed", "hybrid")
+_JOIN_OPS = ("auto", "local", "bcast", "shuffle", "hybrid")
 
 
 def _dtable():
@@ -153,20 +153,27 @@ class IndexedFrame:
                      rt: mesh.Runtime | None = None,
                      rows_per_batch: int = 4096, layout: str = "row",
                      slots: int | None = None, valid=None,
-                     reserve: int | None = None) -> "IndexedFrame":
+                     reserve: int | None = None,
+                     track_hot: int | None = None,
+                     hot_mode: str = "topk") -> "IndexedFrame":
         """Paper Listing 1 ``createIndex``: build the index over a keyed
         columnar dict — one partition (``num_shards=1``) or hash-
-        partitioned across shards, same handle either way."""
+        partitioned across shards, same handle either way.  ``track_hot``
+        attaches a top-k hot-key tracker (DESIGN.md §15) counting
+        subsequent ingest; ``hot_mode="sketch"`` uses the count-min
+        fallback for unbounded key universes."""
         cols = _hash_string_cols(cols, schema)
         kw = {} if slots is None else {"slots": slots}
         if num_shards == 1:
             t = table_mod.create_index(
                 cols, schema, rows_per_batch=rows_per_batch, layout=layout,
-                valid=valid, reserve=reserve, **kw)
+                valid=valid, reserve=reserve, track_hot=track_hot,
+                hot_mode=hot_mode, **kw)
         else:
             t = _dtable().create_distributed(
                 cols, schema, num_shards, rows_per_batch=rows_per_batch,
-                layout=layout, valid=valid, reserve=reserve, rt=rt, **kw)
+                layout=layout, valid=valid, reserve=reserve, rt=rt,
+                track_hot=track_hot, hot_mode=hot_mode, **kw)
         return cls(data=t, rt=rt)
 
     # -- shape facts / passthroughs -------------------------------------------
@@ -231,11 +238,27 @@ class IndexedFrame:
                 f"this frame has {self.num_shards} shard(s)")
         return planner_mod.Physical(kind, f"forced: op={op!r}", self.data)
 
+    def _annotate(self, phys: planner_mod.Physical,
+                  keys) -> planner_mod.Physical:
+        """The uniform reason suffix every planned read carries:
+        ``pending_ring_rows=N`` (rows staged in the ring, invisible until
+        flush) and, for hybrid flavors with concrete keys, the measured
+        ``hot_fraction`` — so ``explain()`` reads the same for every
+        flavor.  Both are host facts; under a trace (the gated read sites
+        drive planning with tracer keys) the hot fraction is skipped."""
+        notes = [f"pending_ring_rows={self.pending_rows}"]
+        if (phys.kind in ("HybridLookup", "HybridJoin")
+                and not isinstance(keys, jax.core.Tracer)):
+            frac = _dtable().hot_fraction(self.data, keys)
+            notes.append(f"hot_fraction={frac:.2f}")
+        return dataclasses.replace(
+            phys, reason=phys.reason + "; " + " ".join(notes))
+
     def plan_lookup(self, keys, *, max_matches: int = 64, op: str = "auto",
                     planner: planner_mod.Planner | None = None
                     ) -> planner_mod.Physical:
         """The physical operator ``lookup`` would run for this query batch
-        (rules L1-L3) — ``.explain()`` on the result names the rule."""
+        (rules L1-L4) — ``.explain()`` on the result names the rule."""
         if op == "auto":
             p = self._planner(planner, max_matches)
             phys = p.physical_lookup(self.data, int(jnp.shape(keys)[0]))
@@ -243,13 +266,9 @@ class IndexedFrame:
             phys = self._forced_plan(op, _LOOKUP_OPS,
                                      {"local": "IndexedLookup",
                                       "bcast": "BroadcastLookup",
-                                      "routed": "RoutedLookup"})
-        pending = self.pending_rows
-        if pending:
-            phys = dataclasses.replace(
-                phys, reason=phys.reason + f"; {pending} queued row(s) "
-                f"pending (invisible until flush)")
-        return phys
+                                      "routed": "RoutedLookup",
+                                      "hybrid": "HybridLookup"})
+        return self._annotate(phys, keys)
 
     def lookup(self, keys, *, max_matches: int = 64, names=None,
                op: str = "auto",
@@ -272,6 +291,10 @@ class IndexedFrame:
                 self.data, keys, max_matches=max_matches, names=names,
                 rt=self.rt)
             return cols, valid
+        if kind == "HybridLookup":
+            return _dtable().lookup_hybrid_flat(
+                self.data, keys, max_matches=max_matches, names=names,
+                rt=self.rt)
         return _dtable().lookup_routed_flat(
             self.data, keys, max_matches=max_matches, names=names,
             rt=self.rt)
@@ -281,15 +304,18 @@ class IndexedFrame:
                   planner: planner_mod.Planner | None = None
                   ) -> planner_mod.Physical:
         """The physical operator ``join`` would run for this probe side
-        (rules J1-J3)."""
+        (rules J1-J4)."""
         if op == "auto":
             p = self._planner(planner, max_matches)
-            return p.physical_join(self.data,
+            phys = p.physical_join(self.data,
                                    int(jnp.shape(probe_cols[on])[0]))
-        return self._forced_plan(op, _JOIN_OPS,
-                                 {"local": "IndexedJoin",
-                                  "bcast": "BroadcastJoin",
-                                  "shuffle": "ShuffleJoin"})
+        else:
+            phys = self._forced_plan(op, _JOIN_OPS,
+                                     {"local": "IndexedJoin",
+                                      "bcast": "BroadcastJoin",
+                                      "shuffle": "ShuffleJoin",
+                                      "hybrid": "HybridJoin"})
+        return self._annotate(phys, probe_cols[on])
 
     def join(self, probe_cols: dict, on: str, *, max_matches: int = 64,
              names=None, op: str = "auto",
@@ -313,6 +339,10 @@ class IndexedFrame:
             return _dtable().indexed_join_bcast(
                 self.data, probe_cols, on, max_matches, names=names,
                 rt=self.rt)
+        if kind == "HybridJoin":
+            return _dtable().indexed_join_hybrid(
+                self.data, probe_cols, on, max_matches=max_matches,
+                names=names, rt=self.rt)
         return _dtable().indexed_join_routed(
             self.data, probe_cols, on, max_matches=max_matches, names=names,
             rt=self.rt)
@@ -372,9 +402,9 @@ class IndexedFrame:
                     f"distributed append supports only mode='arena' "
                     f"(got {mode!r}); the segment-chain reference path is "
                     f"single-partition")
-            new = _dtable().append_distributed(
+            new = self._refreshed(_dtable().append_distributed(
                 self.data, cols, valid, rt=self.rt, donate=donate,
-                compact_threshold=compact_threshold)
+                compact_threshold=compact_threshold))
         else:
             new = table_mod.append(self.data, cols, valid, mode=mode,
                                    donate=donate,
@@ -447,6 +477,7 @@ class IndexedFrame:
             data, q, _ = _dtable().flush_queue_distributed(
                 self.data, self.queue, rt=self.rt, donate=donate,
                 compact_threshold=compact_threshold)
+            data = self._refreshed(data)
         else:
             data, q, _ = table_mod.flush_queue(
                 self.data, self.queue, donate=donate,
@@ -457,11 +488,65 @@ class IndexedFrame:
         """Merge all segments into one fresh arena (bounds MVCC probe
         fan-out; DESIGN.md §4) — lookups bit-identical before and after."""
         if self.is_distributed:
-            new = _dtable().compact_distributed(self.data, rt=self.rt,
-                                                 reserve=reserve)
+            new = self._refreshed(_dtable().compact_distributed(
+                self.data, rt=self.rt, reserve=reserve))
         else:
             new = table_mod.compact(self.data, reserve=reserve)
         return dataclasses.replace(self, data=new)
+
+    # -- skew resilience: hot-key tracking + replication (DESIGN.md §15) -------
+
+    def with_hot_tracker(self, top_k: int | None = None, *,
+                         mode: str = "topk") -> "IndexedFrame":
+        """Attach an exact top-k hot-key tracker (``mode="sketch"`` for
+        the count-min fallback) counting subsequent ingest — ONE treedef
+        change, like attaching a queue; do it at (or right after)
+        construction so lineage replay reproduces the hot set."""
+        k = table_mod.DEFAULT_HOT_TOP_K if top_k is None else int(top_k)
+        if self.is_distributed:
+            hot = table_mod.empty_tracker(k, mode=mode,
+                                          num_shards=self.num_shards)
+            data = dataclasses.replace(
+                self.data, table=dataclasses.replace(self.data.table,
+                                                     hot=hot))
+        else:
+            data = table_mod.with_hot(self.data, k, mode=mode)
+        return dataclasses.replace(self, data=data)
+
+    def with_replica(self, *, capacity: int | None = None,
+                     max_matches: int | None = None) -> "IndexedFrame":
+        """Attach the fixed-capacity hot-key mirror the hybrid flavors
+        (rules L4/J4) answer hot queries from.  Starts stale (never
+        consulted) until the first refresh; the facade auto-refreshes
+        after every version bump from here on.  Needs a hot-key tracker
+        and a distributed frame."""
+        if not self.is_distributed:
+            raise ValueError("with_replica needs a distributed frame "
+                             "(a single partition has no exchange to skip)")
+        dd = _dtable()
+        kw = {}
+        if capacity is not None:
+            kw["capacity"] = int(capacity)
+        if max_matches is not None:
+            kw["max_matches"] = int(max_matches)
+        return dataclasses.replace(self, data=dd.attach_replica(self.data,
+                                                                **kw))
+
+    def refresh_replica(self) -> "IndexedFrame":
+        """Re-mirror the current global top-H hot keys at the live
+        version (one cached jit call, zero host syncs) — normally
+        implicit: ``append``/``flush``/``compact`` refresh automatically
+        when a mirror is attached."""
+        return dataclasses.replace(
+            self, data=_dtable().refresh_replica(self.data, rt=self.rt))
+
+    def _refreshed(self, data):
+        """Auto re-mirror after a version bump: a stale mirror is always
+        SAFE (the hybrid degrades to pure routing) but cold — keeping it
+        fresh on the write path is what keeps the Zipf sweep flat."""
+        if getattr(data, "replica", None) is not None:
+            data = _dtable().refresh_replica(data, rt=self.rt)
+        return data
 
     # -- supervision (self-healing reads) --------------------------------------
 
@@ -543,9 +628,23 @@ class IndexedFrame:
         resharded frame comes back queue-less — ``with_queue()`` again
         on the new topology."""
         self = self.flush()
+        dd = _dtable() if self.is_distributed else None
         if self.is_distributed:
+            old = self.data
             new = _checkpoint().reshard_dtable(self.data, num_shards, rt=self.rt,
                                       rt_out=rt_out)
+            if old.table.hot is not None:
+                # carry the hot set into the new topology: re-route the
+                # tracker entries to their new owners (counts survive as
+                # exact lower bounds; DESIGN.md §15)
+                new = dataclasses.replace(new, table=dataclasses.replace(
+                    new.table,
+                    hot=dd.reseed_tracker(old.table.hot, num_shards)))
+            if old.replica is not None:
+                new = dd.attach_replica(
+                    new, capacity=old.replica.keys.shape[0],
+                    max_matches=old.replica.max_matches)
+                new = dd.refresh_replica(new, rt=rt_out)
             return IndexedFrame(data=new, rt=rt_out)
         t = self.data
         valid_all = np.concatenate([np.asarray(s.valid)
@@ -560,4 +659,7 @@ class IndexedFrame:
             slots=t.slots, rt=rt_out)
         dt = dataclasses.replace(
             dt, version=jnp.asarray(int(np.asarray(t.version)), jnp.int32))
+        if t.hot is not None:
+            dt = dataclasses.replace(dt, table=dataclasses.replace(
+                dt.table, hot=_dtable().reseed_tracker(t.hot, num_shards)))
         return IndexedFrame(data=dt, rt=rt_out)

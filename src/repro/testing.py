@@ -122,6 +122,15 @@ def booleans() -> SearchStrategy:
     return SearchStrategy(lambda rnd: rnd.random() < 0.5, "booleans")
 
 
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: value, "just")
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    opts = list(strategies)
+    return SearchStrategy(lambda rnd: rnd.choice(opts).draw(rnd), "one_of")
+
+
 def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
     """Decorator recording the example budget (deadline etc. are ignored)."""
 
@@ -169,7 +178,7 @@ def install() -> None:
     hyp.__version__ = "0.0-repro-fallback"
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "lists", "text", "sampled_from",
-                 "booleans"):
+                 "booleans", "just", "one_of"):
         setattr(st, name, globals()[name])
     hyp.strategies = st
     sys.modules["hypothesis"] = hyp

@@ -113,7 +113,7 @@ def test_queued_rows_invisible_until_flush():
     np.testing.assert_array_equal(m0, m1)   # ring rows hard-masked out
     np.testing.assert_array_equal(v0, v1)
     assert fr.version == 0                  # no bump before flush
-    assert "queued" in fr.plan_lookup(np.arange(4)).reason
+    assert "pending_ring_rows=3" in fr.plan_lookup(np.arange(4)).reason
     fr = fr.flush()
     assert fr.version == 1                  # exactly ONE bump for the ring
     _, m2 = _vals(fr)
