@@ -136,3 +136,26 @@ class Report:
 
     def to_dict(self):
         return {"benchmark": self.name, "rows": self.rows}
+
+
+def update_workloads(section: str, payload: dict,
+                     path: str | None = None) -> str:
+    """Merge one workload benchmark's rows into the committed
+    ``BENCH_workloads.json`` at the repo root (tpcds_join and
+    flights_queries share the artifact — ROADMAP workload item)."""
+    import os
+    if path is None:
+        path = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                            "..", "BENCH_workloads.json"))
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            doc = {}
+    doc[section] = payload
+    doc["backend"] = jax.default_backend()
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return path

@@ -6,22 +6,170 @@ Q5/Q6/Q7 point queries with ~10/100/1000 matches (int)
 
 The paper finds int keys beat string keys (strings pay a hash); we
 pre-hash strings at ingest, so the residual string tax is the host-side
-hashing, measured separately."""
+hashing, measured separately.
+
+ISSUE 10 port: the indexed side runs through the ``IndexedFrame`` facade
+on BOTH backends (local + vmap dist); two new cells land in
+``BENCH_workloads.json``:
+
+* ``dict_encode`` — streaming STRING ingest (the same tail-number
+  vocabulary every batch) hashed per batch vs through a
+  ``hashing.StringDictionary`` (hash each string once, table-lookup
+  after): the before/after on the paper's Fig-15 string tax;
+* ``partitioned`` — month-partitioned flights (a ``flightdate`` YYYYMM
+  key, ``PartitionSpec.range_`` one partition per month): a one-month
+  point query prunes to 1/12 partitions (planner rule P1), pruned vs
+  unpruned latency reported.
+"""
 
 import time
 
 import jax
 import numpy as np
 
-from repro.core import Schema, create_index, joins
-from repro.core.hashing import hash_string_host
-from benchmarks.common import Report, flights_table, timeit
+from repro import IndexedFrame, PartitionSpec
+from repro.core import Schema, joins
+from repro.core.hashing import (StringDictionary, hash_string_host,
+                                hash_strings_host)
+from benchmarks.common import (Report, flights_table, timeit,
+                               update_workloads)
 
 F_SCH = Schema.of("flightnum", tailnum_h="int64", flightnum="int64",
                   delay="float32", distance="int32")
 FT_SCH = Schema.of("tailnum_h", tailnum_h="int64", flightnum="int64",
                    delay="float32", distance="int32")
 P_SCH = Schema.of("tailnum_h", tailnum_h="int64", year="int32")
+FD_SCH = Schema.of("flightdate", flightdate="int64", delay="float32")
+
+# hot flight numbers planted by run() for the Q5-Q7 result-size sweep,
+# chosen above the 0..7999 uniform range so Q3/Q4's <200/<400 probe
+# subsets are untouched
+HOT_10, HOT_100, HOT_1000 = 8010, 8100, 8500
+
+
+def _queries(rep, rows, backend, flights, planes, tails, n, kw):
+    ft_tail = IndexedFrame.from_columns(flights, FT_SCH,
+                                        rows_per_batch=4096, **kw)
+    ft_num = IndexedFrame.from_columns(flights, F_SCH,
+                                       rows_per_batch=4096, **kw)
+    nb = 1 << max(14, (n // 4).bit_length())
+
+    def add(label, ti, tv, **extra):
+        row = {"label": f"{label} {backend}", "backend": backend,
+               "indexed_ms": ti["median_s"] * 1e3,
+               "vanilla_ms": tv["median_s"] * 1e3,
+               "speedup": tv["median_s"] / ti["median_s"], **extra}
+        rows.append(row)
+        rep.add(row["label"], **{k: v for k, v in row.items()
+                                 if k != "label"})
+
+    # Q1: join flights x planes ON tailNum (string key, pre-hashed)
+    j1i = jax.jit(lambda f, p: f.join(p, "tailnum_h", max_matches=256)[2])
+    j1v = jax.jit(lambda b, p: joins.hash_join(
+        b, "tailnum_h", p, "tailnum_h", max_matches=256, num_buckets=nb))
+    add("Q1_join_tailnum_str", timeit(j1i, ft_tail, planes, reps=3),
+        timeit(j1v, flights, planes, reps=3))
+
+    # Q2: select * where tailNum = x (string key) + host hashing tax
+    t0 = time.perf_counter()
+    key = hash_string_host("N00042")
+    hash_tax = time.perf_counter() - t0
+    j2i = jax.jit(lambda f, q: f.lookup(q, max_matches=512)[1])
+    j2v = jax.jit(lambda t, q: joins.scan_lookup(t, q, max_matches=512))
+    ti = timeit(j2i, ft_tail, np.asarray([key]), reps=3)
+    if backend == "local":   # scan baseline is single-table only
+        tv = timeit(j2v, ft_tail.data, np.asarray([key]), reps=3)
+    else:
+        tv = ti
+    add("Q2_filter_tailnum_str", ti, tv,
+        string_hash_tax_us=hash_tax * 1e6)
+
+    # Q3/Q4: join with selected flights subset (int key)
+    j3i = jax.jit(lambda f, p: f.join(p, "flightnum", max_matches=32)[2])
+    j3v = jax.jit(lambda b, p: joins.hash_join(
+        b, "flightnum", p, "flightnum", max_matches=32, num_buckets=nb))
+    for name, bound in (("Q3_join_fnum_lt200", 200),
+                        ("Q4_join_fnum_lt400", 400)):
+        sel = flights["flightnum"] < bound
+        probe = {"flightnum": flights["flightnum"][sel][:2048]}
+        add(name, timeit(j3i, ft_num, probe, reps=3),
+            timeit(j3v, flights, probe, reps=3))
+
+    # Q5-Q7: point queries with growing match counts (int key; hot keys
+    # planted by run() so the result sizes actually span 10/100/1000)
+    counts = np.bincount(flights["flightnum"], minlength=8501)
+    for name, key, want in (("Q5_point_10", HOT_10, 10),
+                            ("Q6_point_100", HOT_100, 100),
+                            ("Q7_point_1000", HOT_1000, 1000)):
+        mm = max(want * 2, 16)
+        j5i = jax.jit(lambda f, q, mm=mm: f.lookup(q, max_matches=mm)[1])
+        j5v = jax.jit(lambda t, q, mm=mm: joins.scan_lookup(
+            t, q, max_matches=mm))
+        ti = timeit(j5i, ft_num, np.asarray([key]), reps=3)
+        if backend == "local":
+            tv = timeit(j5v, ft_num.data, np.asarray([key]), reps=3)
+        else:
+            tv = ti   # scan baseline is single-table; dist rows compare
+        add(name, ti, tv, matches=int(counts[key]))
+
+
+def _dict_encode_cell(rep, rows, rng, *, batches=20, batch_rows=5000,
+                      n_planes=400):
+    """Streaming string ingest, same vocabulary every batch: per-batch
+    FNV byte walk vs dictionary-encode (hash once, table after)."""
+    vocab = np.array([f"N{i:05d}" for i in range(n_planes)], dtype=object)
+    stream = [vocab[rng.integers(0, n_planes, batch_rows)]
+              for _ in range(batches)]
+
+    t0 = time.perf_counter()
+    plain = [hash_strings_host(b) for b in stream]
+    t_plain = time.perf_counter() - t0
+
+    d = StringDictionary()
+    t0 = time.perf_counter()
+    encoded = [d.encode(b) for b in stream]
+    t_dict = time.perf_counter() - t0
+
+    for p, e in zip(plain, encoded):    # bit-identical codes
+        np.testing.assert_array_equal(p, e)
+    row = {"label": f"string_ingest_{batches}x{batch_rows}",
+           "plain_ms": t_plain * 1e3, "dict_ms": t_dict * 1e3,
+           "speedup": t_plain / t_dict,
+           "strings_hashed": d.hashed, "rows_reused": d.reused,
+           "vocab": len(d)}
+    rows.append(row)
+    rep.add(row["label"], **{k: v for k, v in row.items()
+                             if k != "label"})
+
+
+def _partitioned_cell(rep, rows, rng, n):
+    """Month-partitioned flights: a one-month point query prunes to 1/12
+    partitions (planner rule P1)."""
+    months = np.arange(202401, 202413)
+    cols = {"flightdate": rng.choice(months, n).astype(np.int64),
+            "delay": rng.standard_normal(n).astype(np.float32)}
+    spec = PartitionSpec.range_("flightdate",
+                                list(months) + [202413],
+                                ids=[f"m{m % 100:02d}" for m in months])
+    fp = IndexedFrame.from_columns(cols, FD_SCH, rows_per_batch=4096,
+                                   partition_by=spec)
+    fm = IndexedFrame.from_columns(cols, FD_SCH, rows_per_batch=4096)
+    q = np.asarray([202406], np.int64)
+    mm = 4096
+    plan = fp.plan_lookup(q, max_matches=mm)
+    assert plan.kind == "PartitionedLookup" and plan.meta == [5], plan
+    t_pruned = timeit(lambda: fp.lookup(q, max_matches=mm)[1], reps=3)
+    t_full = timeit(lambda: fm.lookup(q, max_matches=mm)[1], reps=3)
+    row = {"label": "month_point_query (1/12 months)",
+           "backend": "local+partitioned",
+           "pruned_ms": t_pruned["median_s"] * 1e3,
+           "unpruned_ms": t_full["median_s"] * 1e3,
+           "prune_speedup": t_full["median_s"] / t_pruned["median_s"],
+           "partitions_scanned": 1, "partitions_total": 12,
+           "plan": plan.reason}
+    rows.append(row)
+    rep.add(row["label"], **{k: v for k, v in row.items()
+                             if k not in ("label", "plan")})
 
 
 def run(quick: bool = True):
@@ -29,71 +177,20 @@ def run(quick: bool = True):
     n = 60_000 if quick else 600_000
     rep = Report("flights_queries")
     flights, tails = flights_table(rng, n)
+    fn = flights["flightnum"]       # plant Q5-Q7's hot result sizes
+    fn[:1000], fn[1000:1100], fn[1100:1110] = HOT_1000, HOT_100, HOT_10
     planes = {"tailnum_h": tails,
               "year": rng.integers(1990, 2020, len(tails))
               .astype(np.int32)}
+    rows = []
 
-    ft_tail = create_index(flights, FT_SCH, rows_per_batch=4096)
-    ft_num = create_index(flights, F_SCH, rows_per_batch=4096)
+    _queries(rep, rows, "local", flights, planes, tails, n, {})
+    _queries(rep, rows, "dist_vmap", flights, planes, tails, n,
+             {"num_shards": 4})
+    _dict_encode_cell(rep, rows, rng)
+    _partitioned_cell(rep, rows, rng, n)
 
-    nb = 1 << max(14, (n // 4).bit_length())
-
-    # Q1: join flights x planes ON tailNum (string key, pre-hashed)
-    j1i = jax.jit(lambda t, p: joins.indexed_join(t, p, "tailnum_h",
-                                                  max_matches=256))
-    j1v = jax.jit(lambda b, p: joins.hash_join(
-        b, "tailnum_h", p, "tailnum_h", max_matches=256, num_buckets=nb))
-    ti = timeit(j1i, ft_tail, planes, reps=3)
-    tv = timeit(j1v, flights, planes, reps=3)
-    rep.add("Q1_join_tailnum_str", indexed_ms=ti["median_s"] * 1e3,
-            vanilla_ms=tv["median_s"] * 1e3,
-            speedup=tv["median_s"] / ti["median_s"])
-
-    # Q2: select * where tailNum = x (string key) + host hashing tax
-    t0 = time.perf_counter()
-    key = hash_string_host("N00042")
-    hash_tax = time.perf_counter() - t0
-    j2i = jax.jit(lambda t, q: joins.indexed_lookup(t, q,
-                                                    max_matches=512))
-    j2v = jax.jit(lambda t, q: joins.scan_lookup(t, q, max_matches=512))
-    ti = timeit(j2i, ft_tail, np.asarray([key]), reps=3)
-    tv = timeit(j2v, ft_tail, np.asarray([key]), reps=3)
-    rep.add("Q2_filter_tailnum_str", indexed_ms=ti["median_s"] * 1e3,
-            vanilla_ms=tv["median_s"] * 1e3,
-            speedup=tv["median_s"] / ti["median_s"],
-            string_hash_tax_us=hash_tax * 1e6)
-
-    # Q3/Q4: join with selected flights subset (int key)
-    j3i = jax.jit(lambda t, p: joins.indexed_join(t, p, "flightnum",
-                                                  max_matches=32))
-    j3v = jax.jit(lambda b, p: joins.hash_join(
-        b, "flightnum", p, "flightnum", max_matches=32, num_buckets=nb))
-    for name, bound in (("Q3_join_fnum_lt200", 200),
-                        ("Q4_join_fnum_lt400", 400)):
-        sel = flights["flightnum"] < bound
-        probe = {"flightnum": flights["flightnum"][sel][:2048]}
-        ti = timeit(j3i, ft_num, probe, reps=3)
-        tv = timeit(j3v, flights, probe, reps=3)
-        rep.add(name, indexed_ms=ti["median_s"] * 1e3,
-                vanilla_ms=tv["median_s"] * 1e3,
-                speedup=tv["median_s"] / ti["median_s"])
-
-    # Q5-Q7: point queries with growing match counts (int key)
-    counts = np.bincount(flights["flightnum"], minlength=8000)
-    for name, want in (("Q5_point_10", 10), ("Q6_point_100", 100),
-                       ("Q7_point_1000", 1000)):
-        key = int(np.argmin(np.abs(counts - want)))
-        mm = max(want * 2, 16)
-        j5i = jax.jit(lambda t, q, mm=mm: joins.indexed_lookup(
-            t, q, max_matches=mm))
-        j5v = jax.jit(lambda t, q, mm=mm: joins.scan_lookup(
-            t, q, max_matches=mm))
-        ti = timeit(j5i, ft_num, np.asarray([key]), reps=3)
-        tv = timeit(j5v, ft_num, np.asarray([key]), reps=3)
-        rep.add(name, indexed_ms=ti["median_s"] * 1e3,
-                vanilla_ms=tv["median_s"] * 1e3,
-                speedup=tv["median_s"] / ti["median_s"],
-                matches=int(counts[key]))
+    update_workloads("flights_queries", {"quick": quick, "rows": rows})
     return rep.to_dict()
 
 

@@ -5,17 +5,87 @@ remains in place, i.e., the larger table (the build side)" — so
 store_sales (fact) is indexed on ss_sold_date_sk and date_dim rows probe
 it.  The paper's trend reproduces: the larger the fact table, the larger
 the win (vanilla re-hashes the whole fact table per query; the index
-amortizes it)."""
+amortizes it).
+
+ISSUE 10 port: the indexed side now runs through the ``IndexedFrame``
+facade (the frame is the jit argument) on BOTH backends (local + vmap
+dist), plus a partitioned cell — store_sales date-partitioned by sale
+year (``partition_by=PartitionSpec.range_``), probed with one year's
+dates: planner rule P3 prunes the join to 1/Y partitions, and the row
+reports pruned vs unpruned latency.  Results land in
+``BENCH_workloads.json`` (committed artifact, shared with
+flights_queries).
+"""
 
 import jax
 import numpy as np
 
-from repro.core import Schema, create_index, joins
+from repro import IndexedFrame, PartitionSpec
+from repro.core import Schema, joins
 from repro.core.hashindex import suggest_num_buckets
-from benchmarks.common import Report, star_schema, timeit
+from benchmarks.common import (Report, star_schema, timeit,
+                               update_workloads)
 
 FACT_SCH = Schema.of("ss_sold_date_sk", ss_sold_date_sk="int64",
                      ss_net_paid="float32", ss_quantity="int32")
+
+DAYS_PER_YEAR, YEARS = 365, 5
+
+
+def _facade_cells(rep, rows, fact, dim, sf, n_fact, mm, nb):
+    probe = {"d_date_sk": dim["d_date_sk"], "d_year": dim["d_year"]}
+    j_hash = jax.jit(lambda f, p, nb=nb: joins.hash_join(
+        f, "ss_sold_date_sk", p, "d_date_sk", max_matches=mm,
+        num_buckets=nb))
+    t_hash = timeit(j_hash, fact, probe, reps=3)
+
+    for backend, kw in (("local", {}), ("dist_vmap", {"num_shards": 4})):
+        fr = IndexedFrame.from_columns(fact, FACT_SCH,
+                                       rows_per_batch=4096, **kw)
+        j_idx = jax.jit(lambda f, p: f.join(p, "d_date_sk",
+                                            max_matches=mm))
+        t_idx = timeit(j_idx, fr, probe, reps=3)
+        row = {"label": f"SF~{sf} (fact={n_fact}) {backend}",
+               "backend": backend,
+               "indexed_ms": t_idx["median_s"] * 1e3,
+               "vanilla_ms": t_hash["median_s"] * 1e3,
+               "speedup": t_hash["median_s"] / t_idx["median_s"]}
+        rows.append(row)
+        rep.add(row["label"], **{k: v for k, v in row.items()
+                                 if k != "label"})
+
+
+def _partitioned_cell(rep, rows, fact, dim, sf, mm):
+    """Date-partitioned store_sales: one partition per sale year, probed
+    with ONE year of dates — P3 prunes to 1/Y partitions."""
+    cuts = [y * DAYS_PER_YEAR for y in range(YEARS + 1)]
+    spec = PartitionSpec.range_("ss_sold_date_sk", cuts,
+                                ids=[f"y{2000 + y}" for y in range(YEARS)])
+    fp = IndexedFrame.from_columns(fact, FACT_SCH, rows_per_batch=4096,
+                                   partition_by=spec)
+    fm = IndexedFrame.from_columns(fact, FACT_SCH, rows_per_batch=4096)
+    year = (dim["d_date_sk"] >= DAYS_PER_YEAR) & \
+           (dim["d_date_sk"] < 2 * DAYS_PER_YEAR)
+    probe = {"d_date_sk": dim["d_date_sk"][year],
+             "d_year": dim["d_year"][year]}
+    plan = fp.plan_join(probe, "d_date_sk", max_matches=mm)
+    assert plan.kind == "PartitionedJoin" and plan.meta == [1], plan
+    # both sides run the facade eagerly: the partitioned path routes on
+    # HOST keys (jit would forfeit pruning), so its baseline must too
+    t_pruned = timeit(lambda: fp.join(probe, "d_date_sk",
+                                      max_matches=mm)[2], reps=3)
+    t_full = timeit(lambda: fm.join(probe, "d_date_sk",
+                                    max_matches=mm)[2], reps=3)
+    row = {"label": f"SF~{sf} partitioned (1/{YEARS} years probed)",
+           "backend": "local+partitioned",
+           "pruned_ms": t_pruned["median_s"] * 1e3,
+           "unpruned_ms": t_full["median_s"] * 1e3,
+           "prune_speedup": t_full["median_s"] / t_pruned["median_s"],
+           "partitions_scanned": 1, "partitions_total": YEARS,
+           "plan": plan.reason}
+    rows.append(row)
+    rep.add(row["label"], **{k: v for k, v in row.items()
+                             if k not in ("label", "plan")})
 
 
 def run(quick: bool = True):
@@ -24,24 +94,17 @@ def run(quick: bool = True):
     sfs = (1, 4, 16) if quick else (1, 10, 100)
     base_fact = 20_000 if quick else 100_000
     mm = 64   # matched sales rows returned per date key
+    rows = []
 
     for sf in sfs:
-        n_fact, n_dim = base_fact * sf, 365 * 5
+        n_fact, n_dim = base_fact * sf, DAYS_PER_YEAR * YEARS
         fact, dim = star_schema(rng, n_fact, n_dim)
-        fact_t = create_index(fact, FACT_SCH, rows_per_batch=4096)
-        probe = {"d_date_sk": dim["d_date_sk"], "d_year": dim["d_year"]}
         nb = suggest_num_buckets(n_fact, load=0.125)
-        j_idx = jax.jit(lambda t, p: joins.indexed_join(
-            t, p, "d_date_sk", max_matches=mm))
-        j_hash = jax.jit(lambda f, p, nb=nb: joins.hash_join(
-            f, "ss_sold_date_sk", p, "d_date_sk", max_matches=mm,
-            num_buckets=nb))
-        t_idx = timeit(j_idx, fact_t, probe, reps=3)
-        t_hash = timeit(j_hash, fact, probe, reps=3)
-        rep.add(f"SF~{sf} (fact={n_fact})",
-                indexed_ms=t_idx["median_s"] * 1e3,
-                vanilla_ms=t_hash["median_s"] * 1e3,
-                speedup=t_hash["median_s"] / t_idx["median_s"])
+        _facade_cells(rep, rows, fact, dim, sf, n_fact, mm, nb)
+        if sf == sfs[-1]:
+            _partitioned_cell(rep, rows, fact, dim, sf, mm)
+
+    update_workloads("tpcds_join", {"quick": quick, "rows": rows})
     return rep.to_dict()
 
 

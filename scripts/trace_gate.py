@@ -28,7 +28,12 @@ entry point:
   the mirror): the hybrid lookup/join sites and the jitted replica
   refresh itself each compile exactly once per topology (ISSUE 9 /
   DESIGN.md §15 — the hot set and the mirror's freshness are data
-  leaves, never treedef).
+  leaves, never treedef);
+* partitioned retention — appends into one partition, a ``drop_partition``
+  of another, and a rolling ``retain`` sweep leave every surviving
+  partition's jitted read site compiled (ISSUE 10 / DESIGN.md §16:
+  drop is a treedef-only removal, survivors' subtrees are the same
+  objects, so the partition layer's site counters stay flat).
 
 Fast by construction: tiny tables, one compile per site, zero retraces —
 the whole gate is a few seconds of XLA work.
@@ -326,6 +331,57 @@ def gate_skew(rt, label):
           f"across {APPENDS} hot-churn appends")
 
 
+def gate_partition(rt, label):
+    """ISSUE 10: partitioned retention — appends landing in ONE
+    partition, a drop of ANOTHER, and a rolling ``retain`` sweep must
+    leave every surviving read site compiled: survivors' subtrees are
+    the same objects (drop is treedef-only), so the partition layer's
+    per-partition jitted sites never retrace (DESIGN.md §16)."""
+    from repro.core import partition as partition_mod
+    from repro.frame import PartitionSpec
+    rng = np.random.default_rng(7)
+    spec = PartitionSpec.range_("k", [0, 64, 128, 192, 256],
+                                ids=["p0", "p1", "p2", "p3"])
+    cols = {"k": rng.integers(0, 256, 600).astype(np.int64),
+            "v": rng.random(600).astype(np.float32)}
+    kw = {} if rt is None else dict(num_shards=4, rt=rt)
+    fr = IndexedFrame.from_columns(cols, SCH, rows_per_batch=64,
+                                   partition_by=spec, **kw)
+    q = rng.integers(0, 256, 32).astype(np.int64)
+    pc = {"pk": q, "tag": np.arange(32, dtype=np.int32)}
+    base = partition_mod.site_traces()
+    base_exp = partition_mod.expected_site_traces()
+
+    def read():
+        jax.block_until_ready(fr.lookup(q, max_matches=4)[1])
+        jax.block_until_ready(fr.join(pc, "pk", max_matches=4)[2])
+
+    read()                                      # warmup: compile the sites
+    warm = partition_mod.site_traces() - base
+    for i in range(APPENDS):                    # appends into ONE partition
+        fr = fr.append({"k": rng.integers(64, 128, 8).astype(np.int64),
+                        "v": rng.random(8).astype(np.float32)})
+        read()
+    fr = fr.drop_partition("p3")                # drop of ANOTHER partition
+    read()
+    fr = fr.retain(min_value=64)                # rolling retention sweep
+    read()
+    traced = partition_mod.site_traces() - base
+    expected = partition_mod.expected_site_traces() - base_exp
+    if traced != warm:
+        fail(f"partition ({label}): {traced - warm} retraces of surviving "
+             f"read sites across {APPENDS} appends + drop + retain "
+             f"(expected 0 after {warm} warmup traces)")
+    if traced != expected:
+        fail(f"partition ({label}): {traced} traces vs {expected} distinct "
+             f"site fingerprints (expected equal)")
+    if fr.num_partitions != 2:
+        fail(f"partition ({label}): expected 2 surviving partitions, "
+             f"got {fr.num_partitions}")
+    print(f"  partition ({label}): {warm} site compiles, 0 retraces "
+          f"across {APPENDS} appends + drop + retain")
+
+
 def main():
     print(f"trace gate: {len(jax.devices())} device(s), "
           f"backend={jax.default_backend()}")
@@ -333,6 +389,7 @@ def main():
     gate_frame_single()
     gate_queue(None, "local")
     gate_serving(None, "local")
+    gate_partition(None, "local")
     try:
         from repro.dist import mesh
     except ImportError:
@@ -343,12 +400,14 @@ def main():
     gate_queue(mesh.vmap_runtime(), "vmap")
     gate_serving(mesh.vmap_runtime(), "vmap")
     gate_skew(mesh.vmap_runtime(), "vmap")
+    gate_partition(mesh.vmap_runtime(), "vmap")
     if len(jax.devices()) >= 4:
         gate_distributed(mesh.mesh_runtime(4), "shard_map")
         gate_frame_distributed(mesh.mesh_runtime(4), "shard_map")
         gate_queue(mesh.mesh_runtime(4), "shard_map")
         gate_serving(mesh.mesh_runtime(4), "shard_map")
         gate_skew(mesh.mesh_runtime(4), "shard_map")
+        gate_partition(mesh.mesh_runtime(4), "shard_map")
     else:
         print("  shard_map gate skipped (<4 devices; ci.sh's forced-8 "
               "pass covers it)")

@@ -12,7 +12,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 __version__ = "1.0.0"
-__all__ = ["FramePlan", "IndexedFrame"]
+__all__ = ["FramePlan", "IndexedFrame", "PartitionSpec"]
 
 
 def __getattr__(name):

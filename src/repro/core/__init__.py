@@ -20,12 +20,21 @@ from repro.core.table import (IndexedTable, FlatView, AppendQueue,
                               append, compact, empty_queue, enqueue,
                               flush_queue, queue_pending)
 from repro.core.hashindex import HashIndex, build_index, probe, chain_walk
-from repro.core import joins, planner
+from repro.core.hashing import StringDictionary
+from repro.core.partition import (PartitionSpec, PartitionedTable,
+                                  append_partitioned, create_partitioned,
+                                  drop_partition, join_partitioned,
+                                  lookup_partitioned, retain)
+from repro.core import joins, partition, planner
 
 __all__ = [
     "Schema", "Column", "IndexedTable", "Snapshot", "FlatBlock", "FlatView",
-    "AppendQueue", "QueueOverflow", "coalesce_deltas", "create_index",
+    "AppendQueue", "PartitionSpec", "PartitionedTable", "QueueOverflow",
+    "append_partitioned", "coalesce_deltas", "create_index",
+    "create_partitioned", "drop_partition",
     "append", "compact", "empty_queue", "enqueue", "flush_queue",
-    "queue_pending", "HashIndex", "build_index", "probe", "chain_walk",
-    "joins", "planner",
+    "join_partitioned", "lookup_partitioned",
+    "queue_pending", "retain", "HashIndex", "StringDictionary",
+    "build_index", "probe",
+    "chain_walk", "joins", "partition", "planner",
 ]

@@ -1,0 +1,751 @@
+"""Partitioned indexes: the partition map + pruning + O(1) retention.
+
+SNIPPETS Snippet 3's "Index Partitioning" pattern, grown onto the arena
+machinery: a ``PartitionedTable`` groups per-partition ``IndexedTable``s
+(or ``DistributedTable``s — partition-major, shard-minor) under ONE
+``PartitionSpec`` describing range or list partitioning on a designated
+column.  Each partition keeps its own capacity class, snapshot, and MVCC
+machinery — ``create_index`` / ``_ingest_arrays`` / ``append`` are reused
+unchanged per partition — while the spec lives as **treedef metadata**:
+
+* routing never retraces (the spec is hashable, compared by value, and
+  participates in the jit cache key exactly like ``Schema``);
+* ``drop_partition`` is an O(1) *structural* removal — the surviving
+  partitions' subtrees are untouched, so every jitted read site keyed on
+  a survivor keeps its compile-cache entry (zero recompiles, gated by
+  ``scripts/trace_gate.py gate_partition``);
+* appends route host-side on the partition column and land ONLY in the
+  receiving partitions — the other partitions' leaves are not even
+  copied.
+
+Read pruning is exact when the partition column IS the schema key (each
+key's rows then live in exactly one partition, and per-partition
+newest-first equals global newest-first): a point-lookup batch is routed
+host-side, each touched partition probes the full-shape key vector with
+non-members masked to the ``EMPTY_KEY`` guaranteed-miss sentinel (static
+shapes — one trace per partition structure), and results merge by
+validity.  Partitions the batch never touches run NOTHING — under the
+distributed backend that means the routed/broadcast exchange is skipped
+entirely for non-matching partitions.  Partitioning on a non-key column
+still gives filter pruning (planner rule P2) and retention; keyed reads
+on such a table are rejected with a clear error rather than silently
+merging cross-partition match lists.
+
+Invalid output lanes are ZEROED (the merge only writes valid matches);
+the monolithic path leaves row-0 garbage there.  Comparisons therefore
+mask by validity — see tests/test_partition.py.
+
+Trace accounting (the ``QUEUE_TRACES`` pattern): every per-partition
+jitted read site bumps ``PARTITION_TRACES`` at trace time and records
+the (flavor, structure, shapes) fingerprint it *should* compile for in
+``_SITE_USE`` — ``site_traces() == expected_site_traces()`` is the
+zero-retrace proof the gate asserts across appends, drops, and
+retention sweeps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import joins
+from repro.core import table as table_mod
+from repro.core.hashindex import EMPTY_KEY
+from repro.core.schema import Schema
+
+# Trace counters for the zero-retrace gate (scripts/trace_gate.py
+# gate_partition) — bumped inside jitted site bodies, so they count
+# TRACES, not calls.
+PARTITION_TRACES = {"lookup": 0}
+
+# Fingerprints of every (flavor, table structure, query shape) a site was
+# driven with: the number of compiles that SHOULD exist.
+_SITE_USE: set = set()
+
+_EMPTY_NP = np.int64(np.asarray(EMPTY_KEY))
+
+
+def site_traces() -> int:
+    """Total per-partition read-site traces so far."""
+    return PARTITION_TRACES["lookup"]
+
+
+def expected_site_traces() -> int:
+    """Distinct (flavor, structure, shape) combinations driven — compare
+    with ``site_traces()``: equal means zero retraces."""
+    return len(_SITE_USE)
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpec — hashable treedef metadata
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """Range or list partitioning on ``column`` — hashable by value, so it
+    rides as treedef metadata (like ``Schema``) and partition routing never
+    retraces.
+
+    * ``kind="range"``: ``ranges[i] = (lo, hi)`` — partition ``i`` owns
+      values in ``[lo, hi)``.  Ranges are ascending and disjoint but need
+      not be contiguous (drops leave holes; values in a hole are
+      unmapped).
+    * ``kind="list"``: ``values[i]`` — the explicit member set of
+      partition ``i``.
+
+    ``ids`` are stable human-readable partition names (``explain()`` and
+    the retention API speak in them).  ``EMPTY_KEY`` (int64 min) is the
+    reserved guaranteed-miss sentinel and is never mapped.
+    """
+
+    column: str
+    kind: str                                     # "range" | "list"
+    ranges: tuple = ()                            # ((lo, hi), ...) ascending
+    values: tuple = ()                            # ((v, ...), ...) disjoint
+    ids: tuple = ()
+
+    def __post_init__(self):
+        if self.kind not in ("range", "list"):
+            raise ValueError(f"kind must be 'range' or 'list', "
+                             f"got {self.kind!r}")
+        n = self.num_partitions
+        if n == 0:
+            raise ValueError("a partition spec needs at least one partition")
+        if len(self.ids) != n or len(set(self.ids)) != n:
+            raise ValueError("ids must be unique, one per partition")
+        if self.kind == "range":
+            for lo, hi in self.ranges:
+                if not lo < hi:
+                    raise ValueError(f"empty range [{lo}, {hi})")
+            for (_, hi), (lo, _) in zip(self.ranges, self.ranges[1:]):
+                if lo < hi:
+                    raise ValueError("ranges must be ascending and disjoint")
+        else:
+            flat = [v for grp in self.values for v in grp]
+            if len(set(flat)) != len(flat) or \
+                    any(not grp for grp in self.values):
+                raise ValueError("list partitions must be non-empty and "
+                                 "disjoint")
+            if int(_EMPTY_NP) in flat:
+                raise ValueError("EMPTY_KEY is the reserved miss sentinel "
+                                 "and cannot be a partition member")
+
+    # -- constructors ---------------------------------------------------------
+
+    @classmethod
+    def range_(cls, column: str, cuts, ids=None) -> "PartitionSpec":
+        """Contiguous range partitions from ascending cut points:
+        ``cuts=[c0, c1, c2]`` -> partitions ``[c0,c1)``, ``[c1,c2)``."""
+        cuts = [int(c) for c in cuts]
+        if len(cuts) < 2 or cuts != sorted(set(cuts)):
+            raise ValueError("cuts must be >= 2 strictly ascending values")
+        ranges = tuple(zip(cuts, cuts[1:]))
+        ids = (tuple(ids) if ids is not None
+               else tuple(f"p{i}" for i in range(len(ranges))))
+        return cls(column=column, kind="range", ranges=ranges, ids=ids)
+
+    @classmethod
+    def list_(cls, column: str, groups, ids=None) -> "PartitionSpec":
+        """Explicit member-set partitions: ``groups=[(1, 2), (7,)]``."""
+        vals = tuple(tuple(int(v) for v in g) for g in groups)
+        ids = (tuple(ids) if ids is not None
+               else tuple(f"p{i}" for i in range(len(vals))))
+        return cls(column=column, kind="list", values=vals, ids=ids)
+
+    # -- shape facts ----------------------------------------------------------
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self.ranges) if self.kind == "range" else len(self.values)
+
+    def describe(self, i: int) -> str:
+        if self.kind == "range":
+            lo, hi = self.ranges[i]
+            return f"{self.ids[i]}=[{lo},{hi})"
+        return f"{self.ids[i]}={{{','.join(map(str, self.values[i]))}}}"
+
+    def index_of(self, pid) -> int:
+        """Partition index for an id (or a pass-through index)."""
+        if isinstance(pid, str):
+            try:
+                return self.ids.index(pid)
+            except ValueError:
+                raise KeyError(f"no partition named {pid!r}; "
+                               f"have {self.ids}") from None
+        i = int(pid)
+        if not 0 <= i < self.num_partitions:
+            raise IndexError(f"partition {i} out of range "
+                             f"[0, {self.num_partitions})")
+        return i
+
+    # -- routing (host-side, exact — mirrors the dist ingest router) ----------
+
+    def route_host(self, vals) -> np.ndarray:
+        """Owning partition index per value, ``-1`` = unmapped (including
+        the ``EMPTY_KEY`` sentinel — pad lanes never touch a partition)."""
+        v = np.asarray(vals).astype(np.int64).reshape(-1)
+        out = np.full(v.shape, -1, np.int32)
+        if self.kind == "range":
+            los = np.array([r[0] for r in self.ranges], np.int64)
+            his = np.array([r[1] for r in self.ranges], np.int64)
+            i = np.searchsorted(los, v, side="right") - 1
+            ok = (i >= 0) & (v < his[np.clip(i, 0, None)])
+            out[ok] = i[ok]
+        else:
+            flat = np.array([x for g in self.values for x in g], np.int64)
+            part = np.array([p for p, g in enumerate(self.values)
+                             for _ in g], np.int32)
+            order = np.argsort(flat)
+            flat, part = flat[order], part[order]
+            i = np.searchsorted(flat, v)
+            ok = (i < flat.shape[0]) & (flat[np.clip(i, 0, None)] == v)
+            out[ok] = part[i[ok]]
+        out[v == _EMPTY_NP] = -1
+        return out
+
+    def partition_of(self, value) -> int:
+        return int(self.route_host(np.asarray([value]))[0])
+
+    # -- pruning --------------------------------------------------------------
+
+    def prune_eq(self, value) -> tuple:
+        p = self.partition_of(value)
+        return () if p < 0 else (p,)
+
+    def prune_lt(self, value) -> tuple:
+        """Partitions that can hold any row with ``column < value``."""
+        value = int(value)
+        if self.kind == "range":
+            return tuple(i for i, (lo, _) in enumerate(self.ranges)
+                         if lo < value)
+        return tuple(i for i, g in enumerate(self.values)
+                     if any(v < value for v in g))
+
+    # -- retention ------------------------------------------------------------
+
+    def drop(self, i: int) -> "PartitionSpec":
+        i = self.index_of(i)
+        if self.num_partitions == 1:
+            raise ValueError("cannot drop the last partition")
+        cut = lambda t: t[:i] + t[i + 1:]
+        return dataclasses.replace(
+            self, ids=cut(self.ids),
+            ranges=cut(self.ranges) if self.kind == "range" else (),
+            values=cut(self.values) if self.kind == "list" else ())
+
+
+# ---------------------------------------------------------------------------
+# PartitionedTable — the grouped pytree
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["parts", "version"], meta_fields=["spec"])
+@dataclasses.dataclass(frozen=True)
+class PartitionedTable:
+    """Per-partition tables under one spec and one global MVCC version.
+
+    ``parts`` is a tuple of ``IndexedTable`` | ``DistributedTable`` — a
+    pytree container, so each partition is its own subtree: appends into
+    one partition leave every other partition's leaves untouched, and a
+    ``drop_partition`` removes a subtree without perturbing the
+    survivors (their per-partition jitted read sites keep their compile
+    cache — the O(1) retention contract).  ``spec`` is treedef metadata;
+    ``version`` is the global MVCC scalar (one bump per append / drop /
+    retention sweep / compact)."""
+
+    parts: tuple
+    version: jax.Array
+    spec: PartitionSpec
+
+    @property
+    def schema(self) -> Schema:
+        return self.parts[0].schema
+
+    @property
+    def rows_per_batch(self) -> int:
+        return self.parts[0].rows_per_batch
+
+    @property
+    def layout(self) -> str:
+        return self.parts[0].layout
+
+    @property
+    def slots(self) -> int:
+        return self.parts[0].slots
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self.parts)
+
+    @property
+    def partition_ids(self) -> tuple:
+        return self.spec.ids
+
+    @property
+    def dist(self) -> bool:
+        """True when partitions are shard-stacked (partition-major,
+        shard-minor)."""
+        return hasattr(self.parts[0], "num_shards")
+
+    @property
+    def shards_per_partition(self) -> int:
+        return int(self.parts[0].num_shards) if self.dist else 1
+
+    def num_rows(self):
+        return sum(int(np.asarray(p.num_rows())) for p in self.parts)
+
+    def index_nbytes(self, **kw) -> int:
+        return sum(int(p.index_nbytes(**kw)) for p in self.parts)
+
+    def data_nbytes(self, **kw) -> int:
+        return sum(int(p.data_nbytes(**kw)) for p in self.parts)
+
+    def with_flat_data(self) -> "PartitionedTable":
+        if self.dist:
+            return self
+        return dataclasses.replace(
+            self, parts=tuple(p.with_flat_data() for p in self.parts))
+
+    def per_partition_bytes(self) -> list:
+        """Logical vs reserved bytes per partition — arena slack in cold
+        partitions is no longer attributed to the hot window
+        (benchmarks/memory_overhead.py; data/store.py)."""
+        out = []
+        for i, p in enumerate(self.parts):
+            out.append({
+                "partition": self.spec.ids[i],
+                "desc": self.spec.describe(i),
+                "rows": int(np.asarray(p.num_rows())),
+                "index_logical": int(p.index_nbytes(logical=True)),
+                "index_reserved": int(p.index_nbytes()),
+                "data_logical": int(p.data_nbytes(logical=True)),
+                "data_reserved": int(p.data_nbytes()),
+            })
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Construction + the write path (host routing, per-partition arenas)
+# ---------------------------------------------------------------------------
+
+def _dd():
+    from repro.dist import dtable
+    return dtable
+
+
+def split_by_partition(spec: PartitionSpec, cols: dict, valid=None,
+                       *, strict: bool = True) -> list:
+    """Host-route a delta: ``[(partition_index, sub_cols, sub_valid), ...]``
+    for the partitions that receive rows.  ``strict`` rejects valid rows
+    whose partition-column value maps to no partition (the append
+    contract — silently dropping rows is how data loss happens)."""
+    pvals = np.asarray(cols[spec.column]).reshape(-1)
+    n = pvals.shape[0]
+    v = (np.ones(n, bool) if valid is None
+         else np.asarray(valid, bool).reshape(-1))
+    dest = spec.route_host(pvals)
+    if strict:
+        bad = v & (dest < 0)
+        if bad.any():
+            sample = np.unique(pvals[bad])[:8]
+            raise ValueError(
+                f"{int(bad.sum())} row(s) have partition-column "
+                f"{spec.column!r} values outside every partition "
+                f"(e.g. {sample.tolist()}); extend the spec or drop them")
+    out = []
+    for p in np.unique(dest[v & (dest >= 0)]):
+        m = v & (dest == p)
+        sub = {k: np.asarray(c)[m] for k, c in cols.items()}
+        out.append((int(p), sub, None))
+    return out
+
+
+def _empty_part_cols(schema: Schema) -> tuple:
+    """A one-row all-invalid placeholder: the cheapest buildable arena
+    (``create_index`` wants >= 1 row; the row is never visible)."""
+    cols = {c.name: np.zeros(1, np.dtype(c.dtype)) for c in schema.columns}
+    return cols, np.zeros(1, bool)
+
+
+def create_partitioned(cols: dict, schema: Schema, spec: PartitionSpec, *,
+                       num_shards: int = 1, rt=None,
+                       rows_per_batch: int = 4096, layout: str = "row",
+                       slots: int | None = None, valid=None,
+                       reserve: int | None = None,
+                       track_hot: int | None = None,
+                       hot_mode: str = "topk") -> PartitionedTable:
+    """Route the creation columns by ``spec.column`` and build one arena
+    per partition (every partition in the spec is built — empty ones get
+    a placeholder arena so later appends land in an existing capacity
+    class).  ``num_shards > 1`` builds each partition shard-stacked:
+    partition-major, shard-minor."""
+    if spec.column not in schema.names:
+        raise ValueError(f"partition column {spec.column!r} not in schema "
+                         f"{schema.names}")
+    kw = {} if slots is None else {"slots": slots}
+    routed = dict()
+    for p, sub, _ in split_by_partition(spec, cols, valid):
+        routed[p] = sub
+    parts = []
+    for p in range(spec.num_partitions):
+        if p in routed:
+            pc, pv = routed[p], None
+        else:
+            pc, pv = _empty_part_cols(schema)
+        if num_shards == 1:
+            t = table_mod.create_index(
+                pc, schema, rows_per_batch=rows_per_batch, layout=layout,
+                valid=pv, reserve=reserve, track_hot=track_hot,
+                hot_mode=hot_mode, **kw)
+        else:
+            t = _dd().create_distributed(
+                pc, schema, num_shards, rows_per_batch=rows_per_batch,
+                layout=layout, valid=pv, reserve=reserve, rt=rt,
+                track_hot=track_hot, hot_mode=hot_mode, **kw)
+        parts.append(t)
+    return PartitionedTable(parts=tuple(parts), spec=spec,
+                            version=jnp.asarray(0, jnp.int32))
+
+
+def append_partitioned(pt: PartitionedTable, cols: dict, valid=None, *,
+                       rt=None, donate: bool = False,
+                       compact_threshold: int | None = None
+                       ) -> PartitionedTable:
+    """MVCC append, routed: only the receiving partitions' arenas ingest
+    (in-class appends there change no leaf shapes), every other partition
+    is carried through BY REFERENCE — surviving read sites never retrace.
+    One global version bump for the whole delta."""
+    parts = list(pt.parts)
+    for p, sub, sub_valid in split_by_partition(pt.spec, cols, valid):
+        if pt.dist:
+            parts[p] = _dd().append_distributed(
+                parts[p], sub, sub_valid, rt=rt, donate=donate,
+                compact_threshold=compact_threshold)
+        else:
+            parts[p] = table_mod.append(
+                parts[p], sub, sub_valid, donate=donate,
+                compact_threshold=compact_threshold)
+    return dataclasses.replace(pt, parts=tuple(parts),
+                               version=pt.version + 1)
+
+
+def compact_partitioned(pt: PartitionedTable, *, rt=None,
+                        reserve: int | None = None) -> PartitionedTable:
+    parts = []
+    for p in pt.parts:
+        if pt.dist:
+            parts.append(_dd().compact_distributed(p, rt=rt,
+                                                   reserve=reserve))
+        else:
+            parts.append(table_mod.compact(p, reserve=reserve))
+    return dataclasses.replace(pt, parts=tuple(parts),
+                               version=pt.version + 1)
+
+
+# ---------------------------------------------------------------------------
+# Retention: O(1) drop + rolling retain
+# ---------------------------------------------------------------------------
+
+def drop_partition(pt: PartitionedTable, pid) -> PartitionedTable:
+    """O(1) retention: remove one partition STRUCTURALLY — a treedef-meta
+    change plus one version bump.  No data moves, nothing compacts, and
+    the surviving partitions' subtrees are the SAME objects, so jitted
+    read sites keyed on them keep their compile cache (gate_partition
+    proves zero retraces)."""
+    i = pt.spec.index_of(pid)
+    return dataclasses.replace(
+        pt, parts=pt.parts[:i] + pt.parts[i + 1:], spec=pt.spec.drop(i),
+        version=pt.version + 1)
+
+
+def retain(pt: PartitionedTable, *, min_value=None,
+           keep=None) -> PartitionedTable:
+    """Rolling retention sweep.  ``min_value`` (range specs): drop every
+    partition wholly below it — the logs/events expiry the paper never
+    reaches, O(#dropped) metadata work and zero device work.  ``keep``
+    (any spec): the ids to survive.  One version bump for the sweep."""
+    if (min_value is None) == (keep is None):
+        raise ValueError("pass exactly one of min_value= or keep=")
+    if min_value is not None:
+        if pt.spec.kind != "range":
+            raise ValueError("min_value retention needs a range spec; "
+                             "use keep= for list specs")
+        drop_ids = [pt.spec.ids[i]
+                    for i, (_, hi) in enumerate(pt.spec.ranges)
+                    if hi <= int(min_value)]
+    else:
+        keep = set(keep)
+        unknown = keep - set(pt.spec.ids)
+        if unknown:
+            raise KeyError(f"unknown partition ids {sorted(unknown)}")
+        drop_ids = [pid for pid in pt.spec.ids if pid not in keep]
+    if len(drop_ids) == pt.num_partitions:
+        raise ValueError("retention would drop every partition")
+    if not drop_ids:
+        return pt
+    new = pt
+    for pid in drop_ids:
+        i = new.spec.index_of(pid)
+        new = dataclasses.replace(
+            new, parts=new.parts[:i] + new.parts[i + 1:],
+            spec=new.spec.drop(i))
+    return dataclasses.replace(new, version=pt.version + 1)
+
+
+# ---------------------------------------------------------------------------
+# Reads: pruned per-partition sites + validity merge
+# ---------------------------------------------------------------------------
+
+DEFAULT_ROUTED_THRESHOLD = 4096
+
+
+def _check_keyed(pt: PartitionedTable, what: str):
+    if pt.spec.column != pt.schema.key:
+        raise ValueError(
+            f"{what} on a partitioned frame needs the partition column to "
+            f"BE the indexed key (partitioned on {pt.spec.column!r}, key "
+            f"is {pt.schema.key!r}): a key's matches could otherwise span "
+            f"partitions and the per-partition merge would reorder them. "
+            f"Use filter() — planner rule P2 prunes scans on the "
+            f"partition column — or partition on the key.")
+
+
+def part_flavor(pt: PartitionedTable, num_queries: int, *,
+                routed_threshold: int = DEFAULT_ROUTED_THRESHOLD) -> str:
+    """The per-partition lookup flavor (the planner's L-rules applied
+    inside each partition): local fused probe, or broadcast vs routed
+    across the partition's shards."""
+    if not pt.dist:
+        return "local"
+    return ("routed" if num_queries >= routed_threshold else "bcast")
+
+
+@functools.lru_cache(maxsize=None)
+def _lookup_site(flavor: str, max_matches: int, names, rt):
+    """ONE jitted read site per (flavor, max_matches, names, runtime) —
+    shared by every partition whose structure matches (jit adds the
+    structure/shape dimension to the cache key).  The body bumps
+    PARTITION_TRACES at trace time: the gate's retrace counter."""
+    if flavor == "local":
+        def f(part, keys):
+            PARTITION_TRACES["lookup"] += 1
+            return joins.indexed_lookup(part, keys,
+                                        max_matches=max_matches, names=names)
+    elif flavor == "bcast":
+        def f(part, keys):
+            PARTITION_TRACES["lookup"] += 1
+            cols, valid, _ = _dd().lookup(part, keys,
+                                          max_matches=max_matches,
+                                          names=names, rt=rt)
+            return cols, valid
+    elif flavor == "routed":
+        def f(part, keys):
+            PARTITION_TRACES["lookup"] += 1
+            return _dd().lookup_routed_flat(part, keys,
+                                           max_matches=max_matches,
+                                           names=names, rt=rt)
+    else:
+        raise ValueError(f"unknown partition lookup flavor {flavor!r}")
+    return jax.jit(f)
+
+
+def _fingerprint(part, keys_shape, flavor, max_matches, names, rt):
+    leaves = jax.tree_util.tree_leaves(part)
+    shapes = tuple((tuple(np.shape(l)), str(np.asarray(l).dtype)
+                    if not isinstance(l, jax.Array) else str(l.dtype))
+                   for l in leaves)
+    return (flavor, max_matches, names, rt,
+            jax.tree_util.tree_structure(part), shapes, tuple(keys_shape))
+
+
+def _out_names(pt: PartitionedTable, names) -> tuple:
+    return tuple(names) if names is not None else pt.schema.names
+
+
+def _raw_lookup(flavor, part, keys, max_matches, names, rt):
+    """The un-jitted per-partition lookup (the scan-all tracer path runs
+    inside the CALLER's trace, so no site cache applies)."""
+    if flavor == "local":
+        return joins.indexed_lookup(part, keys, max_matches=max_matches,
+                                    names=names)
+    if flavor == "bcast":
+        cols, valid, _ = _dd().lookup(part, keys, max_matches=max_matches,
+                                      names=names, rt=rt)
+        return cols, valid
+    return _dd().lookup_routed_flat(part, keys, max_matches=max_matches,
+                                    names=names, rt=rt)
+
+
+def lookup_partitioned(pt: PartitionedTable, keys, *, max_matches: int,
+                       names=None, rt=None,
+                       routed_threshold: int = DEFAULT_ROUTED_THRESHOLD):
+    """Pruned point lookup: rows for each key, newest-first, bit-identical
+    (on valid lanes) to the monolithic frame.
+
+    Host-concrete keys route on the partition spec; each TOUCHED
+    partition probes the full-shape batch with non-members masked to the
+    guaranteed-miss sentinel (static shapes, one compile per partition
+    structure) and the [Q, M] results merge by validity — disjoint by
+    construction because the partition column is the key.  Partitions no
+    key maps to are never probed: under ``dist`` their exchange is
+    skipped entirely.  Tracer keys (the caller is inside jit) fall back
+    to scanning every partition in-trace — correct, unpruned.
+    """
+    joins.check_max_matches(max_matches)
+    _check_keyed(pt, "lookup")
+    keys_j = joins.as_int64_keys(keys)
+    names_t = None if names is None else tuple(names)
+    sel = _out_names(pt, names_t)
+    q = int(keys_j.shape[0])
+    flavor = part_flavor(pt, q, routed_threshold=routed_threshold)
+
+    if isinstance(keys_j, jax.core.Tracer):
+        out_cols = {n: jnp.zeros((q, max_matches),
+                                 pt.schema.column(n).jnp_dtype) for n in sel}
+        out_valid = jnp.zeros((q, max_matches), bool)
+        for part in pt.parts:
+            c, v = _raw_lookup(flavor, part, keys_j, max_matches, names_t,
+                               rt)
+            out_valid = out_valid | v
+            out_cols = {n: jnp.where(v, c[n], out_cols[n]) for n in sel}
+        return out_cols, out_valid
+
+    keys_np = np.asarray(keys_j)
+    dest = pt.spec.route_host(keys_np)
+    touched = [int(p) for p in np.unique(dest[dest >= 0])]
+    out_cols = {n: jnp.zeros((q, max_matches),
+                             pt.schema.column(n).jnp_dtype) for n in sel}
+    out_valid = jnp.zeros((q, max_matches), bool)
+    fn = _lookup_site(flavor, max_matches, names_t, rt)
+    for p in touched:
+        masked = np.where(dest == p, keys_np, _EMPTY_NP)
+        _SITE_USE.add(_fingerprint(pt.parts[p], masked.shape, flavor,
+                                   max_matches, names_t, rt))
+        c, v = fn(pt.parts[p], jnp.asarray(masked))
+        out_valid = out_valid | v
+        out_cols = {n: jnp.where(v, c[n], out_cols[n]) for n in sel}
+    return out_cols, out_valid
+
+
+def join_partitioned(pt: PartitionedTable, probe_cols: dict, on: str, *,
+                     max_matches: int, names=None, rt=None,
+                     routed_threshold: int = DEFAULT_ROUTED_THRESHOLD):
+    """Pruned equi-join, ``pt`` as build side: per-partition local joins —
+    each probe row's key owns exactly one partition, so there is no
+    cross-partition exchange at all (planner rule P3); partitions no
+    probe key maps to run nothing.  Output contract matches
+    ``joins.indexed_join``: (build_cols [Q, M], probe broadcast [Q, M],
+    valid [Q, M]) in probe order.  ``on`` names the PROBE column (the
+    ``indexed_join`` contract) — the build side always joins on its
+    indexed key, which ``_check_keyed`` requires to be the partition
+    column."""
+    if on not in probe_cols:
+        raise ValueError(f"probe column {on!r} not in probe_cols "
+                         f"{sorted(probe_cols)}")
+    _check_keyed(pt, "join")
+    keys = joins.as_int64_keys(probe_cols[on])
+    bc, valid = lookup_partitioned(pt, keys, max_matches=max_matches,
+                                   names=names, rt=rt,
+                                   routed_threshold=routed_threshold)
+    m = valid.shape[1]
+    probe_b = {k: jnp.broadcast_to(jnp.asarray(v)[:, None],
+                                   (jnp.shape(v)[0], m))
+               for k, v in probe_cols.items()}
+    return bc, probe_b, valid
+
+
+def collect_partitions(pt: PartitionedTable, kept=None, *, rt=None):
+    """Materialize (cols, valid) across ``kept`` partition indices (all
+    when None) — the pruned-scan executor behind planner rule P2."""
+    kept = range(pt.num_partitions) if kept is None else kept
+    cols = {n: [] for n in pt.schema.names}
+    valid = []
+    for i in kept:
+        part = pt.parts[i]
+        if pt.dist:
+            c = _dd().collect_cols(part, rt=rt)
+            n = np.shape(next(iter(c.values())))[0]
+            v = np.ones(n, bool)
+            for name in pt.schema.names:
+                cols[name].append(np.asarray(c[name]))
+            valid.append(v)
+        else:
+            v = None
+            for name in pt.schema.names:
+                vals, pv = part.scan_column(name)
+                cols[name].append(np.asarray(vals))
+                v = np.asarray(pv)
+            valid.append(v)
+    if not valid:
+        return ({n: jnp.zeros(0, pt.schema.column(n).jnp_dtype)
+                 for n in pt.schema.names}, jnp.zeros(0, bool))
+    return ({n: jnp.asarray(np.concatenate(cols[n]))
+             for n in pt.schema.names},
+            jnp.asarray(np.concatenate(valid)))
+
+
+# ---------------------------------------------------------------------------
+# Persistence + elasticity (per-partition checkpoint subdirs)
+# ---------------------------------------------------------------------------
+
+def _ckpt():
+    from repro.dist import checkpoint
+    return checkpoint
+
+
+def spec_to_dict(spec: PartitionSpec) -> dict:
+    return {"column": spec.column, "kind": spec.kind,
+            "ranges": [list(r) for r in spec.ranges],
+            "values": [list(g) for g in spec.values],
+            "ids": list(spec.ids)}
+
+
+def spec_from_dict(d: dict) -> PartitionSpec:
+    return PartitionSpec(column=d["column"], kind=d["kind"],
+                         ranges=tuple(tuple(r) for r in d["ranges"]),
+                         values=tuple(tuple(g) for g in d["values"]),
+                         ids=tuple(d["ids"]))
+
+
+def save_partitioned(path: str, pt: PartitionedTable):
+    """Checkpoint: one subdir per partition (CRC-verified leaf format)
+    plus the spec + global version as JSON meta."""
+    os.makedirs(path, exist_ok=True)
+    meta = {"spec": spec_to_dict(pt.spec), "dist": pt.dist,
+            "version": int(np.asarray(pt.version))}
+    with open(os.path.join(path, "partitions.json"), "w") as f:
+        json.dump(meta, f)
+    for i, part in enumerate(pt.parts):
+        sub = os.path.join(path, f"part_{pt.spec.ids[i]}")
+        if pt.dist:
+            _ckpt().save_dtable(sub, part)
+        else:
+            _ckpt().save_table(sub, part)
+
+
+def restore_partitioned(path: str, like: PartitionedTable
+                        ) -> PartitionedTable:
+    """Restore into ``like``'s structure (``like`` supplies treedefs and
+    the runtime, per-partition)."""
+    with open(os.path.join(path, "partitions.json")) as f:
+        meta = json.load(f)
+    spec = spec_from_dict(meta["spec"])
+    if spec != like.spec:
+        raise ValueError(f"checkpoint spec {spec} != like.spec {like.spec}")
+    parts = []
+    for i, part in enumerate(like.parts):
+        sub = os.path.join(path, f"part_{spec.ids[i]}")
+        if like.dist:
+            parts.append(_ckpt().restore_dtable(sub, part))
+        else:
+            parts.append(_ckpt().restore_table(sub, part))
+    return dataclasses.replace(
+        like, parts=tuple(parts),
+        version=jnp.asarray(meta["version"], jnp.int32))

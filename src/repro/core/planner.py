@@ -40,6 +40,20 @@ rules that used to live as caller-facing helpers (``dist.choose_lookup`` /
   J4  as J3 but a hot-key mirror covers max_matches -> HybridJoin (hot
       probe keys join against the mirror locally, cold tail shuffles)
 
+Partition rules (core/partition.py — a PartitionedTable build target;
+checked BEFORE the dist rules, since partitions compose with sharding
+partition-major/shard-minor):
+
+  P1  point lookup on the partition key      -> PartitionedLookup: route the
+      batch host-side, probe ONLY the touched partitions (explain() names
+      scanned vs pruned partition ids; tracer keys scan all, in-trace)
+  P2  range/list predicate on the partition column in a filter
+                                             -> PartitionedFilter: prune the
+      partition set by the predicate, then scan-filter the survivors
+  P3  equi-join on the partition key         -> PartitionedJoin: per-partition
+      local joins — no cross-partition exchange at all; partitions no probe
+      key maps to run nothing
+
 Reason strings are UNIFORM across every L/J rule: ``"<rule>: <detail>
 [est_fanout=<per-query shard fan-out>]"`` — bcast flavors report ``s``x
 (every shard touches the batch), routed/shuffle ``1``x (+2 all_to_alls),
@@ -58,10 +72,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import joins
+from repro.core import partition as partition_mod
 from repro.core.table import IndexedTable
 
 
@@ -70,6 +86,20 @@ def _is_dist(table) -> bool:
     module never imports ``repro.dist`` at module scope (dist imports the
     planner for its cost rules; execution imports dist lazily)."""
     return table is not None and hasattr(table, "num_shards")
+
+
+def _is_parted(table) -> bool:
+    """Partitioned build targets (core/partition.py PartitionedTable) —
+    duck-typed like ``_is_dist`` and checked FIRST: a PartitionedTable has
+    no ``num_shards`` itself (its partitions may)."""
+    return (table is not None and hasattr(table, "spec")
+            and hasattr(table, "parts"))
+
+
+def _parted_keyed(table) -> bool:
+    """True when keyed reads on a partitioned table are well-defined (the
+    partition column IS the indexed key — the P1/P3 precondition)."""
+    return table.spec.column == table.schema.key
 
 
 # --- expressions ------------------------------------------------------------
@@ -165,6 +195,7 @@ class Physical:
     reason: str
     node: Any
     children: tuple = ()
+    meta: Any = None     # operator payload (e.g. P2's kept partition indices)
 
     def explain(self, depth: int = 0) -> str:
         pad = "  " * depth
@@ -244,9 +275,88 @@ class Planner:
                 f"{self.bcast_threshold} -> shuffle probe rows to their "
                 f"owning shard [est_fanout=1x]")
 
-    def physical_lookup(self, table, num_queries: int) -> Physical:
-        """Physical operator for a point-lookup over ``table`` (either
+    # -- partition pruning (rules P1-P3) --------------------------------------
+    def _prune_sets(self, spec, touched) -> str:
+        scanned = [spec.ids[p] for p in touched]
+        pruned = [pid for pid in spec.ids if pid not in scanned]
+        return (f"scanned={','.join(scanned) or '-'}; "
+                f"pruned={','.join(pruned) or '-'}")
+
+    def _inner_flavor(self, table, num_queries: int) -> tuple[str, str]:
+        flavor = partition_mod.part_flavor(
+            table, num_queries, routed_threshold=self.routed_threshold)
+        detail = {
+            "local": "local fused probe",
+            "bcast": f"bcast across {table.shards_per_partition} shards",
+            "routed": f"routed exchange over "
+                      f"{table.shards_per_partition} shards",
+        }[flavor]
+        return flavor, detail
+
+    def partitioned_lookup_plan(self, table, num_queries: int,
+                                keys=None) -> Physical:
+        """Rule P1: route the key batch on the partition spec and name the
+        scanned vs pruned partitions; tracer (or absent) keys cannot be
+        routed host-side and scan every partition in-trace."""
+        partition_mod._check_keyed(table, "lookup")
+        spec = table.spec
+        _, inner = self._inner_flavor(table, num_queries)
+        if keys is not None and not isinstance(keys, jax.core.Tracer):
+            dest = spec.route_host(np.asarray(keys))
+            touched = sorted(int(p) for p in np.unique(dest[dest >= 0]))
+            why = (f"P1: point lookup on partition key {spec.column!r} -> "
+                   f"pruned to {len(touched)}/{spec.num_partitions} "
+                   f"partitions [{self._prune_sets(spec, touched)}; "
+                   f"per-partition {inner}]")
+            return Physical("PartitionedLookup", why, table, meta=touched)
+        why = (f"P1: point lookup on partition key {spec.column!r}, keys "
+               f"traced -> all {spec.num_partitions} partitions scanned "
+               f"in-trace [per-partition {inner}]")
+        return Physical("PartitionedLookup", why, table)
+
+    def partitioned_join_plan(self, table, probe_rows: int,
+                              keys=None) -> Physical:
+        """Rule P3: per-partition local joins — the probe batch routes on
+        the partition key, so there is NO cross-partition exchange."""
+        partition_mod._check_keyed(table, "join")
+        spec = table.spec
+        _, inner = self._inner_flavor(table, probe_rows)
+        if keys is not None and not isinstance(keys, jax.core.Tracer):
+            dest = spec.route_host(np.asarray(keys))
+            touched = sorted(int(p) for p in np.unique(dest[dest >= 0]))
+            why = (f"P3: join on partition key {spec.column!r} -> "
+                   f"per-partition local joins, no cross-partition "
+                   f"exchange [{self._prune_sets(spec, touched)}; "
+                   f"per-partition {inner}]")
+            return Physical("PartitionedJoin", why, table, meta=touched)
+        why = (f"P3: join on partition key {spec.column!r}, probe keys "
+               f"traced -> per-partition local joins over all "
+               f"{spec.num_partitions} partitions, no cross-partition "
+               f"exchange [per-partition {inner}]")
+        return Physical("PartitionedJoin", why, table)
+
+    def partitioned_filter_plan(self, table, pred) -> Physical | None:
+        """Rule P2: a range/list predicate on the partition column prunes
+        the partition set before the scan (None = P2 does not apply)."""
+        spec = table.spec
+        if isinstance(pred, Eq) and isinstance(pred.right, Lit) \
+                and pred.left.name == spec.column:
+            kept, op = spec.prune_eq(pred.right.value), "eq"
+        elif isinstance(pred, Lt) and pred.left.name == spec.column:
+            kept, op = spec.prune_lt(pred.right.value), "range"
+        else:
+            return None
+        why = (f"P2: {op} predicate on partition column {spec.column!r} "
+               f"-> scan pruned to {len(kept)}/{spec.num_partitions} "
+               f"partitions [{self._prune_sets(spec, kept)}]")
+        return Physical("PartitionedFilter", why, None, meta=tuple(kept))
+
+    def physical_lookup(self, table, num_queries: int,
+                        keys=None) -> Physical:
+        """Physical operator for a point-lookup over ``table`` (any
         backend) at the given query-batch size."""
+        if _is_parted(table):
+            return self.partitioned_lookup_plan(table, num_queries, keys)
         if not _is_dist(table):
             return Physical("IndexedLookup",
                             "L1: single partition -> local fused probe "
@@ -258,9 +368,11 @@ class Planner:
                 "bcast": "BroadcastLookup"}[op]
         return Physical(kind, why, table)
 
-    def physical_join(self, table, probe_rows: int) -> Physical:
+    def physical_join(self, table, probe_rows: int, keys=None) -> Physical:
         """Physical operator for an indexed equi-join with ``table`` as the
         build side and a ``probe_rows``-row probe side."""
+        if _is_parted(table):
+            return self.partitioned_join_plan(table, probe_rows, keys)
         if not _is_dist(table):
             return Physical("IndexedJoin",
                             "J1: single partition -> local indexed join "
@@ -280,35 +392,54 @@ class Planner:
             return Physical(kind, "leaf", node)
         if isinstance(node, Filter):
             child = node.child
-            if (isinstance(child, Relation) and child.indexed
-                    and isinstance(node.pred, Eq)
-                    and node.pred.left.name == child.key
-                    and isinstance(node.pred, Eq)
-                    and isinstance(node.pred.right, Lit)):
+            parted = isinstance(child, Relation) and _is_parted(child.table)
+            key_eq = (isinstance(child, Relation) and child.indexed
+                      and isinstance(node.pred, Eq)
+                      and node.pred.left.name == child.key
+                      and isinstance(node.pred.right, Lit))
+            if key_eq and (not parted or _parted_keyed(child.table)):
                 reason = f"R1: eq-filter on indexed key '{child.key}'"
-                flavor = self.physical_lookup(child.table, 1)
+                keys = (np.asarray([node.pred.right.value], np.int64)
+                        if parted else None)
+                flavor = self.physical_lookup(child.table, 1, keys=keys)
                 if flavor.kind != "IndexedLookup":
                     reason += f"; {flavor.reason}"
                 return Physical(flavor.kind, reason, node,
-                                (self.plan(child),))
+                                (self.plan(child),), meta=flavor.meta)
+            if parted:
+                p2 = self.partitioned_filter_plan(child.table, node.pred)
+                if p2 is not None:
+                    return dataclasses.replace(
+                        p2, node=node, children=(self.plan(child),))
             return Physical("ScanFilter", "R5: fallback (non-key or "
                             "non-eq predicate)", node,
                             (self.plan(node.child),))
         if isinstance(node, Join):
             l, r = node.left, node.right
-            l_idx = isinstance(l, Relation) and l.indexed and l.key == node.on
-            r_idx = isinstance(r, Relation) and r.indexed and r.key == node.on
+
+            def _joinable(rel):
+                return (isinstance(rel, Relation) and rel.indexed
+                        and rel.key == node.on
+                        and (not _is_parted(rel.table)
+                             or _parted_keyed(rel.table)))
+
+            l_idx, r_idx = _joinable(l), _joinable(r)
             if l_idx or r_idx:
                 build, probe = (l, r) if l_idx else (r, l)
                 rule = "R2: left" if l_idx else "R3: right"
                 reason = (f"{rule} side indexed on '{node.on}' -> "
                           f"build side")
+                probe_keys = (probe.cols.get(node.on)
+                              if isinstance(probe, Relation)
+                              and probe.cols is not None else None)
                 flavor = self.physical_join(build.table,
-                                            _estimate_rows(probe))
+                                            _estimate_rows(probe),
+                                            keys=probe_keys)
                 if flavor.kind != "IndexedJoin":
                     reason += f"; {flavor.reason}"
                 return Physical(flavor.kind, reason, node,
-                                (self.plan(build), self.plan(probe)))
+                                (self.plan(build), self.plan(probe)),
+                                meta=flavor.meta)
             return Physical("HashJoin", "R5: no usable index -> per-query "
                             "hash build", node,
                             (self.plan(l), self.plan(r)))
@@ -328,6 +459,31 @@ class Planner:
         n = p.node
         if p.kind in ("IndexedScan", "Scan"):
             return n  # relations are consumed by parents
+        if p.kind == "PartitionedLookup":
+            rel = n.child
+            key = jnp.asarray([n.pred.right.value], jnp.int64)
+            cols, valid = partition_mod.lookup_partitioned(
+                rel.table, key, max_matches=self.max_matches, rt=self.rt,
+                routed_threshold=self.routed_threshold)
+            return {k: v[0] for k, v in cols.items()}, valid[0]
+        if p.kind == "PartitionedFilter":
+            rel = n.child
+            cols, valid = partition_mod.collect_partitions(
+                rel.table, p.meta, rt=self.rt)
+            pred_v = _eval_pred(n.pred, cols)
+            return cols, valid & pred_v
+        if p.kind == "PartitionedJoin":
+            build_rel = p.children[0].node
+            probe_rel = p.children[1].node
+            probe_cols, probe_valid = _materialize(probe_rel, rt=self.rt)
+            bc, pc, valid = partition_mod.join_partitioned(
+                build_rel.table, probe_cols, n.on,
+                max_matches=self.max_matches, rt=self.rt,
+                routed_threshold=self.routed_threshold)
+            valid = valid & probe_valid[:, None]
+            merged = {**{f"b_{k}": v for k, v in bc.items()},
+                      **{f"p_{k}": v for k, v in pc.items()}}
+            return merged, valid
         if p.kind in ("IndexedLookup", "BroadcastLookup", "RoutedLookup",
                       "HybridLookup"):
             rel = n.child
@@ -413,6 +569,8 @@ def _estimate_rows(node) -> int:
 
 
 def _materialize(rel: Relation, rt=None):
+    if rel.indexed and _is_parted(rel.table):
+        return partition_mod.collect_partitions(rel.table, rt=rt)
     if rel.distributed:
         from repro.dist import dtable as _dd
         cols = {k: jnp.asarray(v)

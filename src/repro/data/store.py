@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Schema, append, create_index, joins
+from repro.core import partition as partition_mod
 
 META_SCHEMA = Schema.of("example_id", example_id="int64", slot="int32",
                         length="int32", weight="float32")
@@ -42,6 +43,11 @@ class ExampleStore:
     buffers: list = dataclasses.field(default_factory=list)  # [rpb, S] each
     table: object = None
     _slots: object = None        # np.int32 [num_examples] valid slot ids
+    # Optional core.partition.PartitionSpec over example_id: the metadata
+    # table becomes a PartitionedTable (one arena per id window, DESIGN.md
+    # §16) so old crawl windows retire in O(1) via ``drop_partition`` and
+    # ``memory_report`` attributes arena slack per window.
+    partition_by: object = None
 
     # -- writes ------------------------------------------------------------
     def append_examples(self, example_ids, tokens, weights=None):
@@ -73,8 +79,15 @@ class ExampleStore:
         cols = {"example_id": np.asarray(example_ids, np.int64),
                 "slot": slots, "length": lengths, "weight": weights}
         if self.table is None:
-            self.table = create_index(cols, META_SCHEMA,
-                                      rows_per_batch=cap)
+            if self.partition_by is not None:
+                self.table = partition_mod.create_partitioned(
+                    cols, META_SCHEMA, self.partition_by,
+                    rows_per_batch=cap)
+            else:
+                self.table = create_index(cols, META_SCHEMA,
+                                          rows_per_batch=cap)
+        elif self.partition_by is not None:
+            self.table = partition_mod.append_partitioned(self.table, cols)
         else:
             self.table = append(self.table, cols)
         return int(self.table.version)
@@ -101,26 +114,64 @@ class ExampleStore:
 
     def lookup(self, example_ids, max_matches: int = 1):
         """Point lookup by id -> (tokens [Q, M, S], weight, valid)."""
-        cols, valid = joins.indexed_lookup(
-            self.table, jnp.asarray(example_ids, jnp.int64),
-            max_matches=max_matches)
+        if self.partition_by is not None:
+            cols, valid = partition_mod.lookup_partitioned(
+                self.table, jnp.asarray(example_ids, jnp.int64),
+                max_matches=max_matches)
+        else:
+            cols, valid = joins.indexed_lookup(
+                self.table, jnp.asarray(example_ids, jnp.int64),
+                max_matches=max_matches)
         toks = self.gather_tokens(jnp.maximum(cols["slot"], 0))
         return toks, cols["weight"], valid
 
     def metadata_join(self, probe_cols: dict, key: str,
                       max_matches: int = 1):
         """Indexed join against the metadata table (curriculum/dedup)."""
+        if self.partition_by is not None:
+            return partition_mod.join_partitioned(
+                self.table, probe_cols, key, max_matches=max_matches)
         return joins.indexed_join(self.table, probe_cols, key,
                                   max_matches=max_matches)
+
+    # -- retention + memory accounting ---------------------------------------
+    def drop_partition(self, partition_id):
+        """Retire one id window O(1) (partitioned stores only): the
+        window's metadata arena is removed structurally — survivors'
+        arenas are untouched, readers keep their jit caches.  Token
+        buffers are kept (slots stay dense); the retired examples are
+        simply unreachable through the index."""
+        if self.partition_by is None:
+            raise ValueError("store is not partitioned: construct with "
+                             "partition_by=PartitionSpec...")
+        self.table = partition_mod.drop_partition(self.table, partition_id)
+        return int(self.table.version)
 
     def index_overhead_bytes(self) -> int:
         """Logical index bytes (occupied entries + live-row pointers) —
         the Fig-11 overhead figure; arena slack is capacity planning, not
         index overhead (DESIGN.md §4), and is reported separately by
-        ``self.table.index_nbytes()``."""
+        ``self.table.index_nbytes()`` / per window by
+        ``memory_report()``."""
         if self.table is None:
             return 0
         return int(self.table.index_nbytes(logical=True))
+
+    def memory_report(self) -> list:
+        """Logical vs reserved bytes per partition (one entry for a
+        monolithic store): cold windows' arena slack is attributed to
+        those windows, not smeared over the hot one
+        (benchmarks/memory_overhead.py reports the same split)."""
+        if self.table is None:
+            return []
+        if self.partition_by is not None:
+            return self.table.per_partition_bytes()
+        return [{"partition": None, "desc": "monolithic",
+                 "rows": int(np.asarray(self.table.num_rows())),
+                 "index_logical": int(self.table.index_nbytes(logical=True)),
+                 "index_reserved": int(self.table.index_nbytes()),
+                 "data_logical": int(self.table.data_nbytes(logical=True)),
+                 "data_reserved": int(self.table.data_nbytes())}]
 
     def data_bytes(self) -> int:
         return sum(int(b.size) * 4 for b in self.buffers)

@@ -41,11 +41,13 @@ from repro.dist.dtable import (DistributedTable, HotReplica,
                                refresh_replica, reseed_tracker)
 from repro.dist import resilience
 from repro.dist.mesh import Runtime, mesh_runtime, vmap_runtime
-from repro.dist.resilience import (Fault, FaultInjector, RecoveryManager,
+from repro.dist.resilience import (Fault, FaultInjector,
+                                   PartitionedSupervisor, RecoveryManager,
                                    RecoveryPolicy, supervise)
 
 __all__ = [
     "DistributedTable", "Fault", "FaultInjector", "HotReplica",
+    "PartitionedSupervisor",
     "RecoveryManager", "RecoveryPolicy", "Runtime", "append_distributed",
     "attach_replica", "checkpoint",
     "choose_join", "choose_lookup", "collect_cols", "compact_distributed",

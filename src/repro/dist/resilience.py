@@ -665,3 +665,187 @@ def supervise(frame, *, lineage: _runtime.Lineage | None = None,
     here): wrap a distributed frame in a ``RecoveryManager``."""
     return RecoveryManager(frame, lineage=lineage, policy=policy,
                            injector=injector, checkpoint_dir=checkpoint_dir)
+
+
+# ---------------------------------------------------------------------------
+# Partitioned supervision: one RecoveryManager per partition
+# ---------------------------------------------------------------------------
+
+class PartitionedSupervisor:
+    """Per-partition supervision for a partitioned distributed frame
+    (DESIGN.md §16): each partition gets its OWN ``RecoveryManager``
+    (own checkpoints under ``checkpoint_dir/part_<id>``, own fault
+    injector via ``supervisor.managers[i].injector``, own jitted read
+    sites), and reads route pruned sub-batches to the owning partition's
+    manager — a shard kill in one partition heals there without ever
+    entering another partition's read path.
+
+    Duck-types the ``RecoveryManager`` surface the serving engine and
+    the facade rely on (``frame`` / ``lookup`` / ``join`` / ``append`` /
+    ``flush`` / ``checkpoint`` / ``retraces`` / ``last_report``); like a
+    manager it has no ``plan_lookup``, which is how ``QueryEngine``
+    recognizes supervised mode."""
+
+    def __init__(self, frame, *, policy: RecoveryPolicy | None = None,
+                 checkpoint_dir: str | None = None,
+                 with_lineage: bool = False):
+        from repro.core import partition as _part
+        pt = frame.data
+        if not isinstance(pt, _part.PartitionedTable) or not pt.dist:
+            raise ValueError(
+                "PartitionedSupervisor wraps a PARTITIONED distributed "
+                "frame (from_columns(partition_by=..., num_shards>1))")
+        self._part = _part
+        self._frame_cls = type(frame)
+        self.rt = frame.rt
+        self.spec = pt.spec
+        self._version = pt.version
+        self.managers = []
+        for i, part in enumerate(pt.parts):
+            sub = self._frame_cls(data=part, rt=frame.rt)
+            lin = None
+            if with_lineage:
+                # one replay recipe per partition: its VALID base rows
+                # (collect_cols drops pad lanes), at the partition's own
+                # arena config so replay is bit-identical
+                lin = _runtime.Lineage(
+                    pt.schema, _dtable.collect_cols(part, rt=frame.rt),
+                    rows_per_batch=pt.rows_per_batch, layout=pt.layout,
+                    slots=pt.slots)
+            cdir = (None if checkpoint_dir is None else
+                    os.path.join(checkpoint_dir, f"part_{pt.spec.ids[i]}"))
+            self.managers.append(RecoveryManager(sub, lineage=lin,
+                                                 policy=policy,
+                                                 checkpoint_dir=cdir))
+        self.last_report: ReadReport | None = None
+
+    # -- frame ownership ------------------------------------------------------
+
+    @property
+    def frame(self):
+        pt = self._part.PartitionedTable(
+            parts=tuple(m.frame.data for m in self.managers),
+            version=self._version, spec=self.spec)
+        return self._frame_cls(data=pt, rt=self.rt)
+
+    @frame.setter
+    def frame(self, fr):
+        pt = fr.data
+        if tuple(pt.spec.ids) != tuple(self.spec.ids):
+            raise ValueError("cannot re-point a PartitionedSupervisor at a "
+                             "different partition layout")
+        for m, part in zip(self.managers, pt.parts):
+            m.frame = dataclasses.replace(m.frame, data=part)
+        self._version = pt.version
+
+    @property
+    def retraces(self) -> int:
+        return sum(m.retraces for m in self.managers)
+
+    # -- reads (pruned routing into per-partition managers) -------------------
+
+    def _route(self, keys_np: np.ndarray):
+        dest = self.spec.route_host(keys_np)
+        return dest, [int(p) for p in np.unique(dest[dest >= 0])]
+
+    def lookup(self, keys, *, max_matches: int = 64, names=None,
+               op: str = "auto"):
+        """Supervised pruned lookup: each touched partition's manager
+        fences/heals/reads its own masked sub-batch; untouched
+        partitions run nothing.  ``last_report`` merges per-partition
+        accounting."""
+        if op != "auto":
+            raise ValueError("partitioned supervision picks per-partition "
+                             "flavors itself; op must be 'auto'")
+        fr = self.frame
+        self._part._check_keyed(fr.data, "lookup")
+        keys_np = np.asarray(keys).astype(np.int64).reshape(-1)
+        q = keys_np.shape[0]
+        sel = (tuple(names) if names is not None else fr.schema.names)
+        import jax.numpy as jnp
+        out_cols = {n: jnp.zeros((q, max_matches),
+                                 fr.schema.column(n).jnp_dtype)
+                    for n in sel}
+        out_valid = jnp.zeros((q, max_matches), bool)
+        answered = np.ones(q, bool)
+        dropped = retries = 0
+        recovered: list = []
+        degraded = False
+        dest, touched = self._route(keys_np)
+        for p in touched:
+            masked = np.where(dest == p, keys_np,
+                              np.int64(np.asarray(EMPTY_KEY)))
+            c, v = self.managers[p].lookup(
+                jax.numpy.asarray(masked), max_matches=max_matches,
+                names=names)
+            out_valid = out_valid | v
+            out_cols = {n: jnp.where(v, c[n], out_cols[n]) for n in sel}
+            rep = self.managers[p].last_report
+            answered &= rep.answered
+            dropped += rep.dropped
+            retries += rep.retries
+            recovered.extend(rep.recovered)
+            degraded |= rep.degraded
+        self.last_report = ReadReport(
+            answered=answered, dropped=dropped, retries=retries,
+            recovered=tuple(recovered), degraded=degraded,
+            operator="PartitionedLookup")
+        return out_cols, out_valid
+
+    def join(self, probe_cols: dict, on: str, *, max_matches: int = 64,
+             names=None, op: str = "auto"):
+        """Supervised pruned join: per-partition local joins through each
+        owning partition's manager; probe broadcast rebuilt from the
+        ORIGINAL probe side so output matches ``joins.indexed_join``."""
+        if op != "auto":
+            raise ValueError("partitioned supervision picks per-partition "
+                             "flavors itself; op must be 'auto'")
+        if on not in probe_cols:
+            raise ValueError(f"probe column {on!r} not in probe_cols "
+                             f"{sorted(probe_cols)}")
+        import jax.numpy as jnp
+        keys_np = np.asarray(probe_cols[on]).astype(np.int64).reshape(-1)
+        bc, valid = self.lookup(keys_np, max_matches=max_matches,
+                                names=names)
+        m = valid.shape[1]
+        probe_b = {k: jnp.broadcast_to(jnp.asarray(v)[:, None],
+                                       (np.shape(v)[0], m))
+                   for k, v in probe_cols.items()}
+        return bc, probe_b, valid
+
+    # -- writes ---------------------------------------------------------------
+
+    def append(self, cols, valid=None, *, donate: bool = False,
+               compact_threshold: int | None = None
+               ) -> "PartitionedSupervisor":
+        """Routed supervised append: each receiving partition's manager
+        heals first, lands its slice, and records it in its own lineage;
+        one global version bump."""
+        if isinstance(cols, (list, tuple)):
+            cols, valid = table_mod.coalesce_deltas(
+                cols, self.managers[0].frame.schema, valid)
+        for p, sub, sub_valid in self._part.split_by_partition(
+                self.spec, cols, valid):
+            self.managers[p].append(sub, sub_valid, donate=donate,
+                                    compact_threshold=compact_threshold)
+        self._version = self._version + 1
+        return self
+
+    def flush(self, **kw) -> "PartitionedSupervisor":
+        """No frame-level ring on partitioned frames: nothing staged,
+        nothing to land."""
+        return self
+
+    def checkpoint(self):
+        """Checkpoint every partition (each manager anchors its own
+        recovery)."""
+        return [m.checkpoint() for m in self.managers]
+
+    def drop_partition(self, pid) -> "PartitionedSupervisor":
+        """O(1) retention under supervision: drop the partition AND its
+        manager (its checkpoints stop being maintained)."""
+        i = self.spec.index_of(pid)
+        self.spec = self.spec.drop(i)
+        del self.managers[i]
+        self._version = self._version + 1
+        return self

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core import hashing
 from repro.core import joins
+from repro.core import partition as partition_mod
 from repro.core import planner as planner_mod
 from repro.core import table as table_mod
 from repro.core.pointers import PTR_DTYPE
@@ -54,6 +55,10 @@ if False:  # annotations only (PEP 563 strings; dist itself loads lazily)
 
 _LOOKUP_OPS = ("auto", "local", "bcast", "routed", "hybrid")
 _JOIN_OPS = ("auto", "local", "bcast", "shuffle", "hybrid")
+
+# re-exported for the facade surface: repro.PartitionSpec is the
+# partition_by= argument type (core/partition.py, DESIGN.md §16)
+PartitionSpec = partition_mod.PartitionSpec
 
 
 def _dtable():
@@ -69,7 +74,9 @@ def _checkpoint():
     return checkpoint
 
 
-def _hash_string_cols(cols: dict, schema: Schema) -> dict:
+def _hash_string_cols(cols: dict, schema: Schema,
+                      dictionary: "hashing.StringDictionary | None" = None
+                      ) -> dict:
     """String-valued columns -> int64 FNV-1a keys, vectorized.
 
     The facade accepts raw string columns anywhere a delta enters
@@ -77,8 +84,13 @@ def _hash_string_cols(cols: dict, schema: Schema) -> dict:
     numpy batch (``hashing.hash_strings_host``, bit-identical to the
     scalar ``hash_string_host`` loop) — the paper's Fig-15 string-ingest
     tax paid vectorized instead of per row.  Device arrays and numeric
-    columns pass through untouched.
+    columns pass through untouched.  An optional
+    ``hashing.StringDictionary`` caches vocabulary -> code across
+    batches so repeated strings skip the byte-matrix hash entirely
+    (codes stay bit-identical either way).
     """
+    encode = (hashing.hash_strings_host if dictionary is None
+              else dictionary.encode)
     out, changed = dict(cols), False
     for name, v in cols.items():
         if isinstance(v, jax.Array):
@@ -86,7 +98,7 @@ def _hash_string_cols(cols: dict, schema: Schema) -> dict:
         a = np.asarray(v)
         if a.dtype.kind in "US" or (a.dtype.kind == "O" and a.size
                                     and isinstance(a.reshape(-1)[0], str)):
-            out[name] = hashing.hash_strings_host(a)
+            out[name] = encode(a)
             changed = True
     return out if changed else cols
 
@@ -155,16 +167,38 @@ class IndexedFrame:
                      slots: int | None = None, valid=None,
                      reserve: int | None = None,
                      track_hot: int | None = None,
-                     hot_mode: str = "topk") -> "IndexedFrame":
+                     hot_mode: str = "topk",
+                     partition_by: partition_mod.PartitionSpec | None = None,
+                     dictionary: "hashing.StringDictionary | None" = None
+                     ) -> "IndexedFrame":
         """Paper Listing 1 ``createIndex``: build the index over a keyed
         columnar dict — one partition (``num_shards=1``) or hash-
         partitioned across shards, same handle either way.  ``track_hot``
         attaches a top-k hot-key tracker (DESIGN.md §15) counting
         subsequent ingest; ``hot_mode="sketch"`` uses the count-min
-        fallback for unbounded key universes."""
-        cols = _hash_string_cols(cols, schema)
+        fallback for unbounded key universes.
+
+        ``partition_by`` (a ``core.partition.PartitionSpec``) builds a
+        PARTITIONED frame instead: per-partition arenas grouped under a
+        range/list partition map (DESIGN.md §16), pruned reads via
+        planner rules P1-P3, and O(1) retention through
+        ``drop_partition`` / ``retain``.  With ``num_shards > 1`` each
+        partition is shard-stacked (partition-major, shard-minor).
+
+        ``dictionary`` (a ``hashing.StringDictionary``) caches the
+        string-column vocabulary -> int64 code table so repeated strings
+        skip the FNV byte walk; pass the same dictionary to later
+        ``append`` / ``enqueue`` calls to amortize across a stream
+        (codes are bit-identical with or without it)."""
+        cols = _hash_string_cols(cols, schema, dictionary)
         kw = {} if slots is None else {"slots": slots}
-        if num_shards == 1:
+        if partition_by is not None:
+            t = partition_mod.create_partitioned(
+                cols, schema, partition_by, num_shards=num_shards, rt=rt,
+                rows_per_batch=rows_per_batch, layout=layout, valid=valid,
+                reserve=reserve, track_hot=track_hot, hot_mode=hot_mode,
+                **kw)
+        elif num_shards == 1:
             t = table_mod.create_index(
                 cols, schema, rows_per_batch=rows_per_batch, layout=layout,
                 valid=valid, reserve=reserve, track_hot=track_hot,
@@ -182,12 +216,28 @@ class IndexedFrame:
     def is_distributed(self) -> bool:
         # duck-typed like the planner (_is_dist): DistributedTable is the
         # only backend with a shard count, and this keeps repro.dist out
-        # of local frames' import graph
+        # of local frames' import graph.  A PartitionedTable has no
+        # ``num_shards`` itself (its partitions may) — check
+        # ``is_partitioned`` first when dispatching.
         return hasattr(self.data, "num_shards")
 
     @property
+    def is_partitioned(self) -> bool:
+        return isinstance(self.data, partition_mod.PartitionedTable)
+
+    @property
     def num_shards(self) -> int:
+        if self.is_partitioned:
+            return self.data.shards_per_partition
         return self.data.num_shards if self.is_distributed else 1
+
+    @property
+    def num_partitions(self) -> int:
+        return self.data.num_partitions if self.is_partitioned else 1
+
+    @property
+    def partition_ids(self) -> tuple:
+        return self.data.partition_ids if self.is_partitioned else ()
 
     @property
     def schema(self) -> Schema:
@@ -261,7 +311,12 @@ class IndexedFrame:
         (rules L1-L4) — ``.explain()`` on the result names the rule."""
         if op == "auto":
             p = self._planner(planner, max_matches)
-            phys = p.physical_lookup(self.data, int(jnp.shape(keys)[0]))
+            phys = p.physical_lookup(self.data, int(jnp.shape(keys)[0]),
+                                     keys=keys)
+        elif self.is_partitioned:
+            raise ValueError(
+                f"a partitioned frame picks the per-partition flavor "
+                f"itself (rule P1); op must be 'auto', got {op!r}")
         else:
             phys = self._forced_plan(op, _LOOKUP_OPS,
                                      {"local": "IndexedLookup",
@@ -283,6 +338,11 @@ class IndexedFrame:
         keys = joins.as_int64_keys(keys)
         kind = self.plan_lookup(keys, max_matches=max_matches, op=op,
                                 planner=planner).kind
+        if kind == "PartitionedLookup":
+            return partition_mod.lookup_partitioned(
+                self.data, keys, max_matches=max_matches, names=names,
+                rt=self.rt, routed_threshold=self._planner(
+                    planner, max_matches).routed_threshold)
         if kind == "IndexedLookup":
             return joins.indexed_lookup(self.data, keys,
                                         max_matches=max_matches, names=names)
@@ -308,7 +368,12 @@ class IndexedFrame:
         if op == "auto":
             p = self._planner(planner, max_matches)
             phys = p.physical_join(self.data,
-                                   int(jnp.shape(probe_cols[on])[0]))
+                                   int(jnp.shape(probe_cols[on])[0]),
+                                   keys=probe_cols[on])
+        elif self.is_partitioned:
+            raise ValueError(
+                f"a partitioned frame picks the per-partition flavor "
+                f"itself (rule P3); op must be 'auto', got {op!r}")
         else:
             phys = self._forced_plan(op, _JOIN_OPS,
                                      {"local": "IndexedJoin",
@@ -332,6 +397,11 @@ class IndexedFrame:
         keys = joins.as_int64_keys(probe_cols[on])
         kind = self.plan_join(probe_cols, on, max_matches=max_matches,
                               op=op, planner=planner).kind
+        if kind == "PartitionedJoin":
+            return partition_mod.join_partitioned(
+                self.data, probe_cols, on, max_matches=max_matches,
+                names=names, rt=self.rt, routed_threshold=self._planner(
+                    planner, max_matches).routed_threshold)
         if kind == "IndexedJoin":
             return joins.indexed_join(self.data, probe_cols, on,
                                       max_matches=max_matches, names=names)
@@ -351,7 +421,9 @@ class IndexedFrame:
 
     def append(self, cols, valid=None, *, donate: bool = False,
                mode: str = "arena", queued: bool = False,
-               compact_threshold: int | None = None) -> "IndexedFrame":
+               compact_threshold: int | None = None,
+               dictionary: "hashing.StringDictionary | None" = None
+               ) -> "IndexedFrame":
         """Paper Listing 1 ``appendRows``: functional append -> a new
         frame; the parent stays queryable (divergent MVCC children,
         Listing 2 — unless ``donate=True`` trades the parent for in-place
@@ -371,32 +443,51 @@ class IndexedFrame:
         the ring fills; an oversize delta flushes then lands directly
         (the documented lane-size bypass).  String-valued columns are
         hashed to int64 keys in one vectorized batch either way.
+
+        Partitioned frames route the delta host-side on the partition
+        column and land it in the receiving partitions only (one global
+        version bump); they have no frame-level ring, so ``queued=True``
+        degrades to the direct append.
         """
+        queued = queued and not self.is_partitioned
         if queued:
             if isinstance(cols, (list, tuple)):
                 fr = self
                 for i, d in enumerate(cols):
                     fr = fr.append(d, None if valid is None else valid[i],
                                    queued=True, donate=donate,
-                                   compact_threshold=compact_threshold)
+                                   compact_threshold=compact_threshold,
+                                   dictionary=dictionary)
                 return fr
             try:
-                return self.enqueue(cols, valid, donate=donate)
+                return self.enqueue(cols, valid, donate=donate,
+                                    dictionary=dictionary)
             except table_mod.QueueOverflow:
                 fr = self.flush(compact_threshold=compact_threshold)
                 try:
-                    return fr.enqueue(cols, valid, donate=donate)
+                    return fr.enqueue(cols, valid, donate=donate,
+                                      dictionary=dictionary)
                 except table_mod.QueueOverflow:
                     # oversize for a lane even when empty -> land directly
                     return fr.append(cols, valid, donate=donate,
-                                     compact_threshold=compact_threshold)
+                                     compact_threshold=compact_threshold,
+                                     dictionary=dictionary)
         if isinstance(cols, (list, tuple)):
             cols, valid = table_mod.coalesce_deltas(
-                [_hash_string_cols(d, self.schema) for d in cols],
+                [_hash_string_cols(d, self.schema, dictionary)
+                 for d in cols],
                 self.schema, valid)
         else:
-            cols = _hash_string_cols(cols, self.schema)
-        if self.is_distributed:
+            cols = _hash_string_cols(cols, self.schema, dictionary)
+        if self.is_partitioned:
+            if mode != "arena":
+                raise ValueError(
+                    f"partitioned append supports only mode='arena' "
+                    f"(got {mode!r})")
+            new = partition_mod.append_partitioned(
+                self.data, cols, valid, rt=self.rt, donate=donate,
+                compact_threshold=compact_threshold)
+        elif self.is_distributed:
             if mode != "arena":
                 raise ValueError(
                     f"distributed append supports only mode='arena' "
@@ -433,6 +524,11 @@ class IndexedFrame:
         shape: an already-attached same-shape ring is kept).  This is the
         frame's ONE treedef change — do it before entering a jitted read
         loop and streaming stays retrace-free."""
+        if self.is_partitioned:
+            raise ValueError(
+                "partitioned frames have no frame-level append ring (each "
+                "partition keeps its own arena); use append — it routes "
+                "and lands the delta per partition")
         lr = self.data.rows_per_batch if lane_rows is None else int(lane_rows)
         q = self.queue
         if q is not None and (q.lanes, q.lane_rows) == (lanes, lr):
@@ -442,8 +538,9 @@ class IndexedFrame:
             num_shards=self.num_shards if self.is_distributed else None)
         return dataclasses.replace(self, queue=q)
 
-    def enqueue(self, cols, valid=None, *,
-                donate: bool = True) -> "IndexedFrame":
+    def enqueue(self, cols, valid=None, *, donate: bool = True,
+                dictionary: "hashing.StringDictionary | None" = None
+                ) -> "IndexedFrame":
         """Stage one delta in the ring — NO host sync, NO table change;
         rows become visible (one version bump for the whole ring) at
         ``flush``.  Auto-attaches a default ring on first use.  The ring
@@ -452,7 +549,7 @@ class IndexedFrame:
         either way).  Raises ``core.table.QueueOverflow`` when full —
         ``append(queued=True)`` auto-flushes instead."""
         fr = self.with_queue() if self.queue is None else self
-        cols = _hash_string_cols(cols, self.schema)
+        cols = _hash_string_cols(cols, self.schema, dictionary)
         if fr.is_distributed:
             q = _dtable().enqueue_distributed(fr.data, fr.queue, cols, valid,
                                               rt=fr.rt, donate=donate)
@@ -486,13 +583,51 @@ class IndexedFrame:
 
     def compact(self, *, reserve: int | None = None) -> "IndexedFrame":
         """Merge all segments into one fresh arena (bounds MVCC probe
-        fan-out; DESIGN.md §4) — lookups bit-identical before and after."""
+        fan-out; DESIGN.md §4) — lookups bit-identical before and after.
+        Partitioned frames compact per partition (one global version
+        bump)."""
+        if self.is_partitioned:
+            return dataclasses.replace(self, data=partition_mod.
+                                       compact_partitioned(
+                                           self.data, rt=self.rt,
+                                           reserve=reserve))
         if self.is_distributed:
             new = self._refreshed(_dtable().compact_distributed(
                 self.data, rt=self.rt, reserve=reserve))
         else:
             new = table_mod.compact(self.data, reserve=reserve)
         return dataclasses.replace(self, data=new)
+
+    # -- partitions: pruned reads, O(1) retention (DESIGN.md §16) --------------
+
+    def _need_partitioned(self, what: str):
+        if not self.is_partitioned:
+            raise ValueError(f"{what} needs a partitioned frame; build "
+                             f"with from_columns(partition_by=...)")
+
+    def drop_partition(self, pid) -> "IndexedFrame":
+        """O(1) retention: structurally remove one partition (by id or
+        index) — one version bump, no compact, no data movement; the
+        surviving partitions' read sites never recompile
+        (gate_partition)."""
+        self._need_partitioned("drop_partition")
+        return dataclasses.replace(
+            self, data=partition_mod.drop_partition(self.data, pid))
+
+    def retain(self, *, min_value=None, keep=None) -> "IndexedFrame":
+        """Rolling retention sweep: ``min_value`` drops every range
+        partition wholly below it (the hot-recent-window expiry);
+        ``keep`` names the surviving partition ids.  One version bump."""
+        self._need_partitioned("retain")
+        return dataclasses.replace(
+            self, data=partition_mod.retain(self.data, min_value=min_value,
+                                            keep=keep))
+
+    def per_partition_bytes(self) -> list:
+        """Logical vs reserved bytes per partition (memory accounting —
+        arena slack in cold partitions stays attributed to them)."""
+        self._need_partitioned("per_partition_bytes")
+        return self.data.per_partition_bytes()
 
     # -- skew resilience: hot-key tracking + replication (DESIGN.md §15) -------
 
@@ -502,6 +637,11 @@ class IndexedFrame:
         the count-min fallback) counting subsequent ingest — ONE treedef
         change, like attaching a queue; do it at (or right after)
         construction so lineage replay reproduces the hot set."""
+        if self.is_partitioned:
+            raise ValueError("hot-key tracking is per-table; attach "
+                             "track_hot at construction "
+                             "(from_columns(track_hot=..., "
+                             "partition_by=...)) to track every partition")
         k = table_mod.DEFAULT_HOT_TOP_K if top_k is None else int(top_k)
         if self.is_distributed:
             hot = table_mod.empty_tracker(k, mode=mode,
@@ -558,8 +698,27 @@ class IndexedFrame:
         suffix + splice), and routed drops auto-retry with doubled
         capacity — failure handling as part of the operator contract
         instead of the caller's job (DESIGN.md §12).  The manager owns
-        the live frame from here on (``manager.frame``)."""
+        the live frame from here on (``manager.frame``).
+
+        A PARTITIONED distributed frame heals per partition: one
+        ``RecoveryManager`` per partition behind a
+        ``PartitionedSupervisor`` whose reads route pruned sub-batches
+        to the owning partition's manager — a fault in one partition
+        never touches another partition's read path.  Inject faults per
+        partition via ``supervisor.managers[i].injector``; pass
+        ``lineage=True`` to auto-build one replay recipe per partition
+        (a single frame-level ``Lineage`` cannot be split)."""
         from repro.dist import resilience
+        if self.is_partitioned:
+            if injector is not None or (lineage is not None
+                                        and lineage is not True):
+                raise ValueError(
+                    "partitioned supervision is per partition: pass "
+                    "lineage=True for auto per-partition lineages and "
+                    "set supervisor.managers[i].injector for faults")
+            return resilience.PartitionedSupervisor(
+                self, policy=policy, checkpoint_dir=checkpoint_dir,
+                with_lineage=lineage is True)
         return resilience.RecoveryManager(
             self, lineage=lineage, policy=policy, injector=injector,
             checkpoint_dir=checkpoint_dir)
@@ -601,8 +760,12 @@ class IndexedFrame:
     # -- persistence / elasticity ---------------------------------------------
 
     def save(self, path: str):
-        """Checkpoint the frame's table (dist.checkpoint leaf format)."""
-        if self.is_distributed:
+        """Checkpoint the frame's table (dist.checkpoint leaf format;
+        partitioned frames save one CRC-verified subdir per partition
+        plus the spec)."""
+        if self.is_partitioned:
+            partition_mod.save_partitioned(path, self.data)
+        elif self.is_distributed:
             _checkpoint().save_dtable(path, self.data)
         else:
             _checkpoint().save_table(path, self.data)
@@ -612,7 +775,9 @@ class IndexedFrame:
         """Restore a checkpoint into ``like``'s structure (``like``
         supplies the treedef AND the runtime, exactly as
         ``dist.checkpoint.restore_dtable``)."""
-        if like.is_distributed:
+        if like.is_partitioned:
+            data = partition_mod.restore_partitioned(path, like.data)
+        elif like.is_distributed:
             data = _checkpoint().restore_dtable(path, like.data)
         else:
             data = _checkpoint().restore_table(path, like.data)
@@ -628,6 +793,16 @@ class IndexedFrame:
         resharded frame comes back queue-less — ``with_queue()`` again
         on the new topology."""
         self = self.flush()
+        if self.is_partitioned:
+            # per-partition reshard: each partition re-routes its own rows
+            # into the new topology (partition-major, shard-minor); the
+            # global MVCC version is preserved
+            parts = tuple(
+                IndexedFrame(data=p, rt=self.rt)
+                .reshard(num_shards, rt_out=rt_out).data
+                for p in self.data.parts)
+            pt = dataclasses.replace(self.data, parts=parts)
+            return IndexedFrame(data=pt, rt=rt_out)
         dd = _dtable() if self.is_distributed else None
         if self.is_distributed:
             old = self.data

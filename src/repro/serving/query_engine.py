@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import joins
+from repro.core import partition as partition_mod
 from repro.core import table as table_mod
 from repro.core.hashindex import EMPTY_KEY
 
@@ -223,9 +224,16 @@ class QueryEngine:
         if not hasattr(frame, "plan_lookup"):
             self._mgr = frame
             frame = frame.frame
+        # partitioned frames have no frame-level ring (appends route per
+        # partition) and no engine-owned jit sites (the partition layer's
+        # per-partition sites carry the compile cache + pruning); writes
+        # go through the direct-append path, one version bump each
+        self._partitioned = bool(getattr(frame, "is_partitioned", False))
+        self._part0 = (partition_mod.site_traces(),
+                       partition_mod.expected_site_traces())
         # attach the ring NOW — the frame's one treedef change happens
         # before any read site compiles, so streaming stays retrace-free
-        if frame.queue is None:
+        if frame.queue is None and not self._partitioned:
             frame = frame.with_queue(lanes=queue_lanes,
                                      lane_rows=queue_lane_rows)
         if self._mgr is not None:
@@ -396,11 +404,17 @@ class QueryEngine:
         shape reuses the cache entry."""
         if self._mgr is not None:
             return self._mgr.retraces
+        if self._partitioned:
+            return partition_mod.site_traces() - self._part0[0]
         return sum(ctr["n"] for _, ctr in self._sites.values())
 
     @property
     def expected_traces(self) -> int:
-        """Distinct (read site, bucket) pairs this engine has driven."""
+        """Distinct (read site, bucket) pairs this engine has driven.
+        Partitioned frames count the partition layer's per-partition
+        sites instead (its fingerprints subsume the bucket ladder)."""
+        if self._mgr is None and self._partitioned:
+            return partition_mod.expected_site_traces() - self._part0[1]
         return len(self._bucket_use)
 
     @property
@@ -458,6 +472,13 @@ class QueryEngine:
             cols, valid = self._mgr.lookup(
                 jnp.asarray(padded), max_matches=mm, names=self.names,
                 op=self.op)
+        elif self._partitioned:
+            # eager call: routing needs HOST keys (pruning), and the
+            # partition layer's own jitted per-partition sites are the
+            # compile cache — an engine-level jit would turn keys into
+            # tracers and forfeit both
+            cols, valid = self._frame.lookup(
+                padded, max_matches=mm, names=self.names, op=self.op)
         else:
             fn, _ = self._site(skey)
             cols, valid = fn(self._frame, jnp.asarray(padded))
@@ -480,6 +501,9 @@ class QueryEngine:
             bcols, pcols, valid = self._mgr.join(
                 {k: jnp.asarray(v) for k, v in padded.items()}, on,
                 max_matches=mm, names=self.names, op=self.op)
+        elif self._partitioned:
+            bcols, pcols, valid = self._frame.join(
+                padded, on, max_matches=mm, names=self.names, op=self.op)
         else:
             fn, _ = self._site(skey)
             bcols, pcols, valid = fn(
@@ -514,6 +538,13 @@ class QueryEngine:
         self.stats.write_latencies_s.append(w.latency_s)
 
     def _stage_write(self, w: WriteRequest):
+        if self._partitioned:
+            # no frame-level ring on partitioned frames (supervised or
+            # not): every write is a routed direct append, its own
+            # version bump — the twin replay stays bit-identical because
+            # write_log records each as its own group
+            self._append_direct(w)
+            return
         try:
             self._enqueue(w.cols, w.valid)
         except table_mod.QueueOverflow:

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import Schema, create_index
+from repro.core.partition import PartitionSpec
 from repro.data import (BatchPipeline, Cursor, ExampleStore,
                         synthetic_examples)
 
@@ -18,6 +19,38 @@ def test_store_append_and_lookup(rng):
     got, w, valid = store.lookup(ids[:5])
     assert np.asarray(valid[:, 0]).all()
     np.testing.assert_array_equal(np.asarray(got[:, 0]), toks[:5])
+
+
+def test_store_partitioned_windows_and_retention(rng):
+    spec = PartitionSpec.range_("example_id", [0, 100, 200],
+                                ids=["w0", "w1"])
+    store = ExampleStore(seq_len=8, rows_per_batch=16, partition_by=spec)
+    plain = ExampleStore(seq_len=8, rows_per_batch=16)
+    ids0, toks0 = synthetic_examples(rng, 12, 8, 50)
+    ids1, toks1 = synthetic_examples(rng, 9, 8, 50, id_base=100)
+    for s in (store, plain):
+        s.append_examples(ids0, toks0)
+        s.append_examples(ids1, toks1)
+    probe = np.concatenate([ids0[:3], ids1[:3]])
+    got_p, w_p, v_p = store.lookup(probe)
+    got_m, w_m, v_m = plain.lookup(probe)
+    np.testing.assert_array_equal(np.asarray(v_p), np.asarray(v_m))
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(got_m))
+    np.testing.assert_array_equal(np.asarray(w_p), np.asarray(w_m))
+
+    rep = store.memory_report()
+    assert [r["partition"] for r in rep] == ["w0", "w1"]
+    assert rep[0]["rows"] == 12 and rep[1]["rows"] == 9
+    assert rep[0]["data_logical"] <= rep[0]["data_reserved"]
+    assert len(plain.memory_report()) == 1
+
+    store.drop_partition("w0")          # O(1) window retirement
+    _, _, v_after = store.lookup(probe)
+    v_after = np.asarray(v_after)
+    assert not v_after[:3].any() and v_after[3:].all()
+    assert [r["partition"] for r in store.memory_report()] == ["w1"]
+    with pytest.raises(ValueError, match="not partitioned"):
+        plain.drop_partition("w0")
 
 
 def test_streaming_append_fresh_data_visible(rng):

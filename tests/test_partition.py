@@ -1,0 +1,430 @@
+"""Partitioned indexes (ISSUE 10 / DESIGN.md §16).
+
+The contract under test, in order of importance:
+
+* **Pruned reads are exact**: lookups, joins, and partition-column
+  filters through a partitioned frame are bit-identical (masked by
+  validity — invalid lanes are zeroed on the partitioned side, row-0
+  garbage on the monolithic side) to the same reads through an
+  UNPARTITIONED frame built from the same rows.  Property-tested over
+  random key sets and delta sequences, local and distributed, and on a
+  forced-8 shard_map mesh when the process has the devices.
+* **Retention is observational**: ``drop_partition``/``retain`` answer
+  exactly like a frame REBUILT from the surviving rows (drop ≡
+  filter-out), with one version bump and zero retraces of surviving
+  read sites (the trace accounting the CI gate also checks).
+* **MVCC visibility**: a lookup planned against version v never sees
+  rows appended after v; per-key match order stays newest-first across
+  partition boundaries because the partition column IS the key.
+* **Planner rules**: P1 prunes a point lookup to exactly one partition,
+  P2 prunes a partition-column range filter, P3 keeps joins exchange-
+  free — each with the pruned/scanned sets named in ``explain()``.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Schema, partition
+from repro.core import planner as planner_mod
+from repro.core.partition import PartitionSpec
+from repro.frame import IndexedFrame
+
+SCH = Schema.of("k", k="int64", v="float32")
+NDEV = len(jax.devices())
+
+# keys in [0, 36) over three range partitions of width 12
+CUTS = [0, 12, 24, 36]
+IDS = ["jan", "feb", "mar"]
+KEYS = st.lists(st.integers(min_value=0, max_value=35), min_size=1,
+                max_size=50)
+
+SHARDS = ([1, 2] if NDEV < 8 else [1, 2, 8])
+
+
+def _spec():
+    return PartitionSpec.range_("k", CUTS, ids=IDS)
+
+
+def _cols_from(keys, base):
+    keys = np.asarray(keys, np.int64)
+    return {"k": keys,
+            "v": (np.arange(len(keys), dtype=np.float32) * 0.5
+                  + np.float32(base))}
+
+
+def _rt(num_shards):
+    if num_shards == 8 and NDEV >= 8:
+        from repro.dist import mesh
+        return mesh.mesh_runtime(8)
+    return None
+
+
+def _build_pair(base, deltas, num_shards, *, rows_per_batch=16):
+    """The partitioned frame and its monolithic twin, same rows."""
+    rt = _rt(num_shards)
+    kw = dict(rows_per_batch=rows_per_batch)
+    if num_shards > 1:
+        kw.update(num_shards=num_shards, rt=rt)
+    fp = IndexedFrame.from_columns(base, SCH, partition_by=_spec(), **kw)
+    fm = IndexedFrame.from_columns(base, SCH, **kw)
+    for d in deltas:
+        fp = fp.append(dict(d))
+        fm = fm.append(dict(d))
+    return fp, fm
+
+
+def _masked(cols, valid):
+    v = np.asarray(valid)
+    return {n: np.asarray(c) * v for n, c in cols.items()}, v
+
+
+def _assert_reads_match(fp, fm, q, *, max_matches=64):
+    cp, vp = fp.lookup(q, max_matches=max_matches)
+    cm, vm = fm.lookup(q, max_matches=max_matches)
+    mp, vp_ = _masked(cp, vp)
+    mm_, vm_ = _masked(cm, vm)
+    np.testing.assert_array_equal(vp_, vm_)
+    for n in mp:   # bit-identical, ORDER included (newest-first MVCC)
+        np.testing.assert_array_equal(mp[n], mm_[n])
+
+
+# --- spec validation -------------------------------------------------------
+
+
+def test_spec_validates():
+    with pytest.raises(ValueError):
+        PartitionSpec.range_("k", [0, 10, 5])          # not ascending
+    with pytest.raises(ValueError):
+        PartitionSpec.range_("k", [0, 10], ids=["a", "b"])  # id count
+    with pytest.raises(ValueError):
+        PartitionSpec.list_("k", [[1, 2], [2, 3]])     # overlap
+    with pytest.raises(ValueError):
+        PartitionSpec.list_("k", [[1], []])            # empty group
+    s = _spec()
+    assert s.num_partitions == 3
+    assert s.index_of("feb") == 1 and s.index_of(2) == 2
+    np.testing.assert_array_equal(
+        s.route_host(np.array([0, 11, 12, 35, 36, -1], np.int64)),
+        [0, 0, 1, 2, -1, -1])
+
+
+def test_non_key_partition_column_rejects_keyed_reads():
+    spec = PartitionSpec.range_("v_bucket", [0, 2, 4])
+    sch = Schema.of("k", k="int64", v_bucket="int64", v="float32")
+    cols = {"k": np.arange(8, dtype=np.int64),
+            "v_bucket": np.arange(8, dtype=np.int64) % 4,
+            "v": np.zeros(8, np.float32)}
+    fr = IndexedFrame.from_columns(cols, sch, partition_by=spec,
+                                   rows_per_batch=8)
+    with pytest.raises(ValueError, match="partition column"):
+        fr.lookup(np.array([1], np.int64), max_matches=4)
+
+
+def test_unmapped_rows_rejected_strictly():
+    cols = _cols_from([1, 2, 99], 0)    # 99 outside every range
+    with pytest.raises(ValueError, match="outside every partition"):
+        IndexedFrame.from_columns(cols, SCH, partition_by=_spec(),
+                                  rows_per_batch=8)
+
+
+# --- pruned reads ≡ unpartitioned (the exactness property) -----------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(KEYS, st.lists(KEYS, min_size=0, max_size=3),
+       st.lists(st.integers(min_value=-3, max_value=38), min_size=1,
+                max_size=24))
+def test_property_pruned_lookup_equals_unpartitioned(base_keys, deltas,
+                                                     queries):
+    base = _cols_from(base_keys, 0)
+    ds = [_cols_from(d, 1000 * (i + 1)) for i, d in enumerate(deltas)]
+    fp, fm = _build_pair(base, ds, 1)
+    _assert_reads_match(fp, fm, np.asarray(queries, np.int64))
+
+
+@settings(max_examples=8, deadline=None)
+@given(KEYS, st.lists(KEYS, min_size=0, max_size=2),
+       st.lists(st.integers(min_value=-3, max_value=38), min_size=1,
+                max_size=16))
+def test_property_pruned_lookup_equals_unpartitioned_dist(base_keys,
+                                                          deltas, queries):
+    base = _cols_from(base_keys, 0)
+    ds = [_cols_from(d, 1000 * (i + 1)) for i, d in enumerate(deltas)]
+    fp, fm = _build_pair(base, ds, 2)
+    _assert_reads_match(fp, fm, np.asarray(queries, np.int64))
+
+
+@pytest.mark.parametrize("num_shards", SHARDS)
+def test_join_parity(num_shards):
+    rng = np.random.default_rng(3)
+    base = _cols_from(rng.integers(0, 36, 200), 0)
+    fp, fm = _build_pair(base, [_cols_from(rng.integers(0, 36, 40), 500)],
+                         num_shards)
+    pc = {"pk": rng.integers(-2, 38, 33).astype(np.int64),
+          "tag": np.arange(33, dtype=np.int32)}
+    bp, pp, vp = fp.join(pc, "pk", max_matches=64)
+    bm, pm, vm = fm.join(pc, "pk", max_matches=64)
+    v = np.asarray(vp)
+    np.testing.assert_array_equal(v, np.asarray(vm))
+    for n in bp:
+        np.testing.assert_array_equal(np.asarray(bp[n]) * v,
+                                      np.asarray(bm[n]) * v)
+    for n in pp:   # probe broadcast is dense (valid-independent)
+        np.testing.assert_array_equal(np.asarray(pp[n]),
+                                      np.asarray(pm[n]))
+
+
+@pytest.mark.parametrize("num_shards", SHARDS)
+def test_filter_parity_p2(num_shards):
+    rng = np.random.default_rng(4)
+    base = _cols_from(rng.integers(0, 36, 150), 0)
+    rt = _rt(num_shards)
+    kw = {} if num_shards == 1 else dict(num_shards=num_shards, rt=rt)
+    fp = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   rows_per_batch=16, **kw)
+    fm = IndexedFrame.from_columns(base, SCH, rows_per_batch=16, **kw)
+    pred = planner_mod.Lt(planner_mod.Col("k"), planner_mod.Lit(12))
+    gc, gv = fp.filter(pred).execute()
+    wc, wv = fm.filter(pred).execute()
+    for n in wc:
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(gc[n])[np.asarray(gv)]),
+            np.sort(np.asarray(wc[n])[np.asarray(wv)]))
+    plan = fp.filter(pred).explain()
+    assert "P2" in plan and "pruned" in plan
+
+
+# --- retention: drop ≡ filter-out, O(1), zero retraces ---------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(KEYS, st.sampled_from(IDS))
+def test_property_drop_equals_filter_out(base_keys, victim):
+    base = _cols_from(base_keys, 0)
+    fp = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   rows_per_batch=16)
+    i = _spec().index_of(victim)
+    lo, hi = _spec().ranges[i]
+    keep = (base["k"] < lo) | (base["k"] >= hi)
+    spec_kept = PartitionSpec(
+        column="k", kind="range",
+        ranges=tuple(r for j, r in enumerate(_spec().ranges) if j != i),
+        ids=tuple(p for j, p in enumerate(IDS) if j != i))
+    dropped = fp.drop_partition(victim)
+    assert dropped.version == fp.version + 1
+    if keep.any():
+        rebuilt = IndexedFrame.from_columns(
+            {n: c[keep] for n, c in base.items()}, SCH,
+            partition_by=spec_kept, rows_per_batch=16)
+        q = np.arange(-1, 37, dtype=np.int64)
+        _assert_reads_match(dropped, rebuilt, q)
+
+
+def test_retain_sweeps_below_watermark():
+    base = _cols_from(np.arange(36), 0)
+    fp = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   rows_per_batch=16)
+    swept = fp.retain(min_value=24)          # jan + feb wholly below
+    assert swept.partition_ids == ("mar",)
+    assert swept.version == fp.version + 1   # ONE bump for the sweep
+    assert fp.retain(min_value=0).version == fp.version  # no-op, no bump
+    kept = fp.retain(keep=["feb"])
+    assert kept.partition_ids == ("feb",)
+    with pytest.raises(ValueError):
+        fp.retain(min_value=1000)            # cannot drop every partition
+    with pytest.raises(ValueError):
+        fp.retain()                          # exactly one selector
+
+
+@pytest.mark.parametrize("num_shards", SHARDS)
+def test_drop_and_retain_zero_retrace(num_shards):
+    rng = np.random.default_rng(5)
+    base = _cols_from(rng.integers(0, 36, 120), 0)
+    rt = _rt(num_shards)
+    kw = {} if num_shards == 1 else dict(num_shards=num_shards, rt=rt)
+    fr = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   rows_per_batch=16, **kw)
+    q = rng.integers(0, 36, 17).astype(np.int64)
+    t0 = partition.site_traces()
+    fr.lookup(q, max_matches=8)                      # warmup
+    warm = partition.site_traces() - t0
+    fr = fr.append(_cols_from(rng.integers(12, 24, 9), 900))  # one part
+    fr.lookup(q, max_matches=8)
+    fr = fr.drop_partition("jan")
+    fr.lookup(q, max_matches=8)
+    fr = fr.retain(min_value=24)
+    fr.lookup(q, max_matches=8)
+    assert partition.site_traces() - t0 == warm, \
+        "append/drop/retain retraced a surviving read site"
+    assert partition.site_traces() == partition.expected_site_traces()
+
+
+# --- MVCC visibility -------------------------------------------------------
+
+
+def test_mvcc_snapshot_isolation_and_newest_first():
+    base = _cols_from([5, 17, 29], 0)
+    fp = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   rows_per_batch=16)
+    v0 = int(np.asarray(fp.version))
+    old_handle = fp
+    fp2 = fp.append({"k": np.array([17], np.int64),
+                     "v": np.array([777.0], np.float32)})
+    assert int(np.asarray(fp2.version)) == v0 + 1
+    # the pre-append handle still answers at its own version
+    c_old, v_old = old_handle.lookup(np.array([17], np.int64),
+                                     max_matches=4)
+    assert np.asarray(v_old)[0].sum() == 1
+    # the post-append frame sees both rows, newest FIRST
+    c_new, v_new = fp2.lookup(np.array([17], np.int64), max_matches=4)
+    assert np.asarray(v_new)[0].sum() == 2
+    np.testing.assert_array_equal(
+        np.asarray(c_new["v"])[0][np.asarray(v_new)[0]],
+        np.float32([777.0, 1.0 * 0.5]))
+
+
+# --- planner rules ---------------------------------------------------------
+
+
+def test_p1_point_lookup_prunes_to_one_partition():
+    base = _cols_from(np.arange(36), 0)
+    fr = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   rows_per_batch=16)
+    plan = fr.plan_lookup(np.array([17], np.int64))
+    assert plan.kind == "PartitionedLookup"
+    assert plan.meta == [1]                  # exactly feb
+    assert "P1" in plan.reason and "1/3" in plan.reason
+    assert "feb" in plan.reason and "pruned" in plan.reason
+
+
+def test_p3_join_plan_names_pruned_set():
+    base = _cols_from(np.arange(36), 0)
+    fr = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   rows_per_batch=16)
+    pc = {"pk": np.array([1, 2, 3], np.int64)}
+    plan = fr.plan_join(pc, "pk", max_matches=4)
+    assert plan.kind == "PartitionedJoin" and plan.meta == [0]
+    assert "P3" in plan.reason and "no cross-partition exchange" in plan.reason
+
+
+def test_forced_op_rejected():
+    base = _cols_from(np.arange(36), 0)
+    fr = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   rows_per_batch=16)
+    with pytest.raises(ValueError, match="auto"):
+        fr.lookup(np.array([1], np.int64), max_matches=4, op="routed")
+    with pytest.raises(ValueError):
+        fr.with_queue()
+    with pytest.raises(ValueError):
+        fr.with_hot_tracker(8)
+
+
+# --- in-trace fallback (tracer keys) ---------------------------------------
+
+
+def test_lookup_inside_jit_scans_all_partitions_correctly():
+    rng = np.random.default_rng(6)
+    base = _cols_from(rng.integers(0, 36, 100), 0)
+    fp = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   rows_per_batch=16)
+    fm = IndexedFrame.from_columns(base, SCH, rows_per_batch=16)
+    q = rng.integers(0, 36, 9).astype(np.int64)
+
+    @jax.jit
+    def f(fr, qq):
+        return fr.lookup(qq, max_matches=16)
+
+    cp, vp = f(fp, jnp.asarray(q))
+    cm, vm = fm.lookup(q, max_matches=16)
+    v = np.asarray(vp)
+    np.testing.assert_array_equal(v, np.asarray(vm))
+    for n in cp:
+        np.testing.assert_array_equal(np.asarray(cp[n]) * v,
+                                      np.asarray(cm[n]) * v)
+
+
+# --- vmap vs shard_map parity (forced-8 runs in ci.sh) ---------------------
+
+
+@pytest.mark.skipif(NDEV < 8, reason="needs the forced-8 host mesh "
+                                     "(scripts/ci.sh second pass)")
+def test_shard_map_parity_forced_8():
+    from repro.dist import mesh
+    rng = np.random.default_rng(7)
+    base = _cols_from(rng.integers(0, 36, 400), 0)
+    delta = _cols_from(rng.integers(0, 36, 50), 700)
+    q = rng.integers(-2, 38, 41).astype(np.int64)
+    fv = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   num_shards=8, rows_per_batch=16,
+                                   rt=mesh.vmap_runtime()).append(delta)
+    fs = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   num_shards=8, rows_per_batch=16,
+                                   rt=mesh.mesh_runtime(8)).append(delta)
+    cv, vv = fv.lookup(q, max_matches=64)
+    cs, vs = fs.lookup(q, max_matches=64)
+    v = np.asarray(vv)
+    np.testing.assert_array_equal(v, np.asarray(vs))
+    for n in cv:
+        np.testing.assert_array_equal(np.asarray(cv[n]) * v,
+                                      np.asarray(cs[n]) * v)
+
+
+# --- supervision: per-partition heal ---------------------------------------
+
+
+@pytest.mark.parametrize("num_shards", [2])
+def test_supervised_heals_one_partition_without_touching_others(
+        num_shards, tmp_path):
+    from repro.dist.resilience import Fault, FaultInjector
+    rng = np.random.default_rng(8)
+    base = _cols_from(rng.integers(0, 36, 200), 0)
+    fr = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   num_shards=num_shards,
+                                   rows_per_batch=16)
+    sup = fr.supervised(lineage=True, checkpoint_dir=str(tmp_path))
+    q = rng.integers(0, 36, 21).astype(np.int64)
+    c0, v0 = sup.lookup(q, max_matches=32)
+    base_traces = sup.retraces
+    sup.managers[1].injector = FaultInjector(
+        [Fault("shard_loss", step=1, shard=0)])
+    sup.lookup(q, max_matches=32)                  # tick 0
+    c1, v1 = sup.lookup(q, max_matches=32)         # tick 1: kill + heal
+    assert sup.last_report.recovered == (0,)
+    assert sup.last_report.answered.all()
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v0))
+    for n in c1:
+        np.testing.assert_array_equal(np.asarray(c1[n]),
+                                      np.asarray(c0[n]))
+    # the other partitions' managers never healed anything
+    assert sup.managers[0].stats.recoveries == 0
+    assert sup.managers[2].stats.recoveries == 0
+    assert sup.managers[1].stats.recoveries == 1
+    assert sup.retraces == base_traces             # heal re-enters the cache
+    # routed append + retention under supervision
+    sup.append(_cols_from([3, 30], 600))
+    sup.drop_partition("jan")
+    _, v2 = sup.lookup(np.array([3, 30], np.int64), max_matches=32)
+    assert not np.asarray(v2)[0].any() and np.asarray(v2)[1].any()
+
+
+# --- checkpoint round-trip -------------------------------------------------
+
+
+@pytest.mark.parametrize("num_shards", [1, 2])
+def test_save_load_round_trip(num_shards, tmp_path):
+    rng = np.random.default_rng(9)
+    base = _cols_from(rng.integers(0, 36, 90), 0)
+    kw = {} if num_shards == 1 else dict(num_shards=num_shards)
+    fr = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                   rows_per_batch=16, **kw)
+    fr = fr.append(_cols_from([1, 13, 25], 300))
+    fr.save(str(tmp_path / "pt"))
+    like = IndexedFrame.from_columns(base, SCH, partition_by=_spec(),
+                                     rows_per_batch=16, **kw)
+    back = IndexedFrame.load(str(tmp_path / "pt"), like)
+    assert int(np.asarray(back.version)) == int(np.asarray(fr.version))
+    q = np.arange(36, dtype=np.int64)
+    _assert_reads_match(back, fr, q)

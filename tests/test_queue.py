@@ -254,6 +254,52 @@ def test_string_keys_stream_through_queue():
     assert np.asarray(got["v"])[1][m[1]][0] == np.float32(2.5)
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(st.text(min_size=0, max_size=12),
+                         min_size=0, max_size=12),
+                min_size=0, max_size=4))
+def test_string_dictionary_codes_bit_identical(batches):
+    from repro.core.hashing import StringDictionary
+    d = StringDictionary()
+    seen = set()
+    for b in batches:
+        np.testing.assert_array_equal(d.encode(b), hash_strings_host(b))
+        seen |= set(b)
+    assert len(d) == len(seen)
+    assert d.hashed == len(seen)          # each unique hashed exactly once
+    before = d.reused
+    codes = d.encode(sorted(seen))        # warm dict: every row reused
+    assert d.reused == before + len(seen) and d.hashed == len(seen)
+    assert d.decode(codes) == sorted(seen)
+
+
+def test_string_dictionary_through_facade():
+    from repro.core.hashing import StringDictionary
+    d = StringDictionary()
+    names = [f"user-{i % 8}" for i in range(24)]
+    vals = np.arange(24, dtype=np.float32)
+    fr_d = IndexedFrame.from_columns(
+        {"k": np.array(names, dtype=object), "v": vals}, SCH,
+        rows_per_batch=64, reserve=256, dictionary=d)
+    fr_p = IndexedFrame.from_columns(
+        {"k": np.array(names, dtype=object), "v": vals}, SCH,
+        rows_per_batch=64, reserve=256)
+    assert d.hashed == 8      # 24 rows, 8 unique strings byte-walked
+    delta = {"k": ["user-3", "user-99"], "v": np.array([9., 9.],
+                                                      np.float32)}
+    fr_d = fr_d.append(dict(delta), dictionary=d)
+    fr_p = fr_p.append(dict(delta))
+    assert d.hashed == 9      # only the novel string paid the byte walk
+    assert d.reused == 1      # "user-3" answered from the warm table
+    q = hash_strings_host(["user-3", "user-99"])
+    cd, vd = fr_d.lookup(q, max_matches=8)
+    cp, vp = fr_p.lookup(q, max_matches=8)
+    np.testing.assert_array_equal(np.asarray(vd), np.asarray(vp))
+    md = np.asarray(vd)
+    np.testing.assert_array_equal(np.asarray(cd["v"])[md],
+                                  np.asarray(cp["v"])[md])
+
+
 # --- shard_map backend (forced-8 when single-device) ------------------------
 
 _SUBPROCESS_QUEUE = r"""
