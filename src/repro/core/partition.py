@@ -49,6 +49,7 @@ import dataclasses
 import functools
 import json
 import os
+import re
 from functools import partial
 
 import jax
@@ -71,6 +72,9 @@ _SITE_USE: set = set()
 
 _EMPTY_NP = np.int64(np.asarray(EMPTY_KEY))
 
+# Partition ids name checkpoint subdirectories — filesystem-safe only.
+_ID_RE = re.compile(r"[A-Za-z0-9_-]+")
+
 
 def site_traces() -> int:
     """Total per-partition read-site traces so far."""
@@ -79,8 +83,25 @@ def site_traces() -> int:
 
 def expected_site_traces() -> int:
     """Distinct (flavor, structure, shape) combinations driven — compare
-    with ``site_traces()``: equal means zero retraces."""
+    with ``site_traces()``: equal means zero retraces.
+
+    Both counters are PROCESS-GLOBAL: they aggregate every partitioned
+    frame and engine in the process.  Consumers that want a per-window
+    view (e.g. ``QueryEngine.retraces``) subtract a baseline, which is
+    only exact when nothing else drives partitioned lookups meanwhile.
+    """
     return len(_SITE_USE)
+
+
+def reset_trace_accounting():
+    """Drop the trace counters, the site-use fingerprints, AND the jitted
+    site cache (which pins runtime objects via its keys).  For
+    long-running serving processes that churn through many key-batch
+    shapes or runtimes — the next lookup recompiles its site, so never
+    call this inside a zero-retrace gate window."""
+    PARTITION_TRACES["lookup"] = 0
+    _SITE_USE.clear()
+    _lookup_site.cache_clear()
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +141,13 @@ class PartitionSpec:
             raise ValueError("a partition spec needs at least one partition")
         if len(self.ids) != n or len(set(self.ids)) != n:
             raise ValueError("ids must be unique, one per partition")
+        for pid in self.ids:
+            # ids name checkpoint subdirectories (save_partitioned) — keep
+            # them filesystem-safe so user input can't escape the layout
+            if not isinstance(pid, str) or not _ID_RE.fullmatch(pid):
+                raise ValueError(
+                    f"partition id {pid!r} invalid: ids must match "
+                    f"[A-Za-z0-9_-]+ (they name checkpoint subdirs)")
         if self.kind == "range":
             for lo, hi in self.ranges:
                 if not lo < hi:
@@ -205,8 +233,11 @@ class PartitionSpec:
             order = np.argsort(flat)
             flat, part = flat[order], part[order]
             i = np.searchsorted(flat, v)
-            ok = (i < flat.shape[0]) & (flat[np.clip(i, 0, None)] == v)
-            out[ok] = part[i[ok]]
+            # searchsorted returns len(flat) for values above the largest
+            # member — clamp before indexing (a miss either way).
+            j = np.minimum(i, flat.shape[0] - 1)
+            ok = (i < flat.shape[0]) & (flat[j] == v)
+            out[ok] = part[j[ok]]
         out[v == _EMPTY_NP] = -1
         return out
 
@@ -527,12 +558,18 @@ def part_flavor(pt: PartitionedTable, num_queries: int, *,
     return ("routed" if num_queries >= routed_threshold else "bcast")
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=64)
 def _lookup_site(flavor: str, max_matches: int, names, rt):
     """ONE jitted read site per (flavor, max_matches, names, runtime) —
     shared by every partition whose structure matches (jit adds the
     structure/shape dimension to the cache key).  The body bumps
-    PARTITION_TRACES at trace time: the gate's retrace counter."""
+    PARTITION_TRACES at trace time: the gate's retrace counter.
+
+    Bounded: the cache keys pin ``rt`` (and the jit caches behind the
+    functions), so an unbounded cache is a slow leak in serving
+    processes that churn runtimes.  64 is far above any gate/bench
+    working set; an eviction costs one recompile (counted as a retrace),
+    not correctness.  ``reset_trace_accounting()`` clears it outright."""
     if flavor == "local":
         def f(part, keys):
             PARTITION_TRACES["lookup"] += 1

@@ -401,7 +401,14 @@ class QueryEngine:
         """Total traces across the serving read sites.  Equals
         ``expected_traces`` exactly when nothing retraced: each
         (site, bucket) pair compiles once and every later batch of that
-        shape reuses the cache entry."""
+        shape reuses the cache entry.
+
+        Partitioned frames: the partition layer's counters are
+        PROCESS-GLOBAL, so this is a baseline-subtracted window — exact
+        only while no OTHER partitioned frame or engine in the process
+        runs lookups concurrently (their traces would be misattributed
+        to this engine).  Gates and benchmarks drive one engine at a
+        time, which is the supported measurement setup."""
         if self._mgr is not None:
             return self._mgr.retraces
         if self._partitioned:
@@ -412,7 +419,9 @@ class QueryEngine:
     def expected_traces(self) -> int:
         """Distinct (read site, bucket) pairs this engine has driven.
         Partitioned frames count the partition layer's per-partition
-        sites instead (its fingerprints subsume the bucket ladder)."""
+        sites instead (its fingerprints subsume the bucket ladder) —
+        process-global with a construction-time baseline, same caveat
+        as ``retraces``."""
         if self._mgr is None and self._partitioned:
             return partition_mod.expected_site_traces() - self._part0[1]
         return len(self._bucket_use)

@@ -111,6 +111,37 @@ def test_spec_validates():
         [0, 0, 1, 2, -1, -1])
 
 
+def test_list_spec_values_above_max_member_are_misses():
+    # regression: searchsorted returns len(flat) for values above the
+    # largest list member — must be a clean miss, not an IndexError
+    spec = PartitionSpec.list_("k", [[1, 2], [7, 9]])
+    np.testing.assert_array_equal(
+        spec.route_host(np.array([9, 10, 99, -5, 2], np.int64)),
+        [1, -1, -1, -1, 0])
+    assert spec.prune_eq(10) == () and spec.prune_eq(9) == (1,)
+    cols = {"k": np.array([1, 7], np.int64),
+            "v": np.zeros(2, np.float32)}
+    fr = IndexedFrame.from_columns(cols, SCH, partition_by=spec,
+                                   rows_per_batch=8)
+    # lookup above the max member: a miss, not a crash
+    _, v = fr.lookup(np.array([99], np.int64), max_matches=4)
+    assert not np.asarray(v).any()
+    # strict append of an unmapped high value: the intended ValueError
+    with pytest.raises(ValueError, match="outside every partition"):
+        fr.append({"k": np.array([99], np.int64),
+                   "v": np.zeros(1, np.float32)})
+    # planner prune on such a literal: empty pruned set, no crash
+    pred = planner_mod.Eq(planner_mod.Col("k"), planner_mod.Lit(99))
+    assert "pruned" in fr.filter(pred).explain()
+
+
+def test_ids_must_be_filesystem_safe():
+    # ids name checkpoint subdirs — path-hostile ids are rejected
+    for bad in ("a/b", "..", "", "a b", "p\x00"):
+        with pytest.raises(ValueError, match="filesystem|invalid|ids"):
+            PartitionSpec.range_("k", [0, 10, 20], ids=[bad, "ok"])
+
+
 def test_non_key_partition_column_rejects_keyed_reads():
     spec = PartitionSpec.range_("v_bucket", [0, 2, 4])
     sch = Schema.of("k", k="int64", v_bucket="int64", v="float32")
